@@ -1,0 +1,49 @@
+"""Shared benchmark helpers.
+
+CPU-container scaling note: the paper's experiments use SNAP graphs with up
+to 1e8 edges and eps=0.05 on a V100.  This container is a single CPU core,
+so every benchmark keeps the *methodology* (same machinery, same sweeps) at
+reduced n/eps, and records the configuration next to each number.  The
+TPU-target throughput story lives in EXPERIMENTS.md §Roofline instead.
+"""
+from __future__ import annotations
+
+import csv
+import os
+import time
+
+import numpy as np
+
+from repro.graph import csr as csr_mod
+from repro.graph import generators, weights
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "bench")
+
+
+def ba_graph(n: int, r: int, seed: int = 0):
+    src, dst = generators.barabasi_albert(n, r, seed=seed)
+    return weights.wc_weights(csr_mod.from_edges(src, dst, n))
+
+
+def timed(fn, *args, repeat: int = 1, **kw):
+    fn(*args, **kw)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt
+
+
+def write_csv(name: str, header: list[str], rows: list[list]):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.csv")
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    return path
+
+
+def report(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,38 @@
+"""Paper Figs. 4/5: runtime vs. k (speedup roughly k-independent; gIM's
+runtime can *drop* with k when the Alg. 2 LB loop exits an iteration early)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import ba_graph, write_csv, report
+from repro.core.imm import imm
+from repro.core import oracle
+from repro.graph import csr as csr_mod
+
+N, R, EPS = 6000, 6, 0.4
+
+
+def main():
+    g = ba_graph(N, R)
+    g_rev = csr_mod.reverse(g)
+    offs = np.asarray(g_rev.offsets); idx = np.asarray(g_rev.indices)
+    w = np.asarray(g_rev.weights)
+    rows = []
+    for k in (5, 10, 20, 35, 50):
+        t0 = time.perf_counter()
+        _, _, theta = oracle.imm_oracle(offs, idx, w, N, k, EPS, seed=0)
+        t_o = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        _, _, st = imm(g, k, EPS, engine="queue", batch=512, seed=0)
+        t_j = time.perf_counter() - t0
+        rows.append([k, theta, st.theta, round(t_o, 3), round(t_j, 3),
+                     round(t_o / t_j, 2)])
+        report(f"fig45/k={k}", t_j * 1e6, f"speedup={t_o / t_j:.2f}x")
+    write_csv("fig45_k_sweep", ["k", "theta_oracle", "theta_gim",
+                                "t_imm_s", "t_gim_s", "speedup"], rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Paper Fig. 8: hardware-tuning sweep.
+
+Fig. 8a's N_th (threads/block) maps to the EC edge-chunk width; Fig. 8b's
+N_b (grid size, Eq. 5) maps to the lane batch B.  Reports sampling time for
+a fixed θ, normalized to the default (EC=128, B=512).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import ba_graph, write_csv, report
+from repro.core.imm import IMMSolver
+
+N, R, THETA = 10000, 8, 2048
+
+
+def sample_time(g, batch, ec):
+    solver = IMMSolver(g, engine="queue", batch=batch, ec=ec, seed=0)
+    t0 = time.perf_counter()
+    solver.sample_until(THETA)
+    return time.perf_counter() - t0
+
+
+def main():
+    g = ba_graph(N, R)
+    base = sample_time(g, 512, 128)
+    rows = []
+    for ec in (32, 64, 128, 256):
+        t = sample_time(g, 512, ec)
+        rows.append(["ec", ec, round(t, 3), round(t / base, 3)])
+        report(f"fig8a/ec={ec}", t * 1e6, f"norm={t / base:.3f}")
+    for b in (64, 128, 256, 512, 1024):
+        t = sample_time(g, b, 128)
+        rows.append(["batch", b, round(t, 3), round(t / base, 3)])
+        report(f"fig8b/B={b}", t * 1e6, f"norm={t / base:.3f}")
+    write_csv("fig8_tuning", ["param", "value", "t_s", "normalized"], rows)
+
+
+if __name__ == "__main__":
+    main()

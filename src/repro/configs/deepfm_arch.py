@@ -1,0 +1,7 @@
+"""deepfm [arXiv:1703.04247]: 39 sparse fields, dim 10, MLP 400-400-400, FM."""
+from repro.configs.recsys import make_deepfm
+ARCH_ID = "deepfm"
+def full_config():
+    return make_deepfm()
+def reduced_config():
+    return make_deepfm(reduced=True)

@@ -1,0 +1,5 @@
+"""deepseek-v3-671b [arXiv:2412.19437]: MLA + 1 shared/256 routed top-8 + MTP."""
+from repro.configs.lm import deepseek_v3_671b as full_config, reduced_lm
+ARCH_ID = "deepseek-v3-671b"
+def reduced_config():
+    return reduced_lm(full_config())

@@ -1,0 +1,7 @@
+"""egnn [arXiv:2102.09844]: 4L d_hidden=64, E(n)-equivariant updates."""
+from repro.configs.gnn_archs import make_arch
+ARCH_ID = "egnn"
+def full_config(shape):
+    return make_arch(ARCH_ID, shape)
+def reduced_config(shape):
+    return make_arch(ARCH_ID, shape, reduced=True)

@@ -1,0 +1,7 @@
+"""gat-cora [arXiv:1710.10903]: 2L d_hidden=8 8 heads, attn aggregator."""
+from repro.configs.gnn_archs import make_arch
+ARCH_ID = "gat-cora"
+def full_config(shape):
+    return make_arch(ARCH_ID, shape)
+def reduced_config(shape):
+    return make_arch(ARCH_ID, shape, reduced=True)

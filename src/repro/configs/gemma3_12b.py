@@ -1,0 +1,5 @@
+"""gemma3-12b [hf:google/gemma-3]: 48L d3840 16H kv8 dff15360 v262144; 5:1."""
+from repro.configs.lm import gemma3_12b as full_config, reduced_lm
+ARCH_ID = "gemma3-12b"
+def reduced_config():
+    return reduced_lm(full_config())

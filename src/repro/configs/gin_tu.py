@@ -1,0 +1,7 @@
+"""gin-tu [arXiv:1810.00826]: 5L d_hidden=64 sum aggregator, learnable eps."""
+from repro.configs.gnn_archs import make_arch
+ARCH_ID = "gin-tu"
+def full_config(shape):
+    return make_arch(ARCH_ID, shape)
+def reduced_config(shape):
+    return make_arch(ARCH_ID, shape, reduced=True)

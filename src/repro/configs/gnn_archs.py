@@ -1,0 +1,159 @@
+"""The four assigned GNN architectures + their step builders.
+
+Each arch provides full/reduced configs parameterized by the shape's feature
+dim (the shape table carries d_feat/n_classes), and three step kinds:
+
+* full-batch (full_graph_sm / ogb_products): COO edge arrays + node feats;
+* minibatch_lg: the neighbor sampler's union subgraph (seeds ∪ hop1 ∪ hop2,
+  bipartite child→parent edges) — the arch's full conv stack runs on the
+  sampled subgraph and the loss reads the seed rows (GraphSAINT-style);
+* molecule: vmap over a batch of small graphs, graph-level readout.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import gnn
+from repro.optim import AdamWConfig, adamw_update
+
+
+def make_arch(arch_id: str, shape: dict, *, reduced: bool = False):
+    """Returns the arch config for a shape (d_feat/n_classes from shape)."""
+    d_in = shape.get("d_feat", 16)
+    n_cls = shape.get("n_classes", 2)
+    if arch_id == "gat-cora":
+        cfg = gnn.GATConfig(n_layers=2, d_hidden=8, n_heads=8, d_in=d_in,
+                            n_classes=n_cls)
+        return replace(cfg, d_hidden=4, n_heads=2) if reduced else cfg
+    if arch_id == "gin-tu":
+        cfg = gnn.GINConfig(n_layers=5, d_hidden=64, d_in=d_in,
+                            n_classes=n_cls)
+        return replace(cfg, n_layers=2, d_hidden=8) if reduced else cfg
+    if arch_id == "egnn":
+        cfg = gnn.EGNNConfig(n_layers=4, d_hidden=64, d_in=d_in)
+        return replace(cfg, n_layers=2, d_hidden=8) if reduced else cfg
+    if arch_id == "graphcast":
+        cfg = gnn.GraphCastConfig(n_layers=16, d_hidden=512, d_in=d_in,
+                                  d_out=n_cls, mesh_refinement=6)
+        return replace(cfg, n_layers=2, d_hidden=16) if reduced else cfg
+    raise KeyError(arch_id)
+
+
+def init_params(arch_id, key, cfg, n_classes, dtype=jnp.float32):
+    if arch_id == "gat-cora":
+        return gnn.gat_init(key, cfg, dtype)
+    if arch_id == "gin-tu":
+        return gnn.gin_init(key, cfg, dtype)
+    if arch_id == "graphcast":
+        return gnn.graphcast_init(key, cfg, dtype)
+    if arch_id == "egnn":
+        p = gnn.egnn_init(key, cfg, dtype)
+        khead = jax.random.fold_in(key, 1)
+        return {"egnn": p,
+                "head": (jax.random.normal(khead, (cfg.d_hidden, n_classes))
+                         * 0.1).astype(dtype)}
+    raise KeyError(arch_id)
+
+
+def node_logits(arch_id, params, cfg, x, src, dst, mask, coords=None,
+                shard_axes=None, comm_bf16=False):
+    if arch_id == "gat-cora":
+        return gnn.gat_apply(params, cfg, x, src, dst, mask)
+    if arch_id == "gin-tu":
+        return gnn.gin_apply(params, cfg, x, src, dst, mask)
+    if arch_id == "graphcast":
+        return gnn.graphcast_apply(params, cfg, x, src, dst, mask,
+                                   shard_axes=shard_axes,
+                                   comm_bf16=comm_bf16)
+    if arch_id == "egnn":
+        h, _ = gnn.egnn_apply(params["egnn"], cfg, x, coords, src, dst, mask)
+        return h @ params["head"].astype(h.dtype)
+    raise KeyError(arch_id)
+
+
+import functools
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _loss_boundary(x, bwd_dtype):
+    """fwd: upcast to f32 for a stable loss; bwd: cotangent in the compute
+    dtype so the whole backward pass stays bf16 (§Perf/H4d — without this,
+    the f32 cotangent from the loss promotes every backward matmul and the
+    node-state all-reduces to f32)."""
+    return x.astype(jnp.float32)
+
+
+_loss_boundary.defvjp(lambda x, d: (x.astype(jnp.float32), None),
+                      lambda d, res, ct: (ct.astype(d),))
+
+
+def _ce(logits, labels):
+    if logits.dtype != jnp.float32:
+        logits = _loss_boundary(logits, str(logits.dtype))
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    return (logz - gold).mean()
+
+
+def build_node_train_step(arch_id, cfg, opt_cfg: AdamWConfig, *,
+                          n_labeled: int | None = None, shard_axes=None,
+                          comm_bf16: bool = False):
+    """(state, x, src, dst, mask, labels, coords) -> (state, loss).
+
+    ``n_labeled``: loss over the first n rows only (minibatch seeds);
+    None = all nodes (full-batch).  coords is ignored unless egnn.
+    shard_axes/comm_bf16: §Perf/H4 distributed-aggregation knobs.
+    """
+    def loss_fn(params, x, src, dst, mask, labels, coords):
+        dt = jax.tree.leaves(params)[0].dtype
+        logits = node_logits(arch_id, params, cfg, x.astype(dt), src, dst,
+                             mask, coords.astype(dt) if coords is not None
+                             else None,
+                             shard_axes=shard_axes, comm_bf16=comm_bf16)
+        if n_labeled is not None:
+            logits = logits[:n_labeled]
+        return _ce(logits, labels)
+
+    def step(state, x, src, dst, mask, labels, coords):
+        params, opt = state
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, src, dst, mask,
+                                                  labels, coords)
+        params, opt = adamw_update(grads, opt, params, opt_cfg)
+        return (params, opt), loss
+
+    return step
+
+
+def build_molecule_train_step(arch_id, cfg, opt_cfg: AdamWConfig):
+    """vmap over a batch of small graphs; mean-pool graph readout."""
+    def graph_logits(params, x, src, dst, mask, coords):
+        out = node_logits(arch_id, params, cfg, x, src, dst, mask, coords)
+        return out.mean(axis=0)
+
+    def loss_fn(params, xb, srcb, dstb, maskb, labels, coordsb):
+        logits = jax.vmap(graph_logits, in_axes=(None, 0, 0, 0, 0, 0))(
+            params, xb, srcb, dstb, maskb, coordsb)
+        return _ce(logits, labels)
+
+    def step(state, xb, srcb, dstb, maskb, labels, coordsb):
+        params, opt = state
+        loss, grads = jax.value_and_grad(loss_fn)(params, xb, srcb, dstb,
+                                                  maskb, labels, coordsb)
+        params, opt = adamw_update(grads, opt, params, opt_cfg)
+        return (params, opt), loss
+
+    return step
+
+
+def minibatch_union_sizes(shape: dict) -> tuple[int, int]:
+    """(n_union_nodes, n_union_edges) for the sampled-block union graph."""
+    b = shape["batch_nodes"]
+    counts = [b]
+    for f in shape["fanout"]:
+        counts.append(counts[-1] * f)
+    n_nodes = sum(counts)
+    n_edges = sum(counts[1:])
+    return n_nodes, n_edges

@@ -1,0 +1,7 @@
+"""graphcast [arXiv:2212.12794]: 16L d512 encoder-processor-decoder, R6 mesh."""
+from repro.configs.gnn_archs import make_arch
+ARCH_ID = "graphcast"
+def full_config(shape):
+    return make_arch(ARCH_ID, shape)
+def reduced_config(shape):
+    return make_arch(ARCH_ID, shape, reduced=True)

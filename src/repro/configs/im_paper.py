@@ -1,0 +1,13 @@
+"""The paper's own workload configs (gIM Table 1/2 scale stand-ins).
+
+SNAP datasets are not bundled offline; benchmarks use Barabasi-Albert
+stand-ins at matched n/m (the paper's own §4.6 scalability methodology).
+"""
+DATASETS = {
+    # name: (n_nodes, n_edges, ba_density r used for the synthetic stand-in)
+    "epinions-like":  (75_879, 508_837, 4),
+    "slashdot-like":  (77_360, 905_468, 6),
+    "higgs-like":     (456_631, 14_855_875, 16),
+    "pokec-like":     (1_632_803, 30_622_564, 10),
+}
+DEFAULTS = dict(k=50, eps=0.05, model="ic", engine="queue", batch=512)

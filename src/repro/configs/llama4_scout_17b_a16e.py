@@ -1,0 +1,5 @@
+"""llama4-scout-17b-a16e [hf:meta-llama]: 48L d5120 40H kv8 MoE 16e top-1."""
+from repro.configs.lm import llama4_scout as full_config, reduced_lm
+ARCH_ID = "llama4-scout-17b-a16e"
+def reduced_config():
+    return reduced_lm(full_config())

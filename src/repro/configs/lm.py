@@ -1,0 +1,91 @@
+"""The five assigned LM architectures — exact public configs.
+
+[sources per the assignment brief: arXiv:2407.10671 (qwen2), arXiv:2402.00838
+(olmo), hf:google/gemma-3 (gemma3-12b), arXiv:2412.19437 (deepseek-v3),
+hf:meta-llama/Llama-4-Scout (llama4)].
+"""
+from __future__ import annotations
+
+from repro.models.transformer import LMConfig
+from repro.models.attention import MLAConfig
+from repro.models.moe import MoEConfig
+
+
+def qwen2_0_5b(dtype="bfloat16") -> LMConfig:
+    # 24L d896 14H GQA(kv=2) dff4864 vocab 151936; QKV bias; tied embeddings
+    return LMConfig(name="qwen2-0.5b", n_layers=24, d_model=896, n_heads=14,
+                    n_kv_heads=2, head_dim=64, d_ff=4864, vocab=151936,
+                    qkv_bias=True, norm="rms", act="swiglu",
+                    rope_theta=1e6, tie_embeddings=True, dtype=dtype)
+
+
+def olmo_1b(dtype="bfloat16") -> LMConfig:
+    # 16L d2048 16H (kv=16 => MHA) dff8192 vocab 50304; non-parametric LN
+    return LMConfig(name="olmo-1b", n_layers=16, d_model=2048, n_heads=16,
+                    n_kv_heads=16, head_dim=128, d_ff=8192, vocab=50304,
+                    norm="nonparam", act="swiglu", rope_theta=10000.0,
+                    tie_embeddings=False, dtype=dtype)
+
+
+def gemma3_12b(dtype="bfloat16") -> LMConfig:
+    # 48L d3840 16H GQA(kv=8) dff15360 vocab 262144; 5 local (w=1024) : 1
+    # global; GeGLU; head_dim 256
+    return LMConfig(name="gemma3-12b", n_layers=48, d_model=3840, n_heads=16,
+                    n_kv_heads=8, head_dim=256, d_ff=15360, vocab=262144,
+                    norm="rms", act="geglu", rope_theta=1e6,
+                    local_global=(5, 1024), tie_embeddings=True, dtype=dtype)
+
+
+def deepseek_v3_671b(dtype="bfloat16") -> LMConfig:
+    # 61L d7168; MLA 128H; MoE 1 shared + 256 routed top-8 (dff 2048);
+    # first 3 layers dense (dff 18432); MTP; vocab 129280
+    return LMConfig(
+        name="deepseek-v3-671b", n_layers=61, d_model=7168, n_heads=128,
+        n_kv_heads=128, head_dim=128, d_ff=2048, vocab=129280,
+        mla=MLAConfig(n_heads=128, q_lora_rank=1536, kv_lora_rank=512,
+                      qk_nope_head_dim=128, qk_rope_head_dim=64,
+                      v_head_dim=128),
+        moe=MoEConfig(n_experts=256, top_k=8, d_ff_expert=2048, n_shared=1,
+                      d_ff_shared=2048, capacity_factor=1.25,
+                      router_score="sigmoid"),
+        n_dense_layers=3, d_ff_dense=18432, mtp=True,
+        norm="rms", act="swiglu", rope_theta=10000.0,
+        tie_embeddings=False, dtype=dtype)
+
+
+def llama4_scout(dtype="bfloat16") -> LMConfig:
+    # 48L d5120 40H GQA(kv=8) ; MoE 16 routed top-1 + 1 shared (dff 8192);
+    # vocab 202048.  Early-fusion modality frontend is a STUB per the brief
+    # (input_specs provides token ids; patch embeddings would enter the same
+    # embedding table space).
+    return LMConfig(
+        name="llama4-scout-17b-a16e", n_layers=48, d_model=5120, n_heads=40,
+        n_kv_heads=8, head_dim=128, d_ff=8192, vocab=202048,
+        moe=MoEConfig(n_experts=16, top_k=1, d_ff_expert=8192, n_shared=1,
+                      d_ff_shared=8192, capacity_factor=1.25,
+                      router_score="sigmoid"),
+        norm="rms", act="swiglu", rope_theta=500000.0,
+        tie_embeddings=False, dtype=dtype)
+
+
+def reduced_lm(full: LMConfig) -> LMConfig:
+    """Family-preserving smoke config: few layers, thin width, tiny vocab."""
+    kw = dict(
+        name=f"{full.name}-smoke", n_layers=2 + (1 if full.n_dense_layers else 0),
+        d_model=32, n_heads=4, n_kv_heads=min(4, max(1, full.n_kv_heads // 4)),
+        head_dim=8, d_ff=64, vocab=128, qkv_bias=full.qkv_bias,
+        norm=full.norm, act=full.act, rope_theta=full.rope_theta,
+        tie_embeddings=full.tie_embeddings, mtp=full.mtp, dtype="float32")
+    if full.local_global is not None:
+        kw["local_global"] = (1, 4)
+    if full.moe is not None:
+        kw["moe"] = full.moe._replace(n_experts=4, top_k=min(2, full.moe.top_k),
+                                      d_ff_expert=32, d_ff_shared=32,
+                                      capacity_factor=2.0)
+        kw["n_dense_layers"] = 1 if full.n_dense_layers else 0
+        kw["d_ff_dense"] = 64 if full.n_dense_layers else None
+    if full.mla is not None:
+        kw["mla"] = MLAConfig(n_heads=4, q_lora_rank=16, kv_lora_rank=8,
+                              qk_nope_head_dim=8, qk_rope_head_dim=4,
+                              v_head_dim=8)
+    return LMConfig(**kw)

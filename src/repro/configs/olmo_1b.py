@@ -1,0 +1,5 @@
+"""olmo-1b [arXiv:2402.00838]: 16L d2048 16H dff8192 v50304; non-param LN."""
+from repro.configs.lm import olmo_1b as full_config, reduced_lm
+ARCH_ID = "olmo-1b"
+def reduced_config():
+    return reduced_lm(full_config())

@@ -1,0 +1,5 @@
+"""qwen2-0.5b [arXiv:2407.10671]: 24L d896 14H GQA(kv=2) dff4864 v151936."""
+from repro.configs.lm import qwen2_0_5b as full_config, reduced_lm
+ARCH_ID = "qwen2-0.5b"
+def reduced_config():
+    return reduced_lm(full_config())

@@ -1,0 +1,40 @@
+"""DeepFM arch config + steps (train / serve / bulk / retrieval)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import deepfm
+from repro.optim import AdamWConfig, adamw_update
+
+
+def make_deepfm(*, reduced: bool = False) -> deepfm.DeepFMConfig:
+    if reduced:
+        return deepfm.DeepFMConfig(n_sparse=5, embed_dim=4, mlp_dims=(16, 8),
+                                   field_vocabs=tuple([64] * 5),
+                                   n_dense_feats=4)
+    return deepfm.DeepFMConfig()   # 39 fields, dim 10, MLP 400-400-400
+
+
+def build_train_step(cfg, opt_cfg: AdamWConfig, lookup_fn=None):
+    def step(state, ids, dense_x, labels):
+        params, opt = state
+        loss, grads = jax.value_and_grad(
+            lambda p: deepfm.deepfm_loss(p, cfg, ids, dense_x, labels,
+                                         lookup_fn))(params)
+        params, opt = adamw_update(grads, opt, params, opt_cfg)
+        return (params, opt), loss
+
+    return step
+
+
+def build_serve_step(cfg, lookup_fn=None):
+    def step(params, ids, dense_x):
+        return deepfm.deepfm_logits(params, cfg, ids, dense_x, lookup_fn)
+    return step
+
+
+def build_retrieval_step(top_k: int):
+    def step(query_emb, cand_emb):
+        return deepfm.retrieval_topk(query_emb, cand_emb, top_k)
+    return step

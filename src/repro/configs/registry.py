@@ -1,0 +1,41 @@
+"""Architecture registry: ``--arch <id>`` resolution for every launcher."""
+from __future__ import annotations
+
+from repro.configs import lm as lm_cfg
+from repro.configs.shapes import LM_SHAPES, GNN_SHAPES, RECSYS_SHAPES
+
+ARCHS = {
+    # --- LM family -------------------------------------------------------
+    "qwen2-0.5b": dict(family="lm", shapes=list(LM_SHAPES),
+                       full=lm_cfg.qwen2_0_5b),
+    "olmo-1b": dict(family="lm", shapes=list(LM_SHAPES),
+                    full=lm_cfg.olmo_1b),
+    "gemma3-12b": dict(family="lm", shapes=list(LM_SHAPES),
+                       full=lm_cfg.gemma3_12b),
+    "deepseek-v3-671b": dict(family="lm", shapes=list(LM_SHAPES),
+                             full=lm_cfg.deepseek_v3_671b),
+    "llama4-scout-17b-a16e": dict(family="lm", shapes=list(LM_SHAPES),
+                                  full=lm_cfg.llama4_scout),
+    # --- GNN family ------------------------------------------------------
+    "gat-cora": dict(family="gnn", shapes=list(GNN_SHAPES)),
+    "egnn": dict(family="gnn", shapes=list(GNN_SHAPES)),
+    "gin-tu": dict(family="gnn", shapes=list(GNN_SHAPES)),
+    "graphcast": dict(family="gnn", shapes=list(GNN_SHAPES)),
+    # --- RecSys ----------------------------------------------------------
+    "deepfm": dict(family="recsys", shapes=list(RECSYS_SHAPES)),
+}
+
+
+def family_of(arch_id: str) -> str:
+    return ARCHS[arch_id]["family"]
+
+
+def lm_config(arch_id: str, *, reduced: bool = False):
+    full = ARCHS[arch_id]["full"]()
+    return lm_cfg.reduced_lm(full) if reduced else full
+
+
+def shape_table(arch_id: str) -> dict:
+    fam = family_of(arch_id)
+    return {"lm": LM_SHAPES, "gnn": GNN_SHAPES,
+            "recsys": RECSYS_SHAPES}[fam]

@@ -1,0 +1,202 @@
+"""input_specs(): ShapeDtypeStruct stand-ins per (arch × shape) cell.
+
+No device allocation happens here — these drive ``jit(...).lower()`` in the
+multi-pod dry-run.  ``build_cell`` returns (step_fn, arg_specs dict) where
+step_fn's signature matches the specs in order.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry, gnn_archs, recsys
+from repro.configs.shapes import LM_SHAPES, GNN_SHAPES, RECSYS_SHAPES
+from repro.models import transformer as T
+from repro.optim import AdamWConfig, adamw_init
+from repro.train import steps as tsteps
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _pad512(n: int) -> int:
+    """Pad counts to a multiple of 512 so arrays shard on both production
+    meshes (256- and 512-chip); masks neutralize padded entries."""
+    return ((n + 511) // 512) * 512
+
+
+def _lm_opt_cfg(arch_id: str) -> AdamWConfig:
+    # int8 optimizer states for the MoE giants (the pod-fit enabler),
+    # fp32 moments for the small dense archs
+    big = arch_id in ("deepseek-v3-671b", "llama4-scout-17b-a16e",
+                      "gemma3-12b")
+    return AdamWConfig(int8_states=big)
+
+
+def lm_state_specs(cfg, opt_cfg):
+    """TrainState ShapeDtypeStructs via eval_shape (no allocation)."""
+    return jax.eval_shape(
+        lambda: tsteps.init_train_state(jax.random.key(0), cfg, opt_cfg))
+
+
+def build_cell(arch_id: str, shape_id: str, *, reduced: bool = False,
+               mesh_axes=None, cfg_override=None, opt: bool = False):
+    """mesh_axes: optional (dp_axes tuple, tp_axis str) for activation
+    sharding constraints inside the model (dry-run/production path).
+    cfg_override: LM-only, replaces the registry config (cost probes).
+    opt: apply the beyond-baseline §Perf optimizations (see EXPERIMENTS)."""
+    fam = registry.family_of(arch_id)
+    if fam == "lm":
+        return _build_lm_cell(arch_id, shape_id, reduced, mesh_axes,
+                              cfg_override, opt)
+    if fam == "gnn":
+        return _build_gnn_cell(arch_id, shape_id, reduced, opt, mesh_axes)
+    return _build_recsys_cell(arch_id, shape_id, reduced)
+
+
+# ------------------------------------------------------------------- LM
+
+def _build_lm_cell(arch_id, shape_id, reduced, mesh_axes=None,
+                   cfg_override=None, opt=False):
+    import dataclasses
+    cfg = cfg_override or registry.lm_config(arch_id, reduced=reduced)
+    opt_cfg = _lm_opt_cfg(arch_id)
+    sh = dict(LM_SHAPES[shape_id])
+    if reduced:
+        sh.update(seq_len=min(sh["seq_len"], 32),
+                  global_batch=min(sh["global_batch"], 4))
+    b, s = sh["global_batch"], sh["seq_len"]
+    n_dp = 1
+    if mesh_axes is not None and b > 1:
+        dp, tp = mesh_axes
+        n_dp = 16 * (2 if "pod" in dp else 1)
+        cfg = dataclasses.replace(cfg, act_dp=tuple(dp), act_tp=tp,
+                                  tp_size=16)
+    if opt and cfg.moe is not None and b > 1 and mesh_axes is not None:
+        # §Perf/H1 + H1b: group-local MoE dispatch (one group per data
+        # shard) with scatter-based combine.  (H1c "moe_save" remat policy
+        # was measured and REFUTED — see EXPERIMENTS.md §Perf.)
+        cfg = dataclasses.replace(
+            cfg, moe=cfg.moe._replace(dispatch_groups=n_dp))
+    if opt and LM_SHAPES[shape_id]["kind"] == "decode":
+        # §Perf/H2: iota-select ring-cache writes (no dynamic-update-slice
+        # resharding of the sequence-sharded cache); §Perf/H5: absorbed MLA
+        cfg = dataclasses.replace(cfg, scatter_cache_update=True,
+                                  absorbed_mla_decode=cfg.mla is not None)
+    if opt and LM_SHAPES[shape_id]["kind"] in ("prefill", "train") \
+            and cfg.mla is None:
+        # §Perf/H6: flash-style chunked attention (no S^2 logits buffer)
+        cfg = dataclasses.replace(cfg, attn_chunk=1024)
+    if sh["kind"] == "train":
+        step = tsteps.build_lm_train_step(cfg, opt_cfg)
+        state = lm_state_specs(cfg, opt_cfg)
+        args = (state, SDS((b, s), jnp.int32))
+        return step, args, dict(kind="train", cfg=cfg)
+    if sh["kind"] == "prefill":
+        step = tsteps.build_lm_prefill(cfg)
+        params = jax.eval_shape(lambda: T.lm_init(jax.random.key(0), cfg))
+        args = (params, SDS((b, s), jnp.int32))
+        return step, args, dict(kind="prefill", cfg=cfg)
+    # decode: one new token against a KV cache of seq_len
+    step = tsteps.build_lm_serve_step(cfg)
+    params = jax.eval_shape(lambda: T.lm_init(jax.random.key(0), cfg))
+    caches = jax.eval_shape(
+        lambda: T.init_cache(cfg, batch=b, max_len=s, filled=True))
+    args = (params, SDS((b, 1), jnp.int32), caches, SDS((), jnp.int32))
+    return step, args, dict(kind="decode", cfg=cfg)
+
+
+# ------------------------------------------------------------------ GNN
+
+def _build_gnn_cell(arch_id, shape_id, reduced, opt=False, mesh_axes=None):
+    sh = dict(GNN_SHAPES[shape_id])
+    opt_cfg = AdamWConfig()
+    cfg = gnn_archs.make_arch(arch_id, sh, reduced=reduced)
+    n_cls = sh["n_classes"]
+    f32, i32 = jnp.float32, jnp.int32
+    # §Perf/H4b: bf16 mixed-precision message passing (graphcast full-batch)
+    # — halves every collective payload (H4a node-shard constraints were
+    # measured and REFUTED: the src-gather re-replicates h, so constraints
+    # only added all-gathers; see EXPERIMENTS.md §Perf)
+    gnn_opt = {}
+    param_dtype = jnp.float32
+    if opt and arch_id == "graphcast" and mesh_axes is not None:
+        param_dtype = jnp.bfloat16
+
+    def params_specs():
+        def mk():
+            p = gnn_archs.init_params(arch_id, jax.random.key(0), cfg, n_cls,
+                                      dtype=param_dtype)
+            return p, adamw_init(p, opt_cfg)
+        return jax.eval_shape(mk)
+
+    if shape_id in ("full_graph_sm", "ogb_products"):
+        n, m = sh["n_nodes"], sh["n_edges"]
+        if reduced:
+            n, m = 64, 256
+        else:
+            n, m = _pad512(n), _pad512(m)
+        step = gnn_archs.build_node_train_step(arch_id, cfg, opt_cfg,
+                                               **gnn_opt)
+        args = (params_specs(),
+                SDS((n, sh["d_feat"]), f32), SDS((m,), i32), SDS((m,), i32),
+                SDS((m,), jnp.bool_), SDS((n,), i32), SDS((n, 3), f32))
+        return step, args, dict(kind="train", cfg=cfg)
+    if shape_id == "minibatch_lg":
+        nn, ne = gnn_archs.minibatch_union_sizes(sh)
+        n_lab = sh["batch_nodes"]
+        if reduced:
+            nn, ne, n_lab = 64, 60, 4
+        else:
+            nn, ne = _pad512(nn), _pad512(ne)
+        step = gnn_archs.build_node_train_step(arch_id, cfg, opt_cfg,
+                                               n_labeled=n_lab)
+        args = (params_specs(),
+                SDS((nn, sh["d_feat"]), f32), SDS((ne,), i32),
+                SDS((ne,), i32), SDS((ne,), jnp.bool_), SDS((n_lab,), i32),
+                SDS((nn, 3), f32))
+        return step, args, dict(kind="train", cfg=cfg)
+    # molecule: batch of small graphs
+    bsz, n, m = sh["batch"], sh["n_nodes"], sh["n_edges"]
+    if reduced:
+        bsz = 4
+    step = gnn_archs.build_molecule_train_step(arch_id, cfg, opt_cfg)
+    args = (params_specs(),
+            SDS((bsz, n, sh["d_feat"]), f32), SDS((bsz, m), i32),
+            SDS((bsz, m), i32), SDS((bsz, m), jnp.bool_), SDS((bsz,), i32),
+            SDS((bsz, n, 3), f32))
+    return step, args, dict(kind="train", cfg=cfg)
+
+
+# --------------------------------------------------------------- recsys
+
+def _build_recsys_cell(arch_id, shape_id, reduced):
+    sh = dict(RECSYS_SHAPES[shape_id])
+    cfg = recsys.make_deepfm(reduced=reduced)
+    opt_cfg = AdamWConfig()
+    f32, i32 = jnp.float32, jnp.int32
+    bsz = sh.get("batch", 1)
+    if reduced:
+        bsz = min(bsz, 8)
+        sh["n_candidates"] = min(sh.get("n_candidates", 0), 512)
+    if sh["kind"] == "train":
+        step = recsys.build_train_step(cfg, opt_cfg)
+        from repro.models.deepfm import deepfm_init
+        state = jax.eval_shape(lambda: (
+            deepfm_init(jax.random.key(0), cfg),
+            adamw_init(deepfm_init(jax.random.key(0), cfg), opt_cfg)))
+        args = (state, SDS((bsz, cfg.n_sparse), i32),
+                SDS((bsz, cfg.n_dense_feats), f32), SDS((bsz,), f32))
+        return step, args, dict(kind="train", cfg=cfg)
+    if sh["kind"] == "serve":
+        from repro.models.deepfm import deepfm_init
+        step = recsys.build_serve_step(cfg)
+        params = jax.eval_shape(lambda: deepfm_init(jax.random.key(0), cfg))
+        args = (params, SDS((bsz, cfg.n_sparse), i32),
+                SDS((bsz, cfg.n_dense_feats), f32))
+        return step, args, dict(kind="serve", cfg=cfg)
+    # retrieval: 1 query vs n_candidates, batched dot + top-k
+    step = recsys.build_retrieval_step(sh["top_k"])
+    n_cand = sh["n_candidates"] if reduced else _pad512(sh["n_candidates"])
+    args = (SDS((cfg.embed_dim,), f32),
+            SDS((n_cand, cfg.embed_dim), f32))
+    return step, args, dict(kind="retrieval", cfg=cfg)

@@ -1,0 +1,251 @@
+"""Greedy max-coverage seed selection (paper Alg. 1 L6-10 / Alg. 7), TPU-adapted.
+
+RR sets are stored exactly like the paper's memory-optimized layout (Alg. 6):
+one flat concatenated array ``rr_flat`` plus ``rr_offsets`` (CSR-of-RR).  For
+vectorized processing we carry ``rr_ids`` = the row id of every flat element
+(the inverse of Offsets_RR), so the Alg. 7 kernel becomes:
+
+  argmax(Occur)                 -> jnp.argmax of the psum-reduced histogram
+  per-RR membership scan of u   -> equality scan + segment_max by rr_ids
+  Covered flag + decrement      -> mask + segment scatter-sub on Occur
+
+Distributed mode: RR rows are sharded across devices (each device keeps the
+rows it sampled); ``Occur`` is psum-reduced, argmax is replicated math, and
+coverage updates stay local — per seed the only collective is one psum(n).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class RRStore(NamedTuple):
+    """CSR-of-RR.  ``rr_flat[rr_offsets[i]:rr_offsets[i+1]]`` is RR set i."""
+    rr_flat: jnp.ndarray     # (T,) int32 node ids (padded tail = n, masked out)
+    rr_ids: jnp.ndarray      # (T,) int32 row id per element
+    valid: jnp.ndarray       # (T,) bool
+    n_rr: int                # number of RR sets
+    n_nodes: int
+
+
+def build_store(rr_lists_or_arrays, n: int, pad_to: int | None = None) -> RRStore:
+    """Host-side compaction (paper Alg. 6 lines 4-11)."""
+    if isinstance(rr_lists_or_arrays, list):
+        lens = np.asarray([len(r) for r in rr_lists_or_arrays], dtype=np.int64)
+        flat = (np.concatenate([np.asarray(r, dtype=np.int64)
+                                for r in rr_lists_or_arrays])
+                if lens.sum() else np.zeros(0, np.int64))
+    else:  # (nodes (B, Q), lengths (B,)) padded arrays from the samplers
+        nodes, lens = rr_lists_or_arrays
+        nodes = np.asarray(nodes); lens = np.asarray(lens, dtype=np.int64)
+        mask = np.arange(nodes.shape[1])[None, :] < lens[:, None]
+        flat = nodes[mask].astype(np.int64)
+    ids = np.repeat(np.arange(len(lens), dtype=np.int64), lens)
+    t = flat.shape[0]
+    t_pad = pad_to if pad_to is not None else t
+    if t_pad < t:
+        raise ValueError("pad_to smaller than payload")
+    valid = np.zeros(t_pad, bool); valid[:t] = True
+    flat = np.concatenate([flat, np.full(t_pad - t, n, np.int64)])
+    ids = np.concatenate([ids, np.full(t_pad - t, len(lens), np.int64)])
+    return RRStore(rr_flat=jnp.asarray(flat, jnp.int32),
+                   rr_ids=jnp.asarray(ids, jnp.int32),
+                   valid=jnp.asarray(valid),
+                   n_rr=int(len(lens)), n_nodes=n)
+
+
+def merge_stores(stores: list[RRStore]) -> RRStore:
+    n = stores[0].n_nodes
+    flats, ids, valids, base = [], [], [], 0
+    for s in stores:
+        flats.append(np.asarray(s.rr_flat)[np.asarray(s.valid)])
+        ids.append(np.asarray(s.rr_ids)[np.asarray(s.valid)] + base)
+        base += s.n_rr
+    flat = np.concatenate(flats) if flats else np.zeros(0, np.int64)
+    rid = np.concatenate(ids) if ids else np.zeros(0, np.int64)
+    return RRStore(rr_flat=jnp.asarray(flat, jnp.int32),
+                   rr_ids=jnp.asarray(rid, jnp.int32),
+                   valid=jnp.ones(flat.shape[0], bool),
+                   n_rr=base, n_nodes=n)
+
+
+def occur_histogram(store: RRStore) -> jnp.ndarray:
+    """Occur[n]: #RR sets containing each node (elements are row-unique)."""
+    ones = store.valid.astype(jnp.int32)
+    return jnp.zeros(store.n_nodes + 1, jnp.int32).at[store.rr_flat].add(
+        ones, mode="drop")[:store.n_nodes]
+
+
+@functools.partial(jax.jit, static_argnames=("n_rr", "n", "k"))
+def _greedy(rr_flat, rr_ids, valid, occur0, *, n_rr, n, k):
+    def step(carry, _):
+        occur, covered = carry
+        u = jnp.argmax(occur).astype(jnp.int32)
+        match = (rr_flat == u) & valid                       # membership scan
+        row_has = jax.ops.segment_max(match.astype(jnp.int32), rr_ids,
+                                      num_segments=n_rr + 1,
+                                      indices_are_sorted=True)[:n_rr] > 0
+        newly = row_has & ~covered
+        elem_newly = jnp.concatenate([newly, jnp.zeros(1, bool)])[
+            jnp.clip(rr_ids, 0, n_rr)] & valid
+        dec = jnp.zeros(n + 1, jnp.int32).at[rr_flat].add(
+            elem_newly.astype(jnp.int32), mode="drop")[:n]
+        occur = occur - dec
+        covered = covered | row_has
+        gain = newly.sum(dtype=jnp.int32)
+        return (occur, covered), (u, gain)
+
+    covered = jnp.zeros(n_rr, bool)
+    (occur, covered), (seeds, gains) = jax.lax.scan(
+        step, (occur0, covered), None, length=k)
+    return seeds, gains, covered
+
+
+class CoverageResult(NamedTuple):
+    seeds: jnp.ndarray    # (k,) int32
+    gains: jnp.ndarray    # (k,) int32 — newly covered RR sets per seed
+    frac: jnp.ndarray     # () float32 — F_R(S): covered fraction
+
+
+def select_seeds(store: RRStore, k: int) -> CoverageResult:
+    occur0 = occur_histogram(store)
+    seeds, gains, covered = _greedy(store.rr_flat, store.rr_ids, store.valid,
+                                    occur0, n_rr=store.n_rr,
+                                    n=store.n_nodes, k=k)
+    frac = gains.sum() / jnp.maximum(store.n_rr, 1)
+    return CoverageResult(seeds=seeds, gains=gains, frac=frac.astype(jnp.float32))
+
+
+class PaddedStore(NamedTuple):
+    """2D tile layout for the Pallas membership kernel (DESIGN.md §2):
+    TPU prefers rectangular VMEM tiles over the GPU's ragged flat array."""
+    rows: jnp.ndarray     # (R, L) int32, padded with n
+    lengths: jnp.ndarray  # (R,) int32
+    n_nodes: int
+
+
+def build_padded_store(rr_lists, n: int, row_len: int | None = None,
+                       pad_rows_to: int = 8) -> PaddedStore:
+    lens = np.asarray([len(r) for r in rr_lists], dtype=np.int64)
+    l = row_len if row_len is not None else int(max(lens.max(), 1))
+    l = ((l + 127) // 128) * 128                       # lane-align
+    r = ((len(rr_lists) + pad_rows_to - 1) // pad_rows_to) * pad_rows_to
+    rows = np.full((r, l), n, dtype=np.int32)
+    for i, rr in enumerate(rr_lists):
+        if len(rr) > l:
+            raise ValueError("row_len too small")
+        rows[i, :len(rr)] = rr
+    lengths = np.zeros(r, np.int32)
+    lengths[:len(lens)] = lens
+    return PaddedStore(rows=jnp.asarray(rows), lengths=jnp.asarray(lengths),
+                       n_nodes=n)
+
+
+def select_seeds_padded(store: PaddedStore, k: int) -> CoverageResult:
+    """Greedy selection with the Pallas membership kernel as the Alg. 7 scan.
+
+    The scan (the hot part: R×L element compares per seed) runs in the
+    kernel; Covered flags and the Occur decrement (scatter-add) stay in XLA,
+    which lowers scatter natively on TPU.
+    """
+    from repro.kernels import ops as kops
+    rows, lengths, n = store.rows, store.lengths, store.n_nodes
+    r, l = rows.shape
+    lane = jnp.arange(l, dtype=jnp.int32)[None, :]
+    valid = lane < lengths[:, None]
+    occur = jnp.zeros(n + 1, jnp.int32).at[rows].add(
+        valid.astype(jnp.int32), mode="drop")[:n]
+    covered = jnp.zeros(r, bool)
+    seeds, gains = [], []
+    for _ in range(k):
+        u = jnp.argmax(occur).astype(jnp.int32)
+        hit = kops.membership_rows(rows, lengths, u)
+        newly = hit & ~covered
+        dec = jnp.zeros(n + 1, jnp.int32).at[rows].add(
+            (valid & newly[:, None]).astype(jnp.int32), mode="drop")[:n]
+        occur = occur - dec
+        covered = covered | hit
+        seeds.append(u)
+        gains.append(newly.sum(dtype=jnp.int32))
+    n_rr = int((lengths > 0).sum())
+    gains = jnp.stack(gains)
+    return CoverageResult(seeds=jnp.stack(seeds), gains=gains,
+                          frac=(gains.sum() / jnp.maximum(n_rr, 1)
+                                ).astype(jnp.float32))
+
+
+def shard_stores(per_shard_rr: list[list[list[int]]], n: int) -> RRStore:
+    """Stack per-device RR pools into a leading-shard-dim RRStore.
+
+    Pads every shard to the max flat length and max row count so the arrays
+    stack; ``n_rr`` becomes rows-per-shard (uniform after padding with empty
+    rows, which are never covered and never matched).
+    """
+    n_shards = len(per_shard_rr)
+    rows = max(len(p) for p in per_shard_rr)
+    per_shard_rr = [p + [[]] * (rows - len(p)) for p in per_shard_rr]
+    stores = [build_store(p, n) for p in per_shard_rr]
+    t_max = max(int(s.rr_flat.shape[0]) for s in stores)
+    stores = [build_store(p, n, pad_to=t_max) for p in per_shard_rr]
+    return RRStore(
+        rr_flat=jnp.stack([s.rr_flat for s in stores]),
+        rr_ids=jnp.stack([s.rr_ids for s in stores]),
+        valid=jnp.stack([s.valid for s in stores]),
+        n_rr=rows, n_nodes=n)
+
+
+# ---------------------------------------------------------------------------
+# Distributed (shard_map) variant: RR rows sharded, Occur psum-reduced.
+# ---------------------------------------------------------------------------
+
+def select_seeds_sharded(mesh, store_shards, k: int, n: int, axis_names):
+    """store_shards: RRStore pytree whose arrays carry a leading shard dim
+    equal to the mesh size (one row per device); rr_ids are *local* row ids.
+    Per-seed collective cost: one psum over (n,) int32 — see DESIGN.md §4.
+    """
+    from jax.sharding import PartitionSpec as P
+    from jax import shard_map
+
+    local_n_rr = store_shards.n_rr  # rows per shard (uniform)
+
+    def local_fn(rr_flat, rr_ids, valid):
+        rr_flat, rr_ids, valid = rr_flat[0], rr_ids[0], valid[0]
+        occur = jnp.zeros(n + 1, jnp.int32).at[rr_flat].add(
+            valid.astype(jnp.int32), mode="drop")[:n]
+        occur = jax.lax.psum(occur, axis_names)
+
+        def step(carry, _):
+            occur, covered = carry
+            u = jnp.argmax(occur).astype(jnp.int32)
+            match = (rr_flat == u) & valid
+            row_has = jax.ops.segment_max(
+                match.astype(jnp.int32), rr_ids,
+                num_segments=local_n_rr + 1,
+                indices_are_sorted=True)[:local_n_rr] > 0
+            newly = row_has & ~covered
+            elem_newly = jnp.concatenate([newly, jnp.zeros(1, bool)])[
+                jnp.clip(rr_ids, 0, local_n_rr)] & valid
+            dec = jnp.zeros(n + 1, jnp.int32).at[rr_flat].add(
+                elem_newly.astype(jnp.int32), mode="drop")[:n]
+            occur = occur - jax.lax.psum(dec, axis_names)
+            gain = jax.lax.psum(newly.sum(dtype=jnp.int32), axis_names)
+            return (occur, covered | row_has), (u, gain)
+
+        covered = jax.lax.pvary(jnp.zeros(local_n_rr, bool),
+                                (axis_names,) if isinstance(axis_names, str)
+                                else tuple(axis_names))
+        (_, covered), (seeds, gains) = jax.lax.scan(
+            step, (occur, covered), None, length=k)
+        return seeds[None], gains[None]
+
+    specs = P(axis_names if isinstance(axis_names, str) else tuple(axis_names))
+    fn = shard_map(local_fn, mesh=mesh,
+                   in_specs=(specs, specs, specs),
+                   out_specs=(specs, specs))
+    seeds, gains = fn(store_shards.rr_flat, store_shards.rr_ids,
+                      store_shards.valid)
+    return seeds[0], gains[0]

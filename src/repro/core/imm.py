@@ -1,0 +1,165 @@
+"""IMM driver (paper Alg. 2 + θ sampling + seed selection), engine-agnostic.
+
+The host orchestrates rounds of B RR sets (exactly like gIM's persistent
+N_b-block kernel relaunches, Alg. 6) against either engine:
+
+* ``engine="queue"`` — gIM-faithful work-efficient sampler (core/rrset.py)
+* ``engine="dense"`` — dense-frontier sampler (core/dense.py)
+
+All martingale math (λ', λ*, the Alg. 2 LB loop) follows IMM [Tang et al.'15]
+and is shared with the numpy oracle (core/oracle.py) so both sides compute
+identical θ schedules.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.csr import CSRGraph, reverse
+from repro.core import coverage as cov
+from repro.core.oracle import imm_theta_params
+from repro.core import rrset as rr_queue
+from repro.core import dense as rr_dense
+from repro.core import lt as rr_lt
+
+
+@dataclass
+class IMMStats:
+    theta: int = 0
+    n_rr_sampled: int = 0
+    lb: float = 1.0
+    lb_iters: int = 0
+    rounds: int = 0
+    overflow_fraction: float = 0.0
+    frac_covered: float = 0.0
+    sampling_steps: int = 0
+    history: list = field(default_factory=list)
+
+
+class IMMSolver:
+    """Stateful solver: owns the RR pool so Alg. 2 reuses earlier samples."""
+
+    def __init__(self, g: CSRGraph, *, engine: str = "queue", batch: int = 256,
+                 qcap: Optional[int] = None, ec: int = rr_queue.EC_DEFAULT,
+                 model: str = "ic", seed: int = 0):
+        self.g = g
+        self.g_rev = reverse(g)
+        self.n = g.n_nodes
+        self.engine = engine
+        self.batch = batch
+        self.qcap = qcap if qcap is not None else self.n
+        self.ec = ec
+        self.model = model
+        self.key = jax.random.key(seed)
+        self._pool_nodes: list[np.ndarray] = []
+        self._pool_lens: list[np.ndarray] = []
+        self.stats = IMMStats()
+
+    # -- sampling ----------------------------------------------------------
+    def _round(self):
+        self.key, sub = jax.random.split(self.key)
+        if self.model == "lt":
+            s = rr_lt.sample_rrsets_lt(sub, self.g_rev, self.batch, self.qcap)
+            nodes, lens = np.asarray(s.nodes), np.asarray(s.lengths)
+            overflow = np.asarray(s.overflowed)
+            self.stats.sampling_steps += int(s.steps)
+        elif self.engine == "queue":
+            s = rr_queue.sample_rrsets_queue(sub, self.g_rev, self.batch,
+                                             self.qcap, self.ec)
+            nodes, lens = np.asarray(s.nodes), np.asarray(s.lengths)
+            overflow = np.asarray(s.overflowed)
+            self.stats.sampling_steps += int(s.steps)
+        elif self.engine == "refill":
+            lanes = max(min(self.batch // 4, 256), 8)
+            s = rr_queue.sample_rrsets_refill(
+                sub, self.g_rev, lanes, quota=self.batch,
+                out_cap=min(8 * self.batch // lanes, 64) * 64,
+                ec=self.ec)
+            rows = rr_queue.refill_to_lists(s)
+            width = max(max((len(r) for r in rows), default=1), 1)
+            nodes = np.zeros((len(rows), width), np.int64)
+            lens = np.zeros(len(rows), np.int64)
+            for i, r in enumerate(rows):
+                nodes[i, :len(r)] = r
+                lens[i] = len(r)
+            overflow = np.asarray(s.overflowed)
+            self.stats.sampling_steps += int(s.steps)
+            self.stats.rounds += 1
+            self.stats.n_rr_sampled += len(rows)
+            self._pool_nodes.append(nodes)
+            self._pool_lens.append(lens)
+            self.stats.overflow_fraction = (
+                (self.stats.overflow_fraction * (self.stats.rounds - 1)
+                 + overflow.mean()) / self.stats.rounds)
+            return
+        else:
+            s = rr_dense.sample_rrsets_dense(sub, self.g_rev, self.batch)
+            mem = np.asarray(s.membership)
+            lens = mem.sum(axis=1).astype(np.int64)
+            width = max(int(lens.max()), 1)
+            nodes = np.zeros((self.batch, width), dtype=np.int64)
+            for i in range(self.batch):
+                nz = np.nonzero(mem[i])[0]
+                nodes[i, :len(nz)] = nz
+            overflow = np.zeros(self.batch, bool)
+            self.stats.sampling_steps += int(s.levels)
+        self._pool_nodes.append(nodes)
+        self._pool_lens.append(lens)
+        self.stats.rounds += 1
+        self.stats.n_rr_sampled += self.batch
+        self.stats.overflow_fraction = (
+            (self.stats.overflow_fraction * (self.stats.rounds - 1)
+             + overflow.mean()) / self.stats.rounds)
+
+    def sample_until(self, theta: int):
+        while self.stats.n_rr_sampled < theta:
+            self._round()
+
+    def _store(self) -> cov.RRStore:
+        stores = [cov.build_store((nd, ln), self.n)
+                  for nd, ln in zip(self._pool_nodes, self._pool_lens)]
+        return cov.merge_stores(stores)
+
+    # -- full IMM ----------------------------------------------------------
+    def solve(self, k: int, eps: float, ell: float = 1.0,
+              max_theta: Optional[int] = None):
+        n = self.n
+        lam_p, lam_star, eps_p, _ = imm_theta_params(n, k, eps, ell)
+        lb = 1.0
+        for i in range(1, max(int(math.log2(n)), 2)):           # Alg. 2
+            x = n / (2.0 ** i)
+            theta_i = int(math.ceil(lam_p / x))
+            if max_theta:
+                theta_i = min(theta_i, max_theta)
+            self.sample_until(theta_i)
+            res = cov.select_seeds(self._store(), k)
+            est = n * float(res.frac)
+            self.stats.lb_iters = i
+            self.stats.history.append(("lb_iter", i, theta_i, est))
+            if est >= (1.0 + eps_p) * x:                         # Alg. 2 L7
+                lb = est / (1.0 + eps_p)                         # Alg. 2 L8
+                break
+        theta = int(math.ceil(lam_star / lb))
+        if max_theta:
+            theta = min(theta, max_theta)
+        self.stats.theta = theta
+        self.stats.lb = lb
+        self.sample_until(theta)
+        res = cov.select_seeds(self._store(), k)
+        self.stats.frac_covered = float(res.frac)
+        spread_est = n * float(res.frac)                         # Eq. (3)
+        return np.asarray(res.seeds), spread_est, self.stats
+
+
+def imm(g: CSRGraph, k: int, eps: float, **kw):
+    """One-shot convenience wrapper; returns (seeds, spread_estimate, stats)."""
+    solver_kw = {k_: v for k_, v in kw.items()
+                 if k_ in ("engine", "batch", "qcap", "ec", "model", "seed")}
+    solve_kw = {k_: v for k_, v in kw.items() if k_ in ("ell", "max_theta")}
+    solver = IMMSolver(g, **solver_kw)
+    return solver.solve(k, eps, **solve_kw)

@@ -1,0 +1,119 @@
+"""LT-model RR sampler (paper §3.7).
+
+Under LT, every node activates via at most one incoming edge, chosen with
+probability proportional to edge weight (Σ w ≤ 1; remainder = stop).  A
+reverse RR "set" is therefore a *walk*: repeatedly pick one in-edge of the
+current node (or stop), terminating on stop or revisit.
+
+The paper implements the in-edge choice as a warp-parallel prefix scan over
+the row's weights + first-hit broadcast.  TPU adaptation: per-row cumulative
+weights are precomputed once (a segmented scan over W), and the per-step
+choice is a vectorized binary search over the row slice — the scan moves from
+the inner loop to a one-time O(m) preprocessing pass, and the frontier queue
+degenerates to a single register (paper: "the size of the frontier queue never
+exceeds one"), so lanes carry only (current node, length).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.csr import CSRGraph
+
+
+class LTSample(NamedTuple):
+    nodes: jnp.ndarray       # (B, Qcap) int32 walk nodes (visit order)
+    lengths: jnp.ndarray     # (B,) int32
+    roots: jnp.ndarray       # (B,) int32
+    overflowed: jnp.ndarray  # (B,) bool
+    steps: jnp.ndarray       # () int32
+
+
+def row_cumweights(g: CSRGraph) -> jnp.ndarray:
+    """Segmented inclusive cumsum of weights within each CSR row."""
+    w = np.asarray(g.weights, dtype=np.float64)
+    offs = np.asarray(g.offsets, dtype=np.int64)
+    cs = np.cumsum(w)
+    base = np.concatenate([[0.0], cs])[offs[:-1]]
+    rowcum = cs - np.repeat(base, np.diff(offs))
+    return jnp.asarray(rowcum, jnp.float32)
+
+
+def _bit_test(words, nodes):
+    """words: (B, W) uint32; nodes: (B,) int32 -> (B,) bool."""
+    got = jnp.take_along_axis(words, (nodes >> 5)[:, None], axis=1)[:, 0]
+    return ((got >> (nodes & 31).astype(jnp.uint32)) & jnp.uint32(1)) != 0
+
+
+@functools.partial(jax.jit, static_argnames=("batch", "qcap", "n", "m"))
+def _sample_lt(key, offsets, indices, rowcum, roots, *, batch, qcap, n, m):
+    n_words = (n + 31) // 32
+    lane = jnp.arange(batch, dtype=jnp.int32)
+    walk = jnp.zeros((batch, qcap), jnp.int32).at[:, 0].set(roots)
+    visited = jnp.zeros((batch, n_words), jnp.uint32)
+    visited = visited.at[lane, roots >> 5].set(
+        jnp.left_shift(jnp.uint32(1), (roots & 31).astype(jnp.uint32)))
+    cur = roots
+    length = jnp.ones_like(roots)      # varying-safe under shard_map
+    done = roots < 0
+    overflow = roots < 0
+    bisect_iters = max(int(np.ceil(np.log2(max(m, 2)))) + 1, 1)
+
+    def cond(st):
+        return ~st[4].all()
+
+    def body(st):
+        walk, visited, cur, length, done, overflow, key, step = st
+        s = offsets[cur]
+        e = offsets[cur + 1]
+        key, sub = jax.random.split(key)
+        r = jax.random.uniform(sub, (batch,))
+        empty = e == s
+        total = jnp.where(empty, 0.0, rowcum[jnp.clip(e - 1, 0, m - 1)])
+        stop = empty | (r >= total)
+        # binary search: smallest j in [s, e) with rowcum[j] > r
+        lo, hi = s, jnp.maximum(e - 1, s)
+        for _ in range(bisect_iters):
+            mid = (lo + hi) // 2
+            go_right = rowcum[jnp.clip(mid, 0, m - 1)] <= r
+            lo = jnp.where(go_right, jnp.minimum(mid + 1, hi), lo)
+            hi = jnp.where(go_right, hi, mid)
+        v = indices[jnp.clip(lo, 0, m - 1)]
+        seen = _bit_test(visited, v)
+        stop = stop | seen
+        fits = length < qcap
+        take = ~done & ~stop
+        overflow = overflow | (take & ~fits)
+        take = take & fits
+        walk = walk.at[lane, jnp.where(take, length, qcap)].set(v, mode="drop")
+        visited = visited.at[
+            lane, jnp.where(take, v >> 5, n_words)].add(
+            jnp.where(take,
+                      jnp.left_shift(jnp.uint32(1), (v & 31).astype(jnp.uint32)),
+                      jnp.uint32(0)), mode="drop")
+        length = length + take.astype(jnp.int32)
+        cur = jnp.where(take, v, cur)
+        done = done | (~take)
+        return walk, visited, cur, length, done, overflow, key, step + 1
+
+    walk, visited, cur, length, done, overflow, key, steps = (
+        jax.lax.while_loop(cond, body,
+                           (walk, visited, cur, length, done, overflow, key,
+                            jnp.int32(0))))
+    return walk, length, overflow, steps
+
+
+def sample_rrsets_lt(key, g_rev: CSRGraph, batch: int, qcap: int) -> LTSample:
+    n, m = g_rev.n_nodes, g_rev.n_edges
+    rowcum = row_cumweights(g_rev)
+    key, sub = jax.random.split(key)
+    roots = jax.random.randint(sub, (batch,), 0, n, dtype=jnp.int32)
+    nodes, lengths, overflowed, steps = _sample_lt(
+        key, g_rev.offsets, g_rev.indices, rowcum, roots,
+        batch=batch, qcap=qcap, n=n, m=m)
+    return LTSample(nodes=nodes, lengths=lengths, roots=roots,
+                    overflowed=overflowed, steps=steps)

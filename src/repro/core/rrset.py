@@ -1,0 +1,308 @@
+"""Queue-based RR-set engine — the gIM decomposition (paper Alg. 3/6), TPU-adapted.
+
+Parallel decomposition (see DESIGN.md §2):
+
+* gIM block  -> *lane*:    B RR sets sampled concurrently (vectorized batch dim)
+* gIM warp   -> *chunk*:   the current node's CSR row is processed EC edges per
+                           micro-step (EC=128 = VPU lane width; the paper's
+                           ``for i = tx; i < deg; i += N_th`` loop, Alg. 3 L16)
+* Q_shr+RR_tmp -> queue row: one fixed (Qcap,) row per lane.  In BFS the
+  dequeued prefix *is* the RR set, so gIM's three structures (shared queue,
+  reservoir, RR_tmp) collapse into one array + (head, tail) cursors.  Overflow
+  (paper Alg. 4's reservoir trigger) is counted, not spilled: `overflowed`
+  lanes are reported so callers can resample at larger Qcap (0 on all
+  benchmark workloads at the default Qcap).
+* Visited[n] byte array -> bit-packed (B, ceil(n/32)) uint32 (32x smaller).
+* atomic_enqueue -> in-chunk prefix-sum slot assignment + masked scatter.
+* curand        -> threefry key folded per micro-step (replay-deterministic).
+
+Intra-chunk duplicate hazard (paper §3.1): within one EC chunk the same
+destination may appear on several edges (multi-edges).  Each *edge* must get an
+independent Bernoulli trial, but the node must be enqueued at most once.  We
+therefore accept only the first successful occurrence per node per chunk
+(O(EC^2) vectorized first-occurrence mask), which composes with the visited-bit
+test-and-set across chunks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.csr import CSRGraph
+
+EC_DEFAULT = 128  # edge-chunk width (the paper's N_th=32, scaled to VPU lanes)
+
+
+class QueueSample(NamedTuple):
+    nodes: jnp.ndarray       # (B, Qcap) int32 — visit-order node ids per lane
+    lengths: jnp.ndarray     # (B,) int32 — RR-set sizes
+    roots: jnp.ndarray       # (B,) int32
+    overflowed: jnp.ndarray  # (B,) bool — lane hit Qcap (RR set truncated)
+    steps: jnp.ndarray       # () int32 — micro-steps executed
+
+
+def _bit_test(words, nodes):
+    """words: (B, W) uint32; nodes: (B, EC) int32 -> (B, EC) bool (bit set?)."""
+    w = nodes >> 5
+    b = (nodes & 31).astype(jnp.uint32)
+    got = jnp.take_along_axis(words, w, axis=1)
+    return ((got >> b) & jnp.uint32(1)) != 0
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("batch", "qcap", "ec", "n", "m"))
+def _sample_queue(key, offsets, indices, weights, roots, *,
+                  batch, qcap, ec, n, m):
+    n_words = (n + 31) // 32
+    lane = jnp.arange(batch, dtype=jnp.int32)
+    queue = jnp.zeros((batch, qcap), dtype=jnp.int32)
+    queue = queue.at[:, 0].set(roots)
+    visited = jnp.zeros((batch, n_words), dtype=jnp.uint32)
+    visited = visited.at[lane, roots >> 5].set(
+        jnp.left_shift(jnp.uint32(1), (roots & 31).astype(jnp.uint32)))
+    # init derived from `roots` so device-varying types propagate when the
+    # sampler runs inside shard_map (one lane batch per device)
+    qhead = jnp.zeros_like(roots)
+    qtail = jnp.ones_like(roots)
+    ecur = jnp.zeros_like(roots)
+    overflow = roots < 0
+    arange_ec = jnp.arange(ec, dtype=jnp.int32)
+
+    def cond(st):
+        _, _, qhead, qtail, _, _, _, _ = st
+        return (qhead < qtail).any()
+
+    def body(st):
+        queue, visited, qhead, qtail, ecur, overflow, key, step = st
+        active = qhead < qtail
+        u = queue[lane, jnp.clip(qhead, 0, qcap - 1)]            # current node
+        s = offsets[u]
+        deg = offsets[u + 1] - s
+        pos = ecur[:, None] + arange_ec[None, :]                 # (B, EC)
+        valid = (pos < deg[:, None]) & active[:, None]
+        eidx = jnp.clip(s[:, None] + pos, 0, m - 1)
+        nbr = indices[eidx]                                      # (B, EC)
+        pw = weights[eidx]
+        key, sub = jax.random.split(key)
+        urand = jax.random.uniform(sub, (batch, ec))
+        keep = (urand < pw) & valid                              # edge traversed
+        unseen = ~_bit_test(visited, nbr)
+        cand = keep & unseen
+        # first-occurrence-per-node mask within the chunk
+        same = nbr[:, :, None] == nbr[:, None, :]                # (B, EC, EC)
+        earlier = same & cand[:, None, :] & (
+            arange_ec[None, None, :] < arange_ec[None, :, None])
+        accept = cand & ~earlier.any(-1)
+        # slot assignment (the paper's atomic_enqueue, Alg. 3 L21)
+        slot = qtail[:, None] + jnp.cumsum(accept, axis=1) - 1
+        fits = slot < qcap
+        overflow = overflow | (accept & ~fits).any(axis=1)
+        acc = accept & fits
+        slot_m = jnp.where(acc, slot, qcap)                      # OOB -> dropped
+        queue = queue.at[lane[:, None], slot_m].set(nbr, mode="drop")
+        w_idx = jnp.where(acc, nbr >> 5, n_words)
+        bitval = jnp.where(
+            acc, jnp.left_shift(jnp.uint32(1), (nbr & 31).astype(jnp.uint32)),
+            jnp.uint32(0))
+        # accepted nodes are chunk-unique -> bits within a word are distinct,
+        # so scatter-add == scatter-or here
+        visited = visited.at[lane[:, None], w_idx].add(bitval, mode="drop")
+        qtail = qtail + acc.sum(axis=1, dtype=jnp.int32)
+        # advance the edge cursor / pop the node (Alg. 3 L12)
+        ecur2 = ecur + ec
+        row_done = ecur2 >= deg
+        qhead = jnp.where(active & row_done, qhead + 1, qhead)
+        ecur = jnp.where(active & ~row_done, ecur2, 0)
+        return queue, visited, qhead, qtail, ecur, overflow, key, step + 1
+
+    queue, visited, qhead, qtail, ecur, overflow, key, steps = (
+        jax.lax.while_loop(cond, body,
+                           (queue, visited, qhead, qtail, ecur, overflow, key,
+                            jnp.int32(0))))
+    return queue, qtail, overflow, steps
+
+
+def sample_rrsets_queue(key, g_rev: CSRGraph, batch: int, qcap: int,
+                        ec: int = EC_DEFAULT) -> QueueSample:
+    """Sample ``batch`` RR sets (one round) on the reverse CSR."""
+    n, m = g_rev.n_nodes, g_rev.n_edges
+    key, sub = jax.random.split(key)
+    roots = jax.random.randint(sub, (batch,), 0, n, dtype=jnp.int32)
+    nodes, lengths, overflowed, steps = _sample_queue(
+        key, g_rev.offsets, g_rev.indices, g_rev.weights, roots,
+        batch=batch, qcap=qcap, ec=ec, n=n, m=m)
+    return QueueSample(nodes=nodes, lengths=lengths, roots=roots,
+                       overflowed=overflowed, steps=steps)
+
+
+def to_lists(sample: QueueSample) -> list[list[int]]:
+    nodes = np.asarray(sample.nodes)
+    lens = np.asarray(sample.lengths)
+    return [nodes[i, :lens[i]].tolist() for i in range(nodes.shape[0])]
+
+
+# ---------------------------------------------------------------------------
+# Persistent-lane ("refill") engine — the paper's Alg. 6 worker structure.
+#
+# The round-based sampler above retires a whole batch before starting new
+# roots, so every lane waits for the round's largest RR set (measured lane
+# utilization ~21% on WC/BA workloads — see EXPERIMENTS.md §Perf/IM).  Here
+# a lane starts a new RR set the moment it finishes one, exactly like a gIM
+# block looping "repeat ... until N_RR >= theta"; RR sets append into a flat
+# per-lane output row (the paper's RR array + Offsets_RR).
+# ---------------------------------------------------------------------------
+
+class RefillSample(NamedTuple):
+    flat: jnp.ndarray      # (B, OutCap) int32 — concatenated RR sets
+    lengths: jnp.ndarray   # (B, sets_per_lane) int32 — per-set lengths
+    n_done: jnp.ndarray    # (B,) int32 — completed sets per lane
+    overflowed: jnp.ndarray  # (B,) bool — lane ran out of OutCap
+    steps: jnp.ndarray     # () int32
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("batch", "out_cap", "quota",
+                                    "max_sets_per_lane", "ec", "n", "m"))
+def _sample_refill(key, offsets, indices, weights, roots0, *,
+                   batch, out_cap, quota, max_sets_per_lane, ec, n, m):
+    n_words = (n + 31) // 32
+    lane = jnp.arange(batch, dtype=jnp.int32)
+    arange_ec = jnp.arange(ec, dtype=jnp.int32)
+    sets_per_lane = max_sets_per_lane
+
+    out = jnp.zeros((batch, out_cap), jnp.int32)
+    out = out.at[:, 0].set(roots0)
+    lengths = jnp.zeros((batch, sets_per_lane), jnp.int32)
+    visited = jnp.zeros((batch, n_words), jnp.uint32)
+    visited = visited.at[lane, roots0 >> 5].set(
+        jnp.left_shift(jnp.uint32(1), (roots0 & 31).astype(jnp.uint32)))
+    set_start = jnp.zeros_like(roots0)         # current set's base offset
+    qhead = jnp.zeros_like(roots0)             # read head (relative)
+    tail = jnp.ones_like(roots0)               # absolute write offset
+    ecur = jnp.zeros_like(roots0)
+    n_done = jnp.zeros_like(roots0)
+    overflow = roots0 < 0
+    in_set = roots0 >= 0            # lane currently building a set
+
+    def cond(st):
+        (_, _, _, _, _, _, _, _, overflow, in_set, _, _) = st
+        return (in_set & ~overflow).any()
+
+    def body(st):
+        (out, lengths, visited, set_start, qhead, tail, ecur, n_done,
+         overflow, in_set, key, step) = st
+        working = (n_done < sets_per_lane) & ~overflow & in_set
+        active = working & (set_start + qhead < tail)
+        u = out[lane, jnp.clip(set_start + qhead, 0, out_cap - 1)]
+        s = offsets[u]
+        deg = offsets[u + 1] - s
+        pos = ecur[:, None] + arange_ec[None, :]
+        valid = (pos < deg[:, None]) & active[:, None]
+        eidx = jnp.clip(s[:, None] + pos, 0, m - 1)
+        nbr = indices[eidx]
+        pw = weights[eidx]
+        key, sub = jax.random.split(key)
+        urand = jax.random.uniform(sub, (batch, ec))
+        keep = (urand < pw) & valid
+        unseen = ~_bit_test(visited, nbr)
+        cand = keep & unseen
+        same = nbr[:, :, None] == nbr[:, None, :]
+        earlier = same & cand[:, None, :] & (
+            arange_ec[None, None, :] < arange_ec[None, :, None])
+        accept = cand & ~earlier.any(-1)
+        slot = tail[:, None] + jnp.cumsum(accept, axis=1) - 1
+        fits = slot < out_cap
+        overflow = overflow | (accept & ~fits).any(axis=1)
+        acc = accept & fits
+        slot_m = jnp.where(acc, slot, out_cap)
+        out = out.at[lane[:, None], slot_m].set(nbr, mode="drop")
+        w_idx = jnp.where(acc, nbr >> 5, n_words)
+        bitval = jnp.where(
+            acc, jnp.left_shift(jnp.uint32(1), (nbr & 31).astype(jnp.uint32)),
+            jnp.uint32(0))
+        visited = visited.at[lane[:, None], w_idx].add(bitval, mode="drop")
+        tail = tail + acc.sum(axis=1, dtype=jnp.int32)
+        ecur2 = ecur + ec
+        row_done = ecur2 >= deg
+        qhead = jnp.where(active & row_done, qhead + 1, qhead)
+        ecur = jnp.where(active & ~row_done, ecur2, 0)
+        # --- lane refill: set finished when the read head catches the tail
+        finished = working & (set_start + qhead >= tail)
+        in_set = in_set & ~finished
+        set_len = tail - set_start
+        lengths = lengths.at[
+            lane, jnp.where(finished, jnp.clip(n_done, 0, sets_per_lane - 1),
+                            sets_per_lane)].set(set_len, mode="drop")
+        n_done = n_done + finished.astype(jnp.int32)
+        # global quota race (gIM Alg. 6: blocks loop until N_RR >= theta);
+        # in-flight sets always complete (no size-biased discarding),
+        # lanes just stop *starting* once the global count is met
+        quota_open = n_done.sum() < quota
+        more = finished & (n_done < sets_per_lane) & quota_open
+        # room check for the new root
+        has_room = tail < out_cap
+        overflow = overflow | (more & ~has_room)
+        start_new = more & has_room
+        key, sub = jax.random.split(key)
+        new_roots = jax.random.randint(sub, (batch,), 0, n, dtype=jnp.int32)
+        # clear this lane's visited set and seed the new root
+        visited = jnp.where(start_new[:, None], jnp.uint32(0), visited)
+        visited = visited.at[
+            lane, jnp.where(start_new, new_roots >> 5, n_words)].add(
+            jnp.where(start_new,
+                      jnp.left_shift(jnp.uint32(1),
+                                     (new_roots & 31).astype(jnp.uint32)),
+                      jnp.uint32(0)), mode="drop")
+        out = out.at[lane, jnp.where(start_new, tail, out_cap)].set(
+            new_roots, mode="drop")
+        set_start = jnp.where(start_new, tail, set_start)
+        qhead = jnp.where(start_new, 0, qhead)
+        ecur = jnp.where(start_new, 0, ecur)
+        tail = tail + start_new.astype(jnp.int32)
+        in_set = in_set | start_new
+        return (out, lengths, visited, set_start, qhead, tail, ecur,
+                n_done, overflow, in_set, key, step + 1)
+
+    st = (out, lengths, visited, set_start, qhead, tail, ecur, n_done,
+          overflow, in_set, key, jnp.int32(0))
+    (out, lengths, visited, set_start, qhead, tail, ecur, n_done, overflow,
+     in_set, key, steps) = jax.lax.while_loop(cond, body, st)
+    return out, lengths, n_done, overflow, steps
+
+
+def sample_rrsets_refill(key, g_rev: CSRGraph, batch: int,
+                         quota: int, out_cap: int,
+                         max_sets_per_lane: int | None = None,
+                         ec: int = EC_DEFAULT) -> RefillSample:
+    """Persistent-lane sampling with a global quota: lanes refill with new
+    roots until >= ``quota`` RR sets are complete across all lanes (the
+    paper's Alg. 6 worker loop); in-flight sets always finish (unbiased)."""
+    n, m = g_rev.n_nodes, g_rev.n_edges
+    if max_sets_per_lane is None:
+        max_sets_per_lane = max(4 * quota // batch + 4, 4)
+    key, sub = jax.random.split(key)
+    roots = jax.random.randint(sub, (batch,), 0, n, dtype=jnp.int32)
+    flat, lengths, n_done, overflow, steps = _sample_refill(
+        key, g_rev.offsets, g_rev.indices, g_rev.weights, roots,
+        batch=batch, out_cap=out_cap, quota=quota,
+        max_sets_per_lane=max_sets_per_lane, ec=ec, n=n, m=m)
+    return RefillSample(flat=flat, lengths=lengths, n_done=n_done,
+                        overflowed=overflow, steps=steps)
+
+
+def refill_to_lists(sample: RefillSample) -> list[list[int]]:
+    flat = np.asarray(sample.flat)
+    lengths = np.asarray(sample.lengths)
+    n_done = np.asarray(sample.n_done)
+    out = []
+    for b in range(flat.shape[0]):
+        off = 0
+        for i in range(int(n_done[b])):
+            ln = int(lengths[b, i])
+            out.append(flat[b, off:off + ln].tolist())
+            off += ln
+    return out

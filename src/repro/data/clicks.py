@@ -1,0 +1,22 @@
+"""Synthetic Criteo-like clickstream for DeepFM (deterministic per step)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.models.deepfm import DeepFMConfig
+
+
+def click_batch(step: int, cfg: DeepFMConfig, batch: int, seed: int = 0):
+    rng = np.random.default_rng(np.random.SeedSequence([seed, step]))
+    ids = np.zeros((batch, cfg.n_sparse), dtype=np.int64)
+    offsets = cfg.field_offsets
+    for f, v in enumerate(cfg.field_vocabs):
+        # zipf-ish skew within each field
+        r = np.minimum(rng.zipf(1.2, size=batch), v) - 1
+        ids[:, f] = offsets[f] + r
+    dense = rng.normal(size=(batch, cfg.n_dense_feats)).astype(np.float32)
+    # labels correlated with a hidden linear model over dense feats
+    w = np.random.default_rng(seed).normal(size=cfg.n_dense_feats)
+    p = 1.0 / (1.0 + np.exp(-(dense @ w)))
+    labels = (rng.random(batch) < p).astype(np.float32)
+    return ids.astype(np.int32), dense, labels

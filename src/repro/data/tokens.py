@@ -1,0 +1,57 @@
+"""Deterministic sharded synthetic LM data pipeline.
+
+Production properties kept: (a) per-(step, shard) deterministic batches —
+restart/elastic-safe (a resumed job at step t on any device count sees the
+same global batch); (b) zero host I/O (synthetic zipf-ish token stream keeps
+the loss landscape non-trivial); (c) double-buffered prefetch helper.
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def global_batch_at(step: int, *, global_batch: int, seq_len: int,
+                    vocab: int, seed: int = 0) -> np.ndarray:
+    """The full logical batch for a step (host, numpy).  Zipf-distributed
+    tokens with per-row Markov repetition so next-token prediction is
+    learnable."""
+    rng = np.random.default_rng(np.random.SeedSequence([seed, step]))
+    ranks = rng.zipf(1.3, size=(global_batch, seq_len)).astype(np.int64)
+    tokens = np.minimum(ranks, vocab - 1)
+    # inject learnable bigram structure: with p=0.5 repeat previous token
+    rep = rng.random((global_batch, seq_len)) < 0.5
+    for j in range(1, seq_len):
+        tokens[:, j] = np.where(rep[:, j], tokens[:, j - 1], tokens[:, j])
+    return tokens.astype(np.int32)
+
+
+def shard_for(step: int, shard: int, n_shards: int, **kw) -> np.ndarray:
+    """This shard's rows of the step's global batch."""
+    gb = global_batch_at(step, **kw)
+    rows = gb.shape[0] // n_shards
+    return gb[shard * rows:(shard + 1) * rows]
+
+
+def batch_stream(start_step: int, *, global_batch: int, seq_len: int,
+                 vocab: int, seed: int = 0) -> Iterator[np.ndarray]:
+    step = start_step
+    while True:
+        yield global_batch_at(step, global_batch=global_batch,
+                              seq_len=seq_len, vocab=vocab, seed=seed)
+        step += 1
+
+
+def prefetch(iterator, size: int = 2):
+    """Device-put ahead-of-use (double buffering)."""
+    import collections
+    buf = collections.deque()
+    for x in iterator:
+        buf.append(jax.device_put(x))
+        if len(buf) > size:
+            yield buf.popleft()
+    while buf:
+        yield buf.popleft()

@@ -1,0 +1,34 @@
+"""Elastic scaling: re-mesh a job onto a different device count.
+
+Checkpoints are host-unsharded (ckpt/checkpoint.py), so elasticity is:
+(1) detect the new device set, (2) build the largest valid mesh, (3) restore
+with the new shardings.  The IM pipeline is trivially elastic (stateless
+sampling + a global counter); training state re-shards through restore().
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+
+
+def best_mesh_shape(n_devices: int, *, model_parallel: int = 1):
+    """(data, model) factorization for an arbitrary device count."""
+    model = math.gcd(model_parallel, n_devices)
+    return (n_devices // model, model)
+
+
+def make_elastic_mesh(axis_names=("data", "model"), *, model_parallel: int = 1,
+                      devices=None):
+    devices = devices if devices is not None else jax.devices()
+    shape = best_mesh_shape(len(devices), model_parallel=model_parallel)
+    return jax.sharding.Mesh(
+        np.asarray(devices).reshape(shape), axis_names)
+
+
+def rebalance_rounds(total_sets: int, weights: np.ndarray) -> list[int]:
+    """Split a sampling quota across shards proportional to throughput."""
+    alloc = np.floor(total_sets * weights).astype(int)
+    alloc[np.argmax(weights)] += total_sets - alloc.sum()
+    return alloc.tolist()

@@ -1,0 +1,79 @@
+"""Fault-tolerance harness: failure injection, retrying step runner.
+
+On a real cluster, node failure surfaces as a distributed-runtime error on
+the jitted step; recovery = re-init the runtime on the surviving/replaced
+nodes and restore the latest checkpoint.  The control flow (run -> detect ->
+restore -> resume) is hardware-independent and is what we test here, with
+``FailureInjector`` standing in for the runtime error.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from repro.ckpt import checkpoint as ckpt
+
+
+class InjectedFailure(RuntimeError):
+    pass
+
+
+@dataclass
+class FailureInjector:
+    """Raises at configured step numbers (once each)."""
+    fail_at: set = field(default_factory=set)
+    fired: set = field(default_factory=set)
+
+    def check(self, step: int):
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise InjectedFailure(f"injected failure at step {step}")
+
+
+@dataclass
+class RunReport:
+    steps_run: int = 0
+    restarts: int = 0
+    restored_from: list = field(default_factory=list)
+    losses: list = field(default_factory=list)
+
+
+def resilient_loop(*, init_state_fn: Callable[[], tuple],
+                   step_fn: Callable, total_steps: int, ckpt_dir: str,
+                   ckpt_every: int = 10, keep: int = 3,
+                   injector: Optional[FailureInjector] = None,
+                   max_restarts: int = 10) -> RunReport:
+    """Checkpoint/restart training driver.
+
+    ``init_state_fn() -> (step, state)`` builds fresh state;
+    ``step_fn(step, state) -> (state, loss)`` runs one step.
+    On failure: restore latest checkpoint and continue.  Restore path uses
+    the same ``init_state_fn`` structure (mesh-agnostic host arrays).
+    """
+    report = RunReport()
+    restarts = 0
+    while True:
+        try:
+            latest = ckpt.latest_step(ckpt_dir)
+            step0, state = init_state_fn()
+            if latest is not None:
+                state = ckpt.restore(ckpt_dir, latest, state)
+                step0 = latest + 1
+                report.restored_from.append(latest)
+            step = step0
+            while step < total_steps:
+                if injector is not None:
+                    injector.check(step)
+                state, loss = step_fn(step, state)
+                report.losses.append(float(loss))
+                report.steps_run += 1
+                if (step + 1) % ckpt_every == 0 or step == total_steps - 1:
+                    ckpt.save(ckpt_dir, step, state, keep=keep)
+                step += 1
+            return report
+        except InjectedFailure:
+            restarts += 1
+            report.restarts = restarts
+            if restarts > max_restarts:
+                raise

@@ -1,0 +1,9 @@
+from repro.graph.csr import CSRGraph, from_edges, reverse, degrees
+from repro.graph.weights import wc_weights, uniform_weights, trivalency_weights
+from repro.graph import generators, sampler, partition
+
+__all__ = [
+    "CSRGraph", "from_edges", "reverse", "degrees",
+    "wc_weights", "uniform_weights", "trivalency_weights",
+    "generators", "sampler", "partition",
+]

@@ -1,0 +1,93 @@
+"""Compressed-sparse-row graph representation (paper §3.2, Fig. 1).
+
+The paper stores G as three arrays: row offsets ``R`` (n+1), column indices
+``C`` (m) and edge weights ``W`` (m), in input order (no pre-sorting).  We keep
+exactly that layout.  Construction happens host-side in numpy; the resulting
+arrays are ordinary jnp arrays usable inside jit/shard_map.
+
+RR-set sampling runs a randomized BFS on the *transposed* instance graph
+(paper §3.1), so :func:`reverse` builds the CSC/transpose with the original
+edge weight p_uv carried onto the reversed edge (v -> u).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+import jax.numpy as jnp
+
+
+class CSRGraph(NamedTuple):
+    """CSR adjacency. ``offsets[i]:offsets[i+1]`` indexes node i's out-edges."""
+
+    offsets: jnp.ndarray  # (n+1,) int32
+    indices: jnp.ndarray  # (m,)  int32
+    weights: jnp.ndarray  # (m,)  float32
+
+    @property
+    def n_nodes(self) -> int:
+        return int(self.offsets.shape[0]) - 1
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.indices.shape[0])
+
+    def out_degree(self):
+        return self.offsets[1:] - self.offsets[:-1]
+
+
+def from_edges(src, dst, n: int, weights=None, sort: bool = True) -> CSRGraph:
+    """Build CSR from an edge list (numpy, host-side).
+
+    ``sort=True`` groups edges by source (stable, preserving relative input
+    order within a row, matching the paper's no-reordering statement).
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    if src.shape != dst.shape:
+        raise ValueError("src/dst shape mismatch")
+    m = src.shape[0]
+    if weights is None:
+        weights = np.ones(m, dtype=np.float32)
+    weights = np.asarray(weights, dtype=np.float32)
+    if m and (src.min() < 0 or src.max() >= n or dst.min() < 0 or dst.max() >= n):
+        raise ValueError("edge endpoint out of range")
+    if sort and m:
+        order = np.argsort(src, kind="stable")
+        src, dst, weights = src[order], dst[order], weights[order]
+    counts = np.bincount(src, minlength=n).astype(np.int64)
+    offsets = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(counts, out=offsets[1:])
+    return CSRGraph(
+        offsets=jnp.asarray(offsets, dtype=jnp.int32),
+        indices=jnp.asarray(dst, dtype=jnp.int32),
+        weights=jnp.asarray(weights, dtype=jnp.float32),
+    )
+
+
+def to_edges(g: CSRGraph):
+    """Return (src, dst, w) numpy edge arrays."""
+    offsets = np.asarray(g.offsets, dtype=np.int64)
+    n = offsets.shape[0] - 1
+    src = np.repeat(np.arange(n, dtype=np.int64), np.diff(offsets))
+    return src, np.asarray(g.indices, dtype=np.int64), np.asarray(g.weights)
+
+
+def reverse(g: CSRGraph) -> CSRGraph:
+    """Transpose: edge (u,v,w) becomes (v,u,w).  RR sampling runs on this."""
+    src, dst, w = to_edges(g)
+    return from_edges(dst, src, g.n_nodes, weights=w)
+
+
+def degrees(g: CSRGraph):
+    """(out_degree, in_degree) as numpy int64 arrays."""
+    offsets = np.asarray(g.offsets, dtype=np.int64)
+    out_deg = np.diff(offsets)
+    in_deg = np.bincount(np.asarray(g.indices, dtype=np.int64),
+                         minlength=offsets.shape[0] - 1)
+    return out_deg, in_deg
+
+
+def max_out_degree(g: CSRGraph) -> int:
+    out_deg, _ = degrees(g)
+    return int(out_deg.max()) if out_deg.size else 0

@@ -1,0 +1,54 @@
+"""Fanout neighbor sampler (GraphSAGE-style) for the ``minibatch_lg`` shape.
+
+Produces fixed-shape "blocks" suitable for jit: for each layer l with fanout
+f_l, every frontier node samples exactly f_l neighbors *with replacement*
+(standard practice when degree < fanout; degree-0 nodes self-loop and are
+masked).  Aggregation in the model then runs child -> parent via
+``segment_sum`` on ``parent_idx``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.csr import CSRGraph
+
+
+class SampledBlock(NamedTuple):
+    nodes: jnp.ndarray        # (B_l,) int32 node ids of this layer's frontier
+    parent_idx: jnp.ndarray   # (B_l,) int32 index into previous layer's nodes
+    mask: jnp.ndarray         # (B_l,) bool — False for padded/self-loop entries
+
+
+class SampledSubgraph(NamedTuple):
+    seeds: jnp.ndarray              # (B,) int32
+    blocks: tuple[SampledBlock, ...]  # one per hop, outermost hop last
+
+
+def sample_neighbors(key, g: CSRGraph, frontier: jnp.ndarray, fanout: int) -> SampledBlock:
+    """Sample ``fanout`` in-row neighbors per frontier node, with replacement."""
+    deg = (g.offsets[frontier + 1] - g.offsets[frontier]).astype(jnp.int32)
+    B = frontier.shape[0]
+    r = jax.random.randint(key, (B, fanout), 0, jnp.maximum(deg, 1)[:, None])
+    edge_pos = g.offsets[frontier][:, None] + r
+    nbrs = jnp.where(deg[:, None] > 0, g.indices[edge_pos], frontier[:, None])
+    parent = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[:, None], (B, fanout))
+    mask = jnp.broadcast_to(deg[:, None] > 0, (B, fanout))
+    return SampledBlock(nodes=nbrs.reshape(-1).astype(jnp.int32),
+                        parent_idx=parent.reshape(-1),
+                        mask=mask.reshape(-1))
+
+
+def sample_subgraph(key, g: CSRGraph, seeds: jnp.ndarray,
+                    fanouts: Sequence[int]) -> SampledSubgraph:
+    """Multi-hop fanout sampling, e.g. fanouts=(15, 10) for minibatch_lg."""
+    blocks = []
+    frontier = seeds.astype(jnp.int32)
+    for i, f in enumerate(fanouts):
+        key, sub = jax.random.split(key)
+        blk = sample_neighbors(sub, g, frontier, f)
+        blocks.append(blk)
+        frontier = blk.nodes
+    return SampledSubgraph(seeds=seeds.astype(jnp.int32), blocks=tuple(blocks))

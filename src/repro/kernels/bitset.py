@@ -1,0 +1,142 @@
+"""Pallas TPU kernels for the bit-packed Visited structures (DESIGN.md §2).
+
+gIM keeps one byte-per-node ``Visited`` array per block in GPU global memory
+(§3.5 shows this dominating memory: 465 GB if naively replicated).  The TPU
+adaptation packs visited sets as (B, W=ceil(n/32)) uint32 — 32× smaller — and
+these kernels provide the hot bit-level ops:
+
+* :func:`pack_bits`       — (B, n) bool  -> (B, W) uint32
+* :func:`bitset_or`       — visited |= new       (elementwise tiles)
+* :func:`bitset_andnot`   — frontier = new & ~visited
+* :func:`popcount_words`  — per-word popcount (SWAR)
+* :func:`occur_from_bitset` — Occur[n] = Σ_lanes bit_v  (the paper's
+  atomicAdd(Occur) recast as a cross-lane bit-column reduction; grid
+  accumulates over lane blocks into one VMEM-resident histogram tile)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# ------------------------------------------------------------------ pack
+
+def _pack_kernel(bits_ref, words_ref):
+    bits = bits_ref[...]                       # (BB, n) bool
+    bb, n = bits.shape
+    w = n // 32
+    b3 = bits.reshape(bb, w, 32).astype(jnp.uint32)
+    shift = jax.lax.broadcasted_iota(jnp.uint32, (bb, w, 32), 2)
+    words_ref[...] = (b3 << shift).sum(axis=2).astype(jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def pack_bits(bits: jnp.ndarray, *, block_b: int = 8, interpret: bool = True):
+    b, n = bits.shape
+    if n % 32:
+        raise ValueError("n must be a multiple of 32 (pad first)")
+    bb = min(block_b, b)
+    return pl.pallas_call(
+        _pack_kernel,
+        grid=(pl.cdiv(b, bb),),
+        in_specs=[pl.BlockSpec((bb, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bb, n // 32), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n // 32), jnp.uint32),
+        interpret=interpret,
+    )(bits)
+
+
+# ------------------------------------------------------- elementwise pair
+
+def _or_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] | b_ref[...]
+
+
+def _andnot_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] & ~b_ref[...]
+
+
+def _binary_op(kernel, a, b, block_b, interpret):
+    bsz, w = a.shape
+    bb = min(block_b, bsz)
+    return pl.pallas_call(
+        kernel,
+        grid=(pl.cdiv(bsz, bb),),
+        in_specs=[pl.BlockSpec((bb, w), lambda i: (i, 0)),
+                  pl.BlockSpec((bb, w), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bb, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, w), jnp.uint32),
+        interpret=interpret,
+    )(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def bitset_or(a, b, *, block_b: int = 64, interpret: bool = True):
+    return _binary_op(_or_kernel, a, b, block_b, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def bitset_andnot(a, b, *, block_b: int = 64, interpret: bool = True):
+    """a & ~b."""
+    return _binary_op(_andnot_kernel, a, b, block_b, interpret)
+
+
+# -------------------------------------------------------------- popcount
+
+def _popcount(v: jnp.ndarray) -> jnp.ndarray:
+    """SWAR popcount on uint32."""
+    v = v - ((v >> 1) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> 2) & jnp.uint32(0x33333333))
+    v = (v + (v >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return (v * jnp.uint32(0x01010101)) >> 24
+
+
+def _popcount_kernel(w_ref, o_ref):
+    o_ref[...] = _popcount(w_ref[...]).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def popcount_words(words, *, block_b: int = 64, interpret: bool = True):
+    """Per-word popcount (e.g. RR-set sizes from packed membership)."""
+    b, w = words.shape
+    bb = min(block_b, b)
+    return pl.pallas_call(
+        _popcount_kernel,
+        grid=(pl.cdiv(b, bb),),
+        in_specs=[pl.BlockSpec((bb, w), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bb, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, w), jnp.int32),
+        interpret=interpret,
+    )(words)
+
+
+# ------------------------------------------------------ occur histogram
+
+def _occur_kernel(words_ref, occur_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        occur_ref[...] = jnp.zeros_like(occur_ref)
+
+    words = words_ref[...]                       # (BB, W)
+    bb, w = words.shape
+    shift = jax.lax.broadcasted_iota(jnp.uint32, (bb, w, 32), 2)
+    bits = ((words[:, :, None] >> shift) & jnp.uint32(1)).astype(jnp.int32)
+    occur_ref[...] += bits.sum(axis=0).reshape(w * 32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def occur_from_bitset(words, *, block_b: int = 8, interpret: bool = True):
+    """Occur[v] = number of lanes with bit v set.  Output length W*32."""
+    b, w = words.shape
+    bb = min(block_b, b)
+    return pl.pallas_call(
+        _occur_kernel,
+        grid=(pl.cdiv(b, bb),),
+        in_specs=[pl.BlockSpec((bb, w), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((w * 32,), lambda i: (0,)),  # accumulated
+        out_shape=jax.ShapeDtypeStruct((w * 32,), jnp.int32),
+        interpret=interpret,
+    )(words)

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: flash attention (tiled online-softmax, §Perf/H6).
+
+The TPU-target counterpart of ``models/attention.py::sdpa_chunked``: the
+S² logits never leave VMEM.  Grid = (batch·heads, Sq/bq, Sk/bk); the last
+grid axis streams KV tiles while (m, l, acc) accumulate in VMEM scratch —
+the standard Flash-Attention-2 recurrence mapped onto Mosaic's revisiting
+output blocks.
+
+Causal masking is positional (global indices reconstructed from the grid),
+matching `_sdpa`'s semantics for a full (non-cached) sequence.  Validated
+in interpret mode against the pure-jnp oracle across shapes/dtypes
+(tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+                  scale: float, bq: int, bk: int, n_k: int, causal: bool):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, -1e30)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0].astype(jnp.float32)              # (bq, d)
+    k = k_ref[0].astype(jnp.float32)              # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ()))) * scale   # (bq, bk)
+    if causal:
+        qi = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        ki = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        logits = jnp.where(qi >= ki, logits, -1e30)
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, logits.max(axis=1))
+    p = jnp.exp(logits - m_new[:, None])
+    if causal:
+        p = jnp.where(qi >= ki, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_s[...] = l_s[...] * corr + p.sum(axis=1)
+    acc_s[...] = acc_s[...] * corr[:, None] + p @ v
+    m_s[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        denom = jnp.maximum(l_s[...], 1e-20)[:, None]
+        o_ref[0] = (acc_s[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,
+                    bk: int = 128, interpret: bool = True):
+    """q, k, v: (B, S, H, D) with equal H (repeat KV beforehand for GQA).
+    Returns (B, S, H, D).  Full-sequence causal attention."""
+    b, s, h, d = q.shape
+    bq = min(bq, s)
+    bk = min(bk, s)
+    if s % bq or s % bk:
+        raise ValueError("S must be a multiple of the block sizes")
+    import math
+    scale = 1.0 / math.sqrt(d)
+    # (B*H, S, D) layout
+    qr = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    n_q, n_k = s // bq, s // bk
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, bq=bq, bk=bk,
+                          n_k=n_k, causal=causal),
+        grid=(b * h, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, i, j: (bh, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, i, j: (bh, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)

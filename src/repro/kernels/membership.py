@@ -1,0 +1,53 @@
+"""Pallas TPU kernel: RR-set membership scan (paper Alg. 7, lines 3-10).
+
+Given the padded RR matrix ``rows`` (R, L) and the newly selected seed ``u``,
+produce ``hit[r] = any(rows[r, :len_r] == u)`` — the per-RR "does this set
+contain the seed" flag that drives Covered marking and Occur decrement.
+
+TPU adaptation of gIM's flat-array warp scan: the GPU handles ragged rows with
+a thread-strided loop; TPU wants rectangular VMEM tiles, so RR sets live in a
+(R, L) padded matrix and the scan is a masked equality + row-reduction over
+lane-aligned tiles.  Block shape (BR, L): L is the padded row length (kept a
+multiple of 128 lanes); BR rows per grid step.
+
+The seed u and the true lengths arrive as SMEM operands (scalars / small
+vectors), the row payload streams through VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _membership_kernel(u_ref, rows_ref, len_ref, hit_ref):
+    u = u_ref[0]
+    rows = rows_ref[...]                      # (BR, L) int32
+    br, l = rows.shape
+    lane = jax.lax.broadcasted_iota(jnp.int32, (br, l), 1)
+    valid = lane < len_ref[...][:, None]
+    match = (rows == u) & valid
+    hit_ref[...] = match.any(axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def membership_rows(rows: jnp.ndarray, lengths: jnp.ndarray, u: jnp.ndarray,
+                    *, block_rows: int = 256, interpret: bool = True):
+    """hit (R,) bool — which padded RR rows contain node u."""
+    r, l = rows.shape
+    br = min(block_rows, r)
+    grid = (pl.cdiv(r, br),)
+    return pl.pallas_call(
+        _membership_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),       # u (scalar operand)
+            pl.BlockSpec((br, l), lambda i: (i, 0)),  # RR row tile -> VMEM
+            pl.BlockSpec((br,), lambda i: (i,)),      # lengths
+        ],
+        out_specs=pl.BlockSpec((br,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((r,), jnp.bool_),
+        interpret=interpret,
+    )(jnp.asarray(u, jnp.int32).reshape(1), rows, lengths)

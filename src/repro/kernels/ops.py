@@ -1,0 +1,62 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True everywhere in this repo (CPU container); on a
+real TPU deployment set ``repro.kernels.ops.INTERPRET = False`` (or pass
+explicitly) and the same BlockSpecs compile to Mosaic.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import membership as _membership
+from repro.kernels import bernoulli as _bernoulli
+from repro.kernels import bitset as _bitset
+
+INTERPRET = True
+
+
+def membership_rows(rows, lengths, u, *, block_rows: int = 256,
+                    interpret: bool | None = None):
+    return _membership.membership_rows(
+        rows, lengths, u, block_rows=block_rows,
+        interpret=INTERPRET if interpret is None else interpret)
+
+
+def bernoulli_edges(weights, seed, *, block: int = 1024,
+                    interpret: bool | None = None):
+    return _bernoulli.bernoulli_edges(
+        weights, seed, block=block,
+        interpret=INTERPRET if interpret is None else interpret)
+
+
+def pack_bits(bits, *, interpret: bool | None = None):
+    return _bitset.pack_bits(
+        bits, interpret=INTERPRET if interpret is None else interpret)
+
+
+def bitset_or(a, b, *, interpret: bool | None = None):
+    return _bitset.bitset_or(
+        a, b, interpret=INTERPRET if interpret is None else interpret)
+
+
+def bitset_andnot(a, b, *, interpret: bool | None = None):
+    return _bitset.bitset_andnot(
+        a, b, interpret=INTERPRET if interpret is None else interpret)
+
+
+def popcount_words(words, *, interpret: bool | None = None):
+    return _bitset.popcount_words(
+        words, interpret=INTERPRET if interpret is None else interpret)
+
+
+def occur_from_bitset(words, *, interpret: bool | None = None):
+    return _bitset.occur_from_bitset(
+        words, interpret=INTERPRET if interpret is None else interpret)
+
+
+def flash_attention(q, k, v, *, causal=True, bq=128, bk=128,
+                    interpret: bool | None = None):
+    from repro.kernels import flashattn as _fa
+    return _fa.flash_attention(
+        q, k, v, causal=causal, bq=bq, bk=bk,
+        interpret=INTERPRET if interpret is None else interpret)

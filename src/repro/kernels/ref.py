@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel (bit-exact where applicable)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_M1 = jnp.uint32(0x85EBCA6B)
+_M2 = jnp.uint32(0xC2B2AE35)
+_GOLDEN = jnp.uint32(0x9E3779B9)
+
+
+def membership_rows_ref(rows, lengths, u):
+    lane = jnp.arange(rows.shape[1], dtype=jnp.int32)[None, :]
+    valid = lane < lengths[:, None]
+    return ((rows == jnp.int32(u)) & valid).any(axis=1)
+
+
+def _hash_mix(x):
+    x = x ^ (x >> 16)
+    x = x * _M1
+    x = x ^ (x >> 13)
+    x = x * _M2
+    x = x ^ (x >> 16)
+    return x
+
+
+def counter_uniform_u32_ref(seed, counter):
+    x = counter.astype(jnp.uint32) * _GOLDEN + jnp.uint32(seed)
+    return _hash_mix(_hash_mix(x) ^ _GOLDEN)
+
+
+def bernoulli_edges_ref(weights, seed):
+    idx = jnp.arange(weights.shape[0], dtype=jnp.uint32)
+    bits = counter_uniform_u32_ref(seed, idx)
+    u01 = bits.astype(jnp.float32) * jnp.float32(2.0 ** -32)
+    return u01 < weights.astype(jnp.float32)
+
+
+def pack_bits_ref(bits):
+    b, n = bits.shape
+    b3 = bits.reshape(b, n // 32, 32).astype(jnp.uint32)
+    shift = jnp.arange(32, dtype=jnp.uint32)[None, None, :]
+    return (b3 << shift).sum(axis=2).astype(jnp.uint32)
+
+
+def bitset_or_ref(a, b):
+    return a | b
+
+
+def bitset_andnot_ref(a, b):
+    return a & ~b
+
+
+def popcount_words_ref(words):
+    v = words
+    v = v - ((v >> 1) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> 2) & jnp.uint32(0x33333333))
+    v = (v + (v >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return (((v * jnp.uint32(0x01010101)) >> 24)).astype(jnp.int32)
+
+
+def occur_from_bitset_ref(words):
+    b, w = words.shape
+    shift = jnp.arange(32, dtype=jnp.uint32)[None, None, :]
+    bits = ((words[:, :, None] >> shift) & jnp.uint32(1)).astype(jnp.int32)
+    return bits.sum(axis=0).reshape(w * 32)
+
+
+def flash_attention_ref(q, k, v, causal=True):
+    """Full-materialization oracle for the flash kernel (B,S,H,D)."""
+    import math
+    b, s, h, d = q.shape
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(d)
+    if causal:
+        qi = jnp.arange(s)[:, None]
+        ki = jnp.arange(s)[None, :]
+        logits = jnp.where(qi >= ki, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,190 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  Everything below may touch jax.
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production meshes, record memory/cost/collective analysis per cell.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh single --arch qwen2-0.5b
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # every cell
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh multi
+
+Results cache to experiments/dryrun/<arch>__<shape>__<mesh>.json; re-runs
+skip cells that already succeeded (delete the file to force).
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import registry, specs
+from repro.configs.shapes import cells
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import cell_shardings
+from repro import roofline as rl
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def out_path(arch, shape, mesh_kind, opt=False):
+    sfx = "__opt" if opt else ""
+    return os.path.join(OUT_DIR, f"{arch}__{shape}__{mesh_kind}{sfx}.json")
+
+
+def _compile_cost(arch, shape_id, mesh, mesh_axes, cfg):
+    """flops / bytes-accessed of one probe config (unrolled layers)."""
+    step, args, meta = specs.build_cell(arch, shape_id, mesh_axes=mesh_axes,
+                                        cfg_override=cfg)
+    in_sh = cell_shardings(arch, shape_id, args, meta, mesh)
+    in_sh = jax.tree_util.tree_map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), in_sh,
+        is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec))
+    with mesh:
+        cost = (jax.jit(step, in_shardings=in_sh).lower(*args)
+                .compile().cost_analysis()) or {}
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)))
+
+
+def lm_corrected_cost(arch, shape_id, mesh, mesh_axes, cfg):
+    """True per-step flops/bytes: XLA cost analysis counts while bodies
+    once, so probe with 1-2 *unrolled* layers and extrapolate linearly to
+    the full depth (exact for homogeneous scan blocks)."""
+    import dataclasses as dc
+    if cfg.moe is not None and cfg.n_dense_layers > 0:
+        nd, nm = cfg.n_dense_layers, cfg.n_layers - cfg.n_dense_layers
+        p1 = _compile_cost(arch, shape_id, mesh, mesh_axes,
+                           dc.replace(cfg, n_layers=2, n_dense_layers=1,
+                                      unroll=True))
+        p2 = _compile_cost(arch, shape_id, mesh, mesh_axes,
+                           dc.replace(cfg, n_layers=3, n_dense_layers=2,
+                                      unroll=True))
+        p3 = _compile_cost(arch, shape_id, mesh, mesh_axes,
+                           dc.replace(cfg, n_layers=3, n_dense_layers=1,
+                                      unroll=True))
+        fd = tuple(b - a for a, b in zip(p1, p2))
+        fm = tuple(b - a for a, b in zip(p1, p3))
+        base = tuple(a - d - m for a, d, m in zip(p1, fd, fm))
+        return tuple(b + nd * d + nm * m
+                     for b, d, m in zip(base, fd, fm))
+    ltot = cfg.n_layers
+    p1 = _compile_cost(arch, shape_id, mesh, mesh_axes,
+                       dc.replace(cfg, n_layers=1, unroll=True))
+    p2 = _compile_cost(arch, shape_id, mesh, mesh_axes,
+                       dc.replace(cfg, n_layers=2, unroll=True))
+    per = tuple(b - a for a, b in zip(p1, p2))
+    return tuple(a + (ltot - 1) * d for a, d in zip(p1, per))
+
+
+def run_cell(arch: str, shape_id: str, mesh_kind: str,
+             opt: bool = False) -> dict:
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    chips = 512 if multi else 256
+    dp = ("pod", "data") if multi else ("data",)
+    step, args, meta = specs.build_cell(arch, shape_id,
+                                        mesh_axes=(dp, "model"), opt=opt)
+    in_sh = cell_shardings(arch, shape_id, args, meta, mesh)
+    in_sh = jax.tree_util.tree_map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), in_sh,
+        is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec))
+    rec = dict(arch=arch, shape=shape_id, mesh=mesh_kind, chips=chips,
+               kind=meta["kind"], opt=opt, ok=False)
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(step, in_shardings=in_sh).lower(*args)
+        rec["t_lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["t_compile_s"] = round(time.time() - t1, 1)
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem,
+                                            "generated_code_size_in_bytes",
+                                            None),
+        }
+        cost = compiled.cost_analysis() or {}
+        rec["cost"] = {k: float(v) for k, v in cost.items()
+                       if isinstance(v, (int, float))}
+        hlo = compiled.as_text()
+        model_flops = None
+        if registry.family_of(arch) == "lm":
+            from repro.configs.shapes import LM_SHAPES
+            sh = LM_SHAPES[shape_id]
+            tokens = (sh["global_batch"] * sh["seq_len"]
+                      if meta["kind"] in ("train", "prefill")
+                      else sh["global_batch"])
+            model_flops = rl.lm_model_flops(
+                meta["cfg"], tokens, training=meta["kind"] == "train")
+        # scan-aware HLO cost (XLA cost analysis counts loop bodies once)
+        cflops, cbytes = rl.hlo_cost(hlo)
+        rec["cost_raw"] = {"flops": cost.get("flops"),
+                           "bytes accessed": cost.get("bytes accessed")}
+        cost = dict(cost)
+        cost["flops"] = cflops
+        cost["bytes accessed"] = cbytes
+        roof = rl.roofline_from(cost, hlo, chips=chips,
+                                model_flops=model_flops)
+        rec["roofline"] = roof.to_dict()
+        rec["ok"] = True
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--opt", action="store_true",
+                    help="apply the beyond-baseline optimizations")
+    args = ap.parse_args()
+    os.makedirs(OUT_DIR, exist_ok=True)
+
+    todo = cells() if args.all or args.arch is None else [
+        (args.arch, s) for a, s in cells()
+        if a == args.arch and (args.shape is None or s == args.shape)]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    n_ok = n_fail = n_skip = 0
+    for mesh_kind in meshes:
+        for arch, shape_id in todo:
+            path = out_path(arch, shape_id, mesh_kind, args.opt)
+            if os.path.exists(path) and not args.force:
+                with open(path) as f:
+                    if json.load(f).get("ok"):
+                        n_skip += 1
+                        continue
+            print(f"[dryrun] {arch} x {shape_id} x {mesh_kind} ...",
+                  flush=True)
+            try:
+                rec = run_cell(arch, shape_id, mesh_kind, opt=args.opt)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                rec = dict(arch=arch, shape=shape_id, mesh=mesh_kind,
+                           ok=False, error=f"{type(e).__name__}: {e}",
+                           traceback=traceback.format_exc()[-4000:])
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            if rec["ok"]:
+                n_ok += 1
+                r = rec["roofline"]
+                print(f"    ok  compile={rec['t_compile_s']}s "
+                      f"dominant={r['dominant']} "
+                      f"t=(c {r['t_compute']:.2e}, m {r['t_memory']:.2e}, "
+                      f"x {r['t_collective']:.2e})", flush=True)
+            else:
+                n_fail += 1
+                print(f"    FAIL {rec.get('error', '')[:300]}", flush=True)
+    print(f"[dryrun] done ok={n_ok} fail={n_fail} skipped={n_skip}")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,21 @@
+"""Production mesh builders (functions, never module-level constants —
+importing this module must not touch jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips for the multi-pod run."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Batch-sharding axes: ('pod','data') on the multi-pod mesh."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def all_axes(mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)

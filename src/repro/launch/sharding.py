@@ -1,0 +1,188 @@
+"""Sharding rules: param/state pytree -> PartitionSpec trees per family.
+
+Scheme (single pod mesh = (data=16, model=16); multi-pod adds a leading
+'pod' axis that shards only the batch — pure DP across pods):
+
+* LM params: FSDP over 'data' + TP over 'model':
+    wq/wk/wv/w_gate/w_up : (L, D, F)   -> (None, data, model)
+    wo/w_down            : (L, F, D)   -> (None, model, data)
+    MoE experts          : (L, E, D, F)-> (None, model(EP), data, None)
+    embed                : (V, D)      -> (model, None)
+  int8 optimizer states: q shards exactly like its param (shape-preserving
+  quantization); block scales use the param spec with the last axis
+  replicated (they are 1/block the size).
+* LM batch: tokens (B, S) -> ((pod, data), None).
+* decode caches: batch over (pod, data) when B > 1, else the KV sequence
+  axis over (data, model) — the long-context 500k layout.
+* GNN: params replicated (they are tiny vs. the graph); nodes/edges sharded
+  over all mesh axes.
+* recsys: embedding tables row-sharded over 'model' (EP-style), batch over
+  (pod, data); retrieval candidates over all axes.
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import data_axes, all_axes
+
+
+# ------------------------------------------------------------- LM params
+
+def lm_param_spec(path: str, ndim: int, dx: str | tuple, mx: str):
+    """dx: FSDP axis name(s); mx: tensor axis name."""
+    stacked = "block" in path
+
+    def wrap(*spec):
+        return P(None, *spec) if stacked else P(*spec)
+
+    if "embed" in path:
+        return P(mx, None)
+    if "lm_head" in path:
+        return P(None, mx)
+    if "mtp_proj" in path:
+        return P(dx, mx) if path.endswith("'w']") else P(mx)
+    if "norm" in path:
+        return P(*([None] * ndim))
+    if "experts" in path:
+        if "w_down" in path:
+            return wrap(mx, None, dx)
+        return wrap(mx, dx, None)          # w_gate / w_up
+    if "router" in path:
+        return wrap(dx, None)
+    if re.search(r"w(q|k|v)'\]\['b", path) or "]['b']" in path:
+        # biases: (L, F) where F followed the 'model'-sharded output dim
+        if "wo" in path or "w_down" in path:
+            return wrap(dx)
+        return wrap(mx)
+    if any(t in path for t in ("wq_down", "wq_up", "wk_up", "wv_up")):
+        return wrap(dx, mx)
+    if "wkv_down" in path:
+        return wrap(dx, None)
+    if any(t in path for t in ("wo", "w_down")):
+        return wrap(mx, dx)
+    if any(t in path for t in ("wq", "wk", "wv", "w_gate", "w_up")):
+        return wrap(dx, mx)
+    # default: replicate
+    return P(*([None] * ndim))
+
+
+def _strip_opt_prefix(path: str):
+    """'.opt.m[...]' / '.opt.v[...][0|1]' -> (param_path, which) where
+    which in {None, 'q', 'scale'}."""
+    m = re.match(r"^\.opt\.(m|v)(.*)$", path)
+    if not m:
+        return None, None
+    rest = m.group(2)
+    tup = re.search(r"\[([01])\]$", rest)
+    if tup:
+        return rest[: tup.start()], ("q" if tup.group(1) == "0" else "scale")
+    return rest, None
+
+
+def lm_state_specs(state_shapes, mesh):
+    """PartitionSpec pytree matching a TrainState (or bare params dict).
+
+    FSDP axis = every batch axis: ('pod','data') on the multi-pod mesh, so
+    ZeRO-3 sharding spans pods and per-chip bytes halve at 2 pods."""
+    dx = data_axes(mesh)
+    dx = dx[0] if len(dx) == 1 else dx
+    mx = "model"
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state_shapes)
+    specs = []
+    for kp, leaf in flat:
+        path = jax.tree_util.keystr(kp)
+        ndim = len(leaf.shape)
+        if path.endswith(".step") or path == ".step":
+            specs.append(P())
+            continue
+        ppath, which = _strip_opt_prefix(path)
+        if ppath is None:
+            # raw param leaf (".params[...]" or a bare dict)
+            spec = lm_param_spec(path, ndim, dx, mx)
+        else:
+            spec = lm_param_spec(ppath, ndim if which != "scale" else
+                                 ndim, dx, mx)
+            if which == "scale":
+                spec = P(*(list(spec)[:-1] + [None])) if len(spec) else P()
+        if len(spec) > ndim:
+            spec = P(*list(spec)[:ndim])
+        specs.append(spec)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# --------------------------------------------------------------- caches
+
+def lm_cache_specs(cache_shapes, mesh):
+    """BlockCache list: batch-shard when B>1, sequence-shard when B==1."""
+    da = data_axes(mesh)
+
+    def one(leaf):
+        shape = leaf.shape            # (L, B, S, ...) or pos (L, B, S)
+        b = shape[1]
+        if b > 1:
+            return P(None, da, *([None] * (len(shape) - 2)))
+        return P(None, None, ("data", "model"),
+                 *([None] * (len(shape) - 3)))
+
+    return jax.tree_util.tree_map(one, cache_shapes)
+
+
+# ------------------------------------------------------------ full cells
+
+def cell_shardings(arch_id, shape_id, args, meta, mesh):
+    """in_shardings tuple matching build_cell's args."""
+    from repro.configs import registry
+    fam = registry.family_of(arch_id)
+    da = data_axes(mesh)
+    aa = all_axes(mesh)
+    kind = meta["kind"]
+    if fam == "lm":
+        if kind == "train":
+            state, tokens = args
+            return (lm_state_specs(state, mesh), P(da, None))
+        if kind == "prefill":
+            params, tokens = args
+            return (lm_state_specs(params, mesh), P(da, None))
+        params, tok, caches, pos = args
+        tok_spec = P(da, None) if tok.shape[0] > 1 else P(None, None)
+        return (lm_state_specs(params, mesh), tok_spec,
+                lm_cache_specs(caches, mesh), P())
+    if fam == "gnn":
+        state = args[0]
+        state_spec = jax.tree_util.tree_map(
+            lambda l: P(*([None] * len(l.shape))), state)
+        if shape_id == "molecule":
+            # (state, xb, srcb, dstb, maskb, labels, coordsb): batch-sharded
+            return (state_spec, P(da, None, None), P(da, None), P(da, None),
+                    P(da, None), P(da), P(da, None, None))
+        # node/edge arrays sharded over every axis
+        return (state_spec, P(aa, None), P(aa), P(aa), P(aa), P(aa),
+                P(aa, None))
+    # recsys
+    if kind == "train":
+        state, ids, dx_, lb = args
+        return (_deepfm_state_specs(state, mesh), P(da, None), P(da, None),
+                P(da))
+    if kind == "serve":
+        params, ids, dx_ = args
+        return (_deepfm_state_specs(params, mesh), P(da, None), P(da, None))
+    return (P(), P(aa, None))    # retrieval: query replicated, cands sharded
+
+
+def _deepfm_state_specs(state_shapes, mesh):
+    def spec_for(path, leaf):
+        ndim = len(leaf.shape)
+        if "embed" in path or path.endswith("['lin']") or "'lin'" in path:
+            return P("model", *([None] * (ndim - 1)))
+        if path.endswith("step") :
+            return P()
+        return P(*([None] * ndim))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state_shapes)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_for(jax.tree_util.keystr(kp), leaf)
+                  for kp, leaf in flat])

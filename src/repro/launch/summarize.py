@@ -1,0 +1,85 @@
+"""Render experiments/dryrun/*.json into the EXPERIMENTS.md tables.
+
+    PYTHONPATH=src python -m repro.launch.summarize [--mesh single]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+DRY = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                   "experiments", "dryrun")
+
+
+def load(mesh=None):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(DRY, "*.json"))):
+        r = json.load(open(p))
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b / 2**30:.2f}"
+
+
+def roofline_table(recs) -> str:
+    hdr = ("| arch | shape | mesh | opt | t_comp (s) | t_mem (s) | "
+           "t_coll (s) | dominant | roofline frac | useful FLOPs | "
+           "wire GB/chip |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for r in recs:
+        if not r.get("ok"):
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"FAIL | | | | | | |")
+            continue
+        rf = r["roofline"]
+        tmax = max(rf["t_compute"], rf["t_memory"], rf["t_collective"])
+        frac = rf["t_compute"] / tmax if tmax > 0 else 0.0
+        useful = (f"{rf['useful_flops_ratio']:.2f}"
+                  if rf.get("useful_flops_ratio") else "-")
+        opt = "opt" if r.get("opt") else "base"
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {opt} | "
+            f"{rf['t_compute']:.3e} | {rf['t_memory']:.3e} | "
+            f"{rf['t_collective']:.3e} | {rf['dominant']} | {frac:.3f} | "
+            f"{useful} | {rf['wire_bytes_per_chip'] / 1e9:.1f} |")
+    return hdr + "\n".join(rows)
+
+
+def memory_table(recs) -> str:
+    hdr = ("| arch | shape | mesh | args GiB/chip | temp GiB/chip | "
+           "out GiB/chip | compile s |\n|---|---|---|---|---|---|---|\n")
+    rows = []
+    for r in recs:
+        if not r.get("ok"):
+            continue
+        m = r["memory"]
+        rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                    f"{fmt_bytes(m['argument_bytes'])} | "
+                    f"{fmt_bytes(m['temp_bytes'])} | "
+                    f"{fmt_bytes(m['output_bytes'])} | "
+                    f"{r.get('t_compile_s', '-')} |")
+    return hdr + "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    recs = load(args.mesh)
+    print("## Roofline\n")
+    print(roofline_table(recs))
+    print("\n## Dry-run memory\n")
+    print(memory_table(recs))
+
+
+if __name__ == "__main__":
+    main()

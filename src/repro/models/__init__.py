@@ -1,0 +1,4 @@
+from repro.models import layers, attention, moe, transformer, gnn, deepfm, embedding
+
+__all__ = ["layers", "attention", "moe", "transformer", "gnn", "deepfm",
+           "embedding"]

@@ -1,0 +1,271 @@
+"""Attention variants: GQA (opt. QKV bias / sliding window) and MLA.
+
+All functions are pure; the causal/window masks are built from positions so
+the same code serves train (full seq), prefill, and single-token decode with a
+KV cache (mask over cache positions).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init
+
+
+# --------------------------------------------------------------------- GQA
+
+def gqa_init(key, d_model, n_heads, n_kv_heads, head_dim, *, qkv_bias=False,
+             dtype=jnp.float32):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, d_model, n_heads * head_dim, bias=qkv_bias,
+                         dtype=dtype),
+        "wk": dense_init(kk, d_model, n_kv_heads * head_dim, bias=qkv_bias,
+                         dtype=dtype),
+        "wv": dense_init(kv, d_model, n_kv_heads * head_dim, bias=qkv_bias,
+                         dtype=dtype),
+        "wo": dense_init(ko, n_heads * head_dim, d_model, dtype=dtype),
+    }
+
+
+def _sdpa(q, k, v, q_pos, k_pos, window, softmax_scale, shard=None):
+    """q:(B,Sq,H,D) k,v:(B,Sk,Hkv,D); causal + optional window.
+
+    GQA is computed repeat-KV style (K/V expanded to H heads) so the head
+    dim stays a single shardable axis — the Megatron rule for tp > n_kv
+    (KV duplicated across the TP group instead of sharding the contraction,
+    which would all-reduce S² logits).  ``window < 0`` = global attention.
+    ``shard``: optional (dp_axes, tp_axis, tp_size) activation constraints.
+    """
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    group = h // hkv
+    causal = q_pos[:, None, :] >= k_pos[:, :, None]              # (B, Sk, Sq)
+    if window is not None:
+        in_win = (q_pos[:, None, :] - k_pos[:, :, None]) < window
+        win_mask = jnp.where(window < 0, causal, causal & in_win)
+    else:
+        win_mask = causal
+    mask = win_mask.transpose(0, 2, 1)                           # (B, Sq, Sk)
+
+    # Single-token decode, or no TP context: grouped einsum (no KV repeat,
+    # KV keeps its input sharding — critical for sequence-sharded caches).
+    if shard is None or sq == 1:
+        qg = q.reshape(b, sq, hkv, group, d)
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k)
+        logits = logits.astype(jnp.float32) * softmax_scale
+        logits = jnp.where(mask[:, None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+        return out.reshape(b, sq, h, d)
+
+    # Train/prefill with TP: repeat-KV (Megatron rule for tp > n_kv) so the
+    # head dim is a single shardable axis.
+    if group > 1:
+        k = jnp.repeat(k, group, axis=2)
+        v = jnp.repeat(v, group, axis=2)
+
+    def con(x):
+        dp, tp, tp_size = shard
+        if dp is None:
+            return x
+        head_ax = tp if (tp is not None and h % tp_size == 0) else None
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(x, P(dp, None, head_ax,
+                                                     None))
+
+    q, k, v = con(q), con(k), con(v)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    logits = logits * softmax_scale
+    logits = jnp.where(mask[:, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    return con(out)
+
+
+def gqa_apply(p, x, positions, *, n_heads, n_kv_heads, head_dim,
+              rope_theta=10000.0, window=None, cache=None, shard=None,
+              chunk=None):
+    """cache: optional (k (B,S,Hkv,D), v (B,S,Hkv,D), k_pos (B,S)).
+    Returns (out, new_cache).  shard: (dp_axes, tp_axis, tp_size);
+    chunk: flash-style chunked attention block size (§Perf/H6)."""
+    from repro.models.layers import dense
+    b, s, _ = x.shape
+    q = dense(p["wq"], x).reshape(b, s, n_heads, head_dim)
+    k = dense(p["wk"], x).reshape(b, s, n_kv_heads, head_dim)
+    v = dense(p["wv"], x).reshape(b, s, n_kv_heads, head_dim)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    if cache is not None:
+        ck, cv, cpos = cache
+        k_all = jnp.concatenate([ck, k], axis=1)
+        v_all = jnp.concatenate([cv, v], axis=1)
+        kpos_all = jnp.concatenate([cpos, positions], axis=1)
+    else:
+        k_all, v_all, kpos_all = k, v, positions
+    scale = 1.0 / jnp.sqrt(head_dim).astype(jnp.float32)
+    if chunk is not None and s > 1:
+        out = sdpa_chunked(q, k_all, v_all, positions, kpos_all, window,
+                           scale, chunk=chunk, shard=shard)
+    else:
+        out = _sdpa(q, k_all, v_all, positions, kpos_all, window, scale,
+                    shard=shard)
+    out = dense(p["wo"], out.reshape(b, s, n_heads * head_dim))
+    return out, (k_all, v_all, kpos_all)
+
+
+def sdpa_chunked(q, k, v, q_pos, k_pos, window, softmax_scale,
+                 chunk: int = 1024, shard=None):
+    """Flash-style attention: lax.scan over KV chunks with an online
+    softmax — O(Sq·chunk) live logits instead of O(Sq·Sk) (§Perf/H6).
+
+    Numerically identical to `_sdpa` (same masking semantics); the running
+    (max, sum, acc) recurrence is the standard streaming-softmax update.
+    """
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    group = h // hkv
+    if group > 1:
+        k = jnp.repeat(k, group, axis=2)
+        v = jnp.repeat(v, group, axis=2)
+    if shard is not None:
+        dp, tp, tp_size = shard
+        if dp is not None:
+            from jax.sharding import PartitionSpec as P
+            head_ax = tp if (tp is not None and h % tp_size == 0) else None
+            con = lambda x: jax.lax.with_sharding_constraint(
+                x, P(dp, None, head_ax, None))
+            q, k, v = con(q), con(k), con(v)
+    sk = k.shape[1]
+    pad = (-sk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)),
+                        constant_values=jnp.int32(2 ** 30))
+    nc = (sk + pad) // chunk
+    kc = k.reshape(b, nc, chunk, h, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nc, chunk, h, d).transpose(1, 0, 2, 3, 4)
+    pc = k_pos.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kj, vj, pj = xs
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, kj).astype(jnp.float32)
+        logits = logits * softmax_scale
+        causal = q_pos[:, None, :, None] >= pj[:, None, None, :]
+        if window is not None:
+            in_win = (q_pos[:, None, :, None] - pj[:, None, None, :]) < window
+            mask = jnp.where(window < 0, causal, causal & in_win)
+        else:
+            mask = causal
+        logits = jnp.where(mask, logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        acc = (acc * corr.transpose(0, 2, 1)[..., None]
+               + jnp.einsum("bhqk,bkhd->bqhd", p,
+                            vj.astype(jnp.float32)))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, h, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    acc0 = jnp.zeros((b, sq, h, d), jnp.float32)   # fp32 accumulator
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0), (kc, vc, pc))
+    denom = jnp.maximum(l, 1e-20).transpose(0, 2, 1)[..., None]
+    return (acc / denom).astype(q.dtype)
+
+
+# --------------------------------------------------------------------- MLA
+
+class MLAConfig(NamedTuple):
+    """DeepSeek-V3 multi-head latent attention [arXiv:2412.19437]."""
+    n_heads: int = 128
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+def mla_init(key, d_model, cfg: MLAConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    h, r = cfg.n_heads, cfg
+    return {
+        "wq_down": dense_init(ks[0], d_model, r.q_lora_rank, dtype=dtype),
+        "wq_up": dense_init(ks[1], r.q_lora_rank,
+                            h * (r.qk_nope_head_dim + r.qk_rope_head_dim),
+                            dtype=dtype),
+        "wkv_down": dense_init(ks[2], d_model,
+                               r.kv_lora_rank + r.qk_rope_head_dim,
+                               dtype=dtype),
+        "wk_up": dense_init(ks[3], r.kv_lora_rank,
+                            h * r.qk_nope_head_dim, dtype=dtype),
+        "wv_up": dense_init(ks[4], r.kv_lora_rank, h * r.v_head_dim,
+                            dtype=dtype),
+        "wo": dense_init(ks[5], h * r.v_head_dim, d_model, dtype=dtype),
+    }
+
+
+def _head_constrain(x, shard, n_heads):
+    """Pin (B, S, H, D) activations: head dim on tp when divisible."""
+    if shard is None:
+        return x
+    dp, tp, tp_size = shard
+    if dp is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    head_ax = tp if (tp is not None and n_heads % tp_size == 0) else None
+    return jax.lax.with_sharding_constraint(
+        x, P(dp, *([None] * (x.ndim - 3)), head_ax, None))
+
+
+def mla_apply(p, x, positions, cfg: MLAConfig, *, rope_theta=10000.0,
+              cache=None, shard=None):
+    """MLA with the *latent* KV cache: what is cached per token is the
+    kv_lora_rank-dim latent + the shared rope key (576 dims for V3), not the
+    per-head K/V — the 500k-context enabler (DESIGN.md §6).
+
+    cache: optional (c_kv (B,S,r_kv), k_rope (B,S,1,Dr), pos (B,S)).
+    """
+    from repro.models.layers import dense
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    # queries
+    q = dense(p["wq_up"], dense(p["wq_down"], x))
+    q = q.reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+    # latent kv + shared rope key
+    kv = dense(p["wkv_down"], x)                           # (B,S,r_kv+Dr)
+    c_kv, k_rope = kv[..., :cfg.kv_lora_rank], kv[..., cfg.kv_lora_rank:]
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, rope_theta)
+    if cache is not None:
+        pc, pk, ppos = cache
+        c_kv = jnp.concatenate([pc, c_kv], axis=1)
+        k_rope = jnp.concatenate([pk, k_rope], axis=1)
+        kpos = jnp.concatenate([ppos, positions], axis=1)
+    else:
+        kpos = positions
+    sk = c_kv.shape[1]
+    # expand latents to per-head keys/values (decode: absorbed matmuls)
+    k_nope = dense(p["wk_up"], c_kv).reshape(b, sk, h, dn)
+    v = dense(p["wv_up"], c_kv).reshape(b, sk, h, dv)
+    q_nope = _head_constrain(q_nope, shard, h)
+    q_rope = _head_constrain(q_rope, shard, h)
+    k_nope = _head_constrain(k_nope, shard, h)
+    v = _head_constrain(v, shard, h)
+    scale = 1.0 / jnp.sqrt(jnp.float32(dn + dr))
+    logits = (jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope)
+              + jnp.einsum("bqhd,bkd->bhqk", q_rope, k_rope[:, :, 0, :])
+              ).astype(jnp.float32) * scale
+    causal = (positions[:, :, None] >= kpos[:, None, :])[:, None, :, :]
+    logits = jnp.where(causal, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b, s, h * dv)
+    return dense(p["wo"], out), (c_kv, k_rope, kpos)

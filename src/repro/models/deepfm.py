@@ -1,0 +1,112 @@
+"""DeepFM [arXiv:1703.04247]: FM + deep MLP over shared sparse embeddings.
+
+n_sparse=39 categorical fields (Criteo layout), embed_dim=10, MLP 400-400-400.
+The embedding tables are the hot path: one concatenated row-space (sum of all
+field vocabs, ~34M rows by default) so a single (possibly row-sharded) table
+serves all fields; ids arrive pre-offset per field.
+
+FM second-order term uses the sum-square trick:
+  0.5 * ((Σ_f v_f)^2 - Σ_f v_f^2) summed over embed dims.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import dense_init, dense
+
+
+def default_field_vocabs(n_sparse: int = 39) -> tuple[int, ...]:
+    """Criteo-like skew: a few huge id spaces, many small ones (~34M total)."""
+    sizes = []
+    for i in range(n_sparse):
+        if i < 3:
+            sizes.append(10_000_000)
+        elif i < 8:
+            sizes.append(500_000)
+        elif i < 16:
+            sizes.append(100_000)
+        else:
+            sizes.append(2_000)
+    return tuple(sizes)
+
+
+@dataclass(frozen=True)
+class DeepFMConfig:
+    n_sparse: int = 39
+    embed_dim: int = 10
+    mlp_dims: tuple[int, ...] = (400, 400, 400)
+    field_vocabs: tuple[int, ...] = field(default_factory=default_field_vocabs)
+    n_dense_feats: int = 13      # Criteo numeric features
+
+    @property
+    def total_rows(self) -> int:
+        return int(sum(self.field_vocabs))
+
+    @property
+    def field_offsets(self) -> np.ndarray:
+        return np.concatenate([[0], np.cumsum(self.field_vocabs)[:-1]])
+
+
+def deepfm_init(key, cfg: DeepFMConfig, dtype=jnp.float32):
+    ke, kw, km, kd = jax.random.split(key, 4)
+    d_concat = cfg.n_sparse * cfg.embed_dim + cfg.n_dense_feats
+    mlp = []
+    d_in = d_concat
+    for i, d_out in enumerate(cfg.mlp_dims):
+        km, sub = jax.random.split(km)
+        mlp.append(dense_init(sub, d_in, d_out, bias=True, dtype=dtype))
+        d_in = d_out
+    return {
+        "embed": (jax.random.normal(ke, (cfg.total_rows, cfg.embed_dim))
+                  * 0.01).astype(dtype),
+        "lin": (jax.random.normal(kw, (cfg.total_rows,)) * 0.01).astype(dtype),
+        "dense_lin": dense_init(kd, cfg.n_dense_feats, 1, bias=True,
+                                dtype=dtype),
+        "mlp": mlp,
+        "head": dense_init(jax.random.fold_in(km, 7), cfg.mlp_dims[-1], 1,
+                           bias=True, dtype=dtype),
+    }
+
+
+def deepfm_logits(params, cfg: DeepFMConfig, sparse_ids, dense_feats,
+                  lookup_fn=None):
+    """sparse_ids (B, F) pre-offset global row ids; dense_feats (B, n_dense).
+
+    ``lookup_fn(table, ids)`` defaults to ``jnp.take`` (single-host); the
+    distributed path passes a row-sharded lookup (models/embedding.py).
+    """
+    b = sparse_ids.shape[0]
+    take = lookup_fn or (lambda t, i: jnp.take(t, i, axis=0))
+    v = take(params["embed"], sparse_ids)            # (B, F, D)
+    first = take(params["lin"][:, None], sparse_ids)[..., 0].sum(-1)  # (B,)
+    first = first + dense(params["dense_lin"], dense_feats)[:, 0]
+    s = v.sum(axis=1)                                # (B, D)
+    fm = 0.5 * ((s ** 2) - (v ** 2).sum(axis=1)).sum(-1)             # (B,)
+    h = jnp.concatenate([v.reshape(b, -1), dense_feats], axis=-1)
+    for p in params["mlp"]:
+        h = jax.nn.relu(dense(p, h))
+    deep = dense(params["head"], h)[:, 0]
+    return first + fm + deep
+
+
+def deepfm_loss(params, cfg: DeepFMConfig, sparse_ids, dense_feats, labels,
+                lookup_fn=None):
+    logits = deepfm_logits(params, cfg, sparse_ids, dense_feats, lookup_fn)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels
+        + jnp.log1p(jnp.exp(-jnp.abs(logits))))     # stable BCE-with-logits
+
+
+def retrieval_scores(query_emb, cand_emb):
+    """retrieval_cand shape: 1 query vs N candidates — batched dot."""
+    return cand_emb @ query_emb
+
+
+def retrieval_topk(query_emb, cand_emb, k: int):
+    scores = retrieval_scores(query_emb, cand_emb)
+    return jax.lax.top_k(scores, k)

@@ -1,0 +1,313 @@
+"""GNN model zoo on the shared segment-op message-passing substrate.
+
+All message passing is expressed as gather(src) -> edge compute ->
+``jax.ops.segment_*`` scatter to dst (per the assignment: JAX sparse is
+BCOO-only, so SpMM/SDDMM become explicit edge-index segment ops — the same
+CSR/COO layer the IM core samples from).
+
+Models: GAT (attn aggregator, SDDMM + segment-softmax), GIN (sum + learnable
+eps), EGNN (E(n)-equivariant coordinate updates), GraphCast-style
+encoder-processor-decoder with residual node/edge MLPs.
+Full-batch COO signature: apply(params, x, src, dst, mask) — vmap-able over a
+leading batch dim for the ``molecule`` shape.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, dense
+
+
+import functools
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _gather_typed_grad(x, idx, meta):
+    """meta = (n_rows, dtype_str) — static."""
+    return x[idx]
+
+
+def _gather_fwd(x, idx, meta):
+    return x[idx], idx
+
+
+def _gather_bwd(meta, idx, ct):
+    n_rows, dtype = meta
+    # force the cotangent scatter-accumulation into the forward dtype —
+    # XLA otherwise promotes gather backward to f32, which doubles the
+    # node-state all-reduce payloads (§Perf/H4c)
+    g = jnp.zeros((n_rows,) + ct.shape[1:], dtype).at[idx].add(
+        ct.astype(dtype))
+    return g, None
+
+
+_gather_typed_grad.defvjp(_gather_fwd, _gather_bwd)
+
+
+def _gather_bf16_grad(x, idx):
+    return _gather_typed_grad(x, idx, (x.shape[0], str(x.dtype)))
+
+
+def _segment_softmax(scores, dst, n, mask):
+    scores = jnp.where(mask, scores, -1e30)
+    mx = jax.ops.segment_max(scores, dst, num_segments=n)
+    ex = jnp.where(mask, jnp.exp(scores - mx[dst]), 0.0)
+    z = jax.ops.segment_sum(ex, dst, num_segments=n)
+    return ex / jnp.maximum(z[dst], 1e-9)
+
+
+def mlp_init(key, dims, dtype=jnp.float32):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [dense_init(k, a, b, bias=True, dtype=dtype)
+            for k, a, b in zip(ks, dims[:-1], dims[1:])]
+
+
+def mlp(ps, x, act=jax.nn.relu, final_act=False):
+    for i, p in enumerate(ps):
+        x = dense(p, x)
+        if i < len(ps) - 1 or final_act:
+            x = act(x)
+    return x
+
+
+# ---------------------------------------------------------------------- GAT
+
+@dataclass(frozen=True)
+class GATConfig:
+    n_layers: int = 2
+    d_hidden: int = 8
+    n_heads: int = 8
+    d_in: int = 1433
+    n_classes: int = 7
+
+
+def gat_init(key, cfg: GATConfig, dtype=jnp.float32):
+    layers = []
+    d_in = cfg.d_in
+    for i in range(cfg.n_layers):
+        k1, k2, k3, key = jax.random.split(key, 4)
+        heads = cfg.n_heads if i < cfg.n_layers - 1 else 1
+        d_out = cfg.d_hidden if i < cfg.n_layers - 1 else cfg.n_classes
+        layers.append({
+            "w": dense_init(k1, d_in, heads * d_out, dtype=dtype),
+            "a_src": (jax.random.normal(k2, (heads, d_out)) * 0.1).astype(dtype),
+            "a_dst": (jax.random.normal(k3, (heads, d_out)) * 0.1).astype(dtype),
+        })
+        d_in = heads * d_out if i < cfg.n_layers - 1 else d_out
+    return {"layers": layers}
+
+
+def gat_apply(params, cfg: GATConfig, x, src, dst, mask):
+    n = x.shape[0]
+    for i, p in enumerate(params["layers"]):
+        heads = cfg.n_heads if i < cfg.n_layers - 1 else 1
+        d_out = p["w"]["w"].shape[1] // heads
+        h = dense(p["w"], x).reshape(n, heads, d_out)
+        e_src = (h * p["a_src"][None]).sum(-1)       # (n, heads)
+        e_dst = (h * p["a_dst"][None]).sum(-1)
+        scores = jax.nn.leaky_relu(e_src[src] + e_dst[dst], 0.2)  # (m, heads)
+        alpha = jax.vmap(lambda s: _segment_softmax(s, dst, n, mask),
+                         in_axes=1, out_axes=1)(scores)
+        msg = h[src] * alpha[:, :, None]
+        agg = jax.ops.segment_sum(
+            jnp.where(mask[:, None, None], msg, 0), dst, num_segments=n)
+        x = agg.reshape(n, heads * d_out)
+        if i < cfg.n_layers - 1:
+            x = jax.nn.elu(x)
+    return x
+
+
+# ---------------------------------------------------------------------- GIN
+
+@dataclass(frozen=True)
+class GINConfig:
+    n_layers: int = 5
+    d_hidden: int = 64
+    d_in: int = 16
+    n_classes: int = 2
+
+
+def gin_init(key, cfg: GINConfig, dtype=jnp.float32):
+    layers = []
+    d_in = cfg.d_in
+    for i in range(cfg.n_layers):
+        k1, key = jax.random.split(key)
+        layers.append({
+            "mlp": mlp_init(k1, [d_in, cfg.d_hidden, cfg.d_hidden], dtype),
+            "eps": jnp.zeros((), dtype),   # learnable ε (GIN-ε)
+        })
+        d_in = cfg.d_hidden
+    khead, key = jax.random.split(key)
+    return {"layers": layers,
+            "head": dense_init(khead, cfg.d_hidden, cfg.n_classes, bias=True,
+                               dtype=dtype)}
+
+
+def gin_apply(params, cfg: GINConfig, x, src, dst, mask):
+    n = x.shape[0]
+    for p in params["layers"]:
+        agg = jax.ops.segment_sum(
+            jnp.where(mask[:, None], x[src], 0), dst, num_segments=n)
+        x = mlp(p["mlp"], (1.0 + p["eps"]) * x + agg, final_act=True)
+    return dense(params["head"], x)
+
+
+def gin_graph_logits(params, cfg: GINConfig, x, src, dst, mask):
+    """Whole-graph classification: sum-pool then head (for molecule shape)."""
+    n = x.shape[0]
+    h = x
+    for p in params["layers"]:
+        agg = jax.ops.segment_sum(
+            jnp.where(mask[:, None], h[src], 0), dst, num_segments=n)
+        h = mlp(p["mlp"], (1.0 + p["eps"]) * h + agg, final_act=True)
+    return dense(params["head"], h.sum(axis=0))
+
+
+# --------------------------------------------------------------------- EGNN
+
+@dataclass(frozen=True)
+class EGNNConfig:
+    n_layers: int = 4
+    d_hidden: int = 64
+    d_in: int = 16
+
+
+def egnn_init(key, cfg: EGNNConfig, dtype=jnp.float32):
+    k0, key = jax.random.split(key)
+    layers = []
+    for _ in range(cfg.n_layers):
+        k1, k2, k3, key = jax.random.split(key, 4)
+        d = cfg.d_hidden
+        layers.append({
+            "phi_e": mlp_init(k1, [2 * d + 1, d, d], dtype),
+            "phi_x": mlp_init(k2, [d, d, 1], dtype),
+            "phi_h": mlp_init(k3, [2 * d, d, d], dtype),
+        })
+    return {"embed": dense_init(k0, cfg.d_in, cfg.d_hidden, bias=True,
+                                dtype=dtype),
+            "layers": layers}
+
+
+def egnn_apply(params, cfg: EGNNConfig, h, x, src, dst, mask):
+    """h (n,d_in) invariant feats; x (n,3) coordinates.  E(n)-equivariant."""
+    n = h.shape[0]
+    h = dense(params["embed"], h)
+    for p in params["layers"]:
+        diff = x[src] - x[dst]                                 # (m, 3)
+        dist2 = (diff ** 2).sum(-1, keepdims=True)
+        m_ij = mlp(p["phi_e"],
+                   jnp.concatenate([h[src], h[dst], dist2], -1),
+                   final_act=True)
+        m_ij = jnp.where(mask[:, None], m_ij, 0)
+        # coordinate update (mean-normalized, E(n)-equivariant)
+        coef = mlp(p["phi_x"], m_ij)
+        wsum = jax.ops.segment_sum(diff * coef, dst, num_segments=n)
+        deg = jax.ops.segment_sum(mask.astype(x.dtype), dst, num_segments=n)
+        x = x + wsum / jnp.maximum(deg, 1)[:, None]
+        # feature update
+        agg = jax.ops.segment_sum(m_ij, dst, num_segments=n)
+        h = h + mlp(p["phi_h"], jnp.concatenate([h, agg], -1))
+    return h, x
+
+
+# ----------------------------------------------------------------- GraphCast
+
+@dataclass(frozen=True)
+class GraphCastConfig:
+    n_layers: int = 16
+    d_hidden: int = 512
+    d_in: int = 227          # n_vars
+    d_out: int = 227
+    mesh_refinement: int = 6
+
+
+def graphcast_init(key, cfg: GraphCastConfig, dtype=jnp.float32):
+    ke, kd, kp = jax.random.split(key, 3)
+    d = cfg.d_hidden
+    proc = []
+    for _ in range(cfg.n_layers):
+        k1, k2, kp = jax.random.split(kp, 3)
+        proc.append({
+            "edge_mlp": mlp_init(k1, [3 * d, d, d], dtype),
+            "node_mlp": mlp_init(k2, [2 * d, d, d], dtype),
+        })
+    k3, k4, ke = jax.random.split(ke, 3)
+    return {
+        "encoder": mlp_init(k3, [cfg.d_in, d, d], dtype),
+        "edge_embed": mlp_init(k4, [1, d, d], dtype),
+        "processor": proc,
+        "decoder": mlp_init(kd, [d, d, cfg.d_out], dtype),
+    }
+
+
+def graphcast_apply(params, cfg: GraphCastConfig, x, src, dst, mask,
+                    edge_feat=None, shard_axes=None, comm_bf16=False):
+    """Encoder -> n_layers residual message passing -> decoder (sum agg).
+
+    ``shard_axes``: mesh axes to keep node/edge states sharded on (forces
+    reduce-scatter-style aggregation instead of full all-reduce under
+    GSPMD); ``comm_bf16``: cast messages/states at the shard boundary to
+    bf16 (halves the collective payload).  Both are §Perf/H4 knobs.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def con_nodes(z):
+        if shard_axes is None:
+            return z
+        return jax.lax.with_sharding_constraint(z, P(shard_axes, None))
+
+    def comm(z):
+        return z.astype(jnp.bfloat16) if comm_bf16 else z
+
+    n = x.shape[0]
+    h = con_nodes(mlp(params["encoder"], x, final_act=True))
+    if edge_feat is None:
+        edge_feat = jnp.ones((src.shape[0], 1), h.dtype)
+    e = mlp(params["edge_embed"], edge_feat, final_act=True)
+    take = (_gather_bf16_grad if (comm_bf16 or h.dtype == jnp.bfloat16)
+            else lambda z, i: z[i])
+    for p in params["processor"]:
+        hs, hd = take(comm(h), src), take(comm(h), dst)
+        msg = mlp(p["edge_mlp"],
+                  jnp.concatenate([hs, hd, e.astype(hs.dtype)], -1)
+                  .astype(h.dtype),
+                  final_act=True)
+        e = e + jnp.where(mask[:, None], msg, 0)
+        agg = jax.ops.segment_sum(comm(jnp.where(mask[:, None], msg, 0)),
+                                  dst, num_segments=n)
+        agg = con_nodes(agg).astype(h.dtype)
+        h = con_nodes(h + mlp(p["node_mlp"], jnp.concatenate([h, agg], -1),
+                              final_act=True))
+    return mlp(params["decoder"], h)
+
+
+# ------------------------------------------------------- minibatch (SAGE)
+
+def sage_minibatch_apply(w_layers, sub, feats):
+    """GraphSAGE-style forward over a SampledSubgraph (minibatch_lg shape).
+
+    w_layers: list of dense params, one per hop (innermost hop first);
+    sub: SampledSubgraph; feats: (n_total, d) global feature table (or a
+    gather proxy).  Aggregation child -> parent via segment-mean.
+    """
+    layer_feats = [jnp.take(feats, sub.seeds, axis=0)]
+    for blk in sub.blocks:
+        layer_feats.append(jnp.take(feats, blk.nodes, axis=0))
+    # aggregate from outermost hop inward
+    h = layer_feats[-1]
+    for depth in range(len(sub.blocks) - 1, -1, -1):
+        blk = sub.blocks[depth]
+        parent = layer_feats[depth]
+        n_par = parent.shape[0]
+        msg = jnp.where(blk.mask[:, None], h, 0)
+        agg = jax.ops.segment_sum(msg, blk.parent_idx, num_segments=n_par)
+        cnt = jax.ops.segment_sum(blk.mask.astype(h.dtype), blk.parent_idx,
+                                  num_segments=n_par)
+        agg = agg / jnp.maximum(cnt, 1)[:, None]
+        h = jax.nn.relu(dense(w_layers[depth],
+                              jnp.concatenate([parent, agg], -1)))
+    return h

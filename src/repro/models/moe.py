@@ -1,0 +1,166 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch (EP-shardable).
+
+Dispatch is the modern sort-based formulation (MegaBlocks/MaxText style, no
+(T, E, C) one-hot einsum): flatten (token, choice) pairs, sort by expert,
+compute position-in-expert, drop beyond capacity, gather into the (E, C, d)
+expert batch.  Under pjit the expert dim carries a sharding constraint on the
+'model'/'expert' mesh axis, so XLA materializes the dispatch/combine as
+all-to-alls across the EP group.
+
+Supports DeepSeek-V3 (1 shared + 256 routed, top-8, sigmoid scores with
+normalized top-k gates) and Llama4-Scout (1 shared + 16 routed, top-1).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+from jax.ad_checkpoint import checkpoint_name
+import jax.numpy as jnp
+
+from repro.models.layers import ffn_init, ffn, dense_init
+
+
+class MoEConfig(NamedTuple):
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0
+    d_ff_shared: Optional[int] = None
+    capacity_factor: float = 1.25
+    router_score: str = "softmax"  # or "sigmoid" (DeepSeek-V3 / Llama4)
+    # group-local dispatch: sort/scatter/gather stay within one group of
+    # tokens (= one data shard), so the only cross-device traffic is the
+    # (group, expert) all-to-all.  None = single global group (baseline —
+    # GSPMD lowers the global gathers as full-buffer masked all-reduces;
+    # see EXPERIMENTS.md §Perf/deepseek).
+    dispatch_groups: Optional[int] = None
+
+
+def moe_init(key, d_model, cfg: MoEConfig, dtype=jnp.float32):
+    kr, ke, ks = jax.random.split(key, 3)
+    p = {
+        "router": dense_init(kr, d_model, cfg.n_experts, dtype=jnp.float32),
+        "experts": jax.vmap(
+            lambda k: ffn_init(k, d_model, cfg.d_ff_expert, dtype=dtype)
+        )(jax.random.split(ke, cfg.n_experts)),
+    }
+    if cfg.n_shared:
+        d_sh = (cfg.d_ff_shared or cfg.d_ff_expert) * cfg.n_shared
+        p["shared"] = ffn_init(ks, d_model, d_sh, dtype=dtype)
+    return p
+
+
+def route(p_router, x2d, cfg: MoEConfig):
+    """x2d: (T, d) -> (expert_choice (T,k), gate (T,k), aux_loss)."""
+    logits = (x2d.astype(jnp.float32) @ p_router["w"])          # (T, E)
+    if cfg.router_score == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(scores, cfg.top_k)                # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    # load-balance aux loss (Switch-style): E * mean(frac_tokens * frac_prob)
+    probs = jax.nn.softmax(logits, axis=-1)
+    frac_prob = probs.mean(axis=0)                              # (E,)
+    onehot = jax.nn.one_hot(idx[:, 0], cfg.n_experts)
+    frac_tok = onehot.mean(axis=0)
+    aux = cfg.n_experts * jnp.sum(frac_prob * frac_tok)
+    return idx.astype(jnp.int32), gate.astype(x2d.dtype), aux
+
+
+def moe_apply(p, x, cfg: MoEConfig, *, act="swiglu",
+              ep_axis: str | None = None, dp_axis=None):
+    """x: (..., d).  Returns (y, aux_loss).
+
+    ``ep_axis``: mesh axis for the expert dim of the dispatch buffers (EP);
+    ``dp_axis``: mesh axis/axes for the capacity dim (keeps the dispatched
+    tokens batch-sharded so the dispatch lowers to all-to-alls rather than
+    gathers of the full buffer)."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    x2d = x.reshape(-1, d)
+    t = x2d.shape[0]
+    e, k = cfg.n_experts, cfg.top_k
+    groups = cfg.dispatch_groups or 1
+    tl = t // groups
+    cap = int(max(1, (tl * k * cfg.capacity_factor) // e))
+
+    def dispatch_group(xg, idx, gate):
+        """One token group: sort-by-expert, capacity-drop, (E, C, d)."""
+        flat_expert = idx.reshape(-1)                           # (Tl*k,)
+        flat_token = jnp.repeat(jnp.arange(tl, dtype=jnp.int32), k)
+        flat_gate = gate.reshape(-1)
+        order = jnp.argsort(flat_expert)                        # stable
+        s_expert = flat_expert[order]
+        s_token = flat_token[order]
+        s_gate = flat_gate[order]
+        seg_sizes = jnp.zeros(e, jnp.int32).at[flat_expert].add(1)
+        seg_starts = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                                      jnp.cumsum(seg_sizes)[:-1]])
+        pos = jnp.arange(tl * k, dtype=jnp.int32) - seg_starts[s_expert]
+        keep = pos < cap
+        xe = jnp.zeros((e, cap, d), xg.dtype)
+        xe = xe.at[jnp.where(keep, s_expert, e),
+                   jnp.where(keep, pos, 0)].set(xg[s_token], mode="drop")
+        return xe, (s_expert, s_token, s_gate, pos, keep)
+
+    def combine_group(ye, meta, tl_):
+        s_expert, s_token, s_gate, pos, keep = meta
+        vals = ye[jnp.where(keep, s_expert, 0), jnp.where(keep, pos, 0)]
+        vals = jnp.where(keep[:, None], vals, 0) * s_gate[:, None]
+        return jnp.zeros((tl_, d), vals.dtype).at[s_token].add(vals)
+
+    def combine_group_scatter(ye, meta, tl_):
+        """§Perf/H1b: scatter *from* the (E, C, d) buffer instead of
+        gathering across the expert-sharded axis — under GSPMD the
+        expert-sharded scatter becomes local partials + one psum(Tl, d)
+        instead of a masked all-reduce of the (Tl*k, d) gather result."""
+        s_expert, s_token, s_gate, pos, keep = meta
+        e_idx = jnp.where(keep, s_expert, e)
+        c_idx = jnp.where(keep, pos, 0)
+        tok_ec = jnp.full((e, cap), tl_, jnp.int32).at[e_idx, c_idx].set(
+            jnp.where(keep, s_token, tl_), mode="drop")
+        gate_ec = jnp.zeros((e, cap), ye.dtype).at[e_idx, c_idx].set(
+            jnp.where(keep, s_gate, 0).astype(ye.dtype), mode="drop")
+        contrib = (ye * gate_ec[..., None]).reshape(e * cap, d)
+        return jnp.zeros((tl_, d), ye.dtype).at[
+            tok_ec.reshape(-1)].add(contrib, mode="drop")
+
+    idx, gate, aux = route(p["router"], x2d, cfg)
+
+    def con(z, spec):
+        if ep_axis is None:
+            return z
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(z, P(*spec))
+
+    if groups == 1:
+        xe, meta = dispatch_group(x2d, idx, gate)
+        xe = con(xe, (ep_axis, dp_axis, None))
+        ye = jax.vmap(lambda pp, xx: ffn(pp, xx, act=act))(p["experts"], xe)
+        ye = con(ye, (ep_axis, dp_axis, None))
+        y = combine_group(ye, meta, t)
+    else:
+        xg = x2d.reshape(groups, tl, d)
+        xg = con(xg, (dp_axis, None, None))
+        xe, meta = jax.vmap(dispatch_group)(
+            xg, idx.reshape(groups, tl, k), gate.reshape(groups, tl, k))
+        # (G, E, C, d): groups on the data axis, experts on the EP axis —
+        # building this from data-sharded groups is the all-to-all
+        xe = con(xe, (dp_axis, ep_axis, None, None))
+        xe = checkpoint_name(xe, "moe_dispatch")
+        # expert FFN over the (G*C) rows of each expert
+        xeT = con(xe.transpose(1, 0, 2, 3).reshape(e, groups * cap, d),
+                  (ep_axis, dp_axis, None))
+        yeT = jax.vmap(lambda pp, xx: ffn(pp, xx, act=act))(p["experts"],
+                                                            xeT)
+        yeT = checkpoint_name(yeT, "moe_out")
+        ye = con(yeT.reshape(e, groups, cap, d).transpose(1, 0, 2, 3),
+                 (dp_axis, ep_axis, None, None))
+        y = jax.vmap(lambda yy, mm: combine_group_scatter(yy, mm, tl))(
+            ye, meta)
+        y = con(y, (dp_axis, None, None)).reshape(t, d).astype(x2d.dtype)
+    if cfg.n_shared:
+        y = y + ffn(p["shared"], x2d, act=act)
+    return y.reshape(orig_shape), aux

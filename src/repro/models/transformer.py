@@ -1,0 +1,453 @@
+"""Unified LM transformer covering the five assigned architectures.
+
+Feature matrix (all first-class config switches):
+  qwen2-0.5b    GQA (kv=2) + QKV bias, RMSNorm, SwiGLU, tied embeddings
+  olmo-1b       GQA (kv=16=MHA), non-parametric LN, SwiGLU, untied
+  gemma3-12b    GQA (kv=8), 5:1 local:global sliding window (w=1024), GeGLU
+  deepseek-v3   MLA + MoE (1 shared + 256 routed, top-8), 3 leading dense
+                layers, MTP head
+  llama4-scout  GQA (kv=8) + MoE (1 shared + 16 routed, top-1)
+
+Layers are grouped into homogeneous *blocks* scanned with ``jax.lax.scan``
+(stacked params) to keep HLO size O(1) in depth; heterogeneous structure
+(DeepSeek's 3 dense layers) becomes a separate block.  Per-layer sliding
+windows are a scanned int array, so gemma's 5:1 pattern lives in data, not
+in program structure.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import attention as A
+from repro.models import moe as M
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    qkv_bias: bool = False
+    norm: str = "rms"                    # "rms" | "nonparam"
+    act: str = "swiglu"                  # "swiglu" | "geglu"
+    rope_theta: float = 10000.0
+    local_global: Optional[tuple[int, int]] = None   # (n_local_per_global, window)
+    moe: Optional[M.MoEConfig] = None
+    n_dense_layers: int = 0              # leading dense layers (deepseek: 3)
+    d_ff_dense: Optional[int] = None
+    mla: Optional[A.MLAConfig] = None
+    tie_embeddings: bool = True
+    mtp: bool = False
+    dtype: str = "float32"
+    remat: bool = False   # per-layer activation checkpointing (scan body)
+    # activation sharding constraints (None = let XLA propagate; set by the
+    # launcher): act_dp = batch axes, act_tp = tensor axis
+    act_dp: Optional[tuple] = None
+    act_tp: Optional[str] = None
+    tp_size: int = 1      # size of the act_tp mesh axis (head shardability)
+    unroll: bool = False  # python-loop layers (cost probes; HLO grows O(L))
+    # decode-cache write strategy: iota-compare select instead of
+    # dynamic-update-slice — keeps a sequence-sharded cache shard-local
+    # (GSPMD "involuntary full rematerialization" avoidance, §Perf/H2)
+    scatter_cache_update: bool = False
+    # remat policy: None = save nothing (full recompute); "moe_save" =
+    # keep the MoE dispatch/output buffers (skips re-running the dispatch
+    # collectives in the backward pass, §Perf/H1c)
+    remat_policy: Optional[str] = None
+    # MLA decode: absorb wk_up into Q and wv_up into the output so the
+    # latent cache is attended directly — never expands (S, H, d_nope)
+    # per step (§Perf/H5, DeepSeek-V2 "absorbed" inference formulation)
+    absorbed_mla_decode: bool = False
+    # flash-style chunked attention block size for train/prefill (§Perf/H6;
+    # None = materialize full S^2 logits)
+    attn_chunk: Optional[int] = None
+
+    @property
+    def attn_shard(self):
+        if self.act_dp is None:
+            return None
+        return (self.act_dp, self.act_tp, self.tp_size)
+
+    def constrain(self, x, *tail):
+        """Pin activation sharding to P(act_dp, *tail) when configured."""
+        if self.act_dp is None:
+            return x
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(x, P(self.act_dp, *tail))
+
+    @property
+    def param_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def windows(self) -> np.ndarray:
+        """Per-layer attention window; -1 = global."""
+        w = np.full(self.n_layers, -1, dtype=np.int32)
+        if self.local_global is not None:
+            n_local, win = self.local_global
+            for i in range(self.n_layers):
+                if (i + 1) % (n_local + 1) != 0:   # every (n+1)th is global
+                    w[i] = win
+        return w
+
+
+# ------------------------------------------------------------------ params
+
+def _layer_init(key, cfg: LMConfig, *, is_moe: bool, d_ff: int):
+    ka, kf = jax.random.split(key)
+    dt = cfg.param_dtype
+    p = {}
+    if cfg.mla is not None:
+        p["attn"] = A.mla_init(ka, cfg.d_model, cfg.mla, dtype=dt)
+    else:
+        p["attn"] = A.gqa_init(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim, qkv_bias=cfg.qkv_bias, dtype=dt)
+    if is_moe:
+        p["moe"] = M.moe_init(kf, cfg.d_model, cfg.moe, dtype=dt)
+    else:
+        p["ffn"] = L.ffn_init(kf, cfg.d_model, d_ff, dtype=dt)
+    if cfg.norm == "rms":
+        p["norm_attn"] = jnp.zeros((cfg.d_model,), dt)
+        p["norm_ffn"] = jnp.zeros((cfg.d_model,), dt)
+    return p
+
+
+def blocks_of(cfg: LMConfig) -> list[dict]:
+    """Homogeneous scan groups: [{'count', 'is_moe', 'd_ff', 'windows'}]."""
+    wins = cfg.windows()
+    out = []
+    if cfg.moe is not None and cfg.n_dense_layers > 0:
+        out.append(dict(count=cfg.n_dense_layers, is_moe=False,
+                        d_ff=cfg.d_ff_dense or cfg.d_ff,
+                        windows=wins[:cfg.n_dense_layers]))
+        out.append(dict(count=cfg.n_layers - cfg.n_dense_layers, is_moe=True,
+                        d_ff=cfg.d_ff, windows=wins[cfg.n_dense_layers:]))
+    elif cfg.moe is not None:
+        out.append(dict(count=cfg.n_layers, is_moe=True, d_ff=cfg.d_ff,
+                        windows=wins))
+    else:
+        out.append(dict(count=cfg.n_layers, is_moe=False, d_ff=cfg.d_ff,
+                        windows=wins))
+    return out
+
+
+def lm_init(key, cfg: LMConfig):
+    dt = cfg.param_dtype
+    keys = jax.random.split(key, 4 + len(blocks_of(cfg)))
+    params = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab, cfg.d_model))
+                  * 0.02).astype(dt),
+    }
+    if cfg.norm == "rms":
+        params["norm_final"] = jnp.zeros((cfg.d_model,), dt)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(keys[1],
+                                               (cfg.d_model, cfg.vocab))
+                             * 0.02).astype(dt)
+    for bi, blk in enumerate(blocks_of(cfg)):
+        bkeys = jax.random.split(keys[2 + bi], blk["count"])
+        params[f"block{bi}"] = jax.vmap(
+            lambda k: _layer_init(k, cfg, is_moe=blk["is_moe"],
+                                  d_ff=blk["d_ff"]))(bkeys)
+    if cfg.mtp:
+        kl, kp = jax.random.split(keys[-1])
+        params["mtp_layer"] = _layer_init(kl, cfg, is_moe=False,
+                                          d_ff=cfg.d_ff_dense or cfg.d_ff)
+        params["mtp_proj"] = L.dense_init(kp, 2 * cfg.d_model, cfg.d_model,
+                                          dtype=dt)
+    return params
+
+
+# ----------------------------------------------------------------- forward
+
+def _norm(cfg, x, scale):
+    if cfg.norm == "rms":
+        return L.rms_norm(x, scale)
+    return L.nonparametric_layer_norm(x)
+
+
+def _layer_apply(cfg: LMConfig, p, x, positions, window, *, is_moe: bool,
+                 cache=None):
+    h = _norm(cfg, x, p.get("norm_attn"))
+    if cfg.mla is not None:
+        a, new_cache = A.mla_apply(p["attn"], h, positions, cfg.mla,
+                                   rope_theta=cfg.rope_theta, cache=cache,
+                                   shard=cfg.attn_shard)
+    else:
+        a, new_cache = A.gqa_apply(p["attn"], h, positions,
+                                   n_heads=cfg.n_heads,
+                                   n_kv_heads=cfg.n_kv_heads,
+                                   head_dim=cfg.head_dim,
+                                   rope_theta=cfg.rope_theta,
+                                   window=window, cache=cache,
+                                   shard=cfg.attn_shard,
+                                   chunk=cfg.attn_chunk)
+    x = cfg.constrain(x + a, None, None)
+    h = _norm(cfg, x, p.get("norm_ffn"))
+    if is_moe:
+        f, aux = M.moe_apply(p["moe"], h, cfg.moe, act=cfg.act,
+                             ep_axis=cfg.act_tp, dp_axis=cfg.act_dp)
+    else:
+        f, aux = L.ffn(p["ffn"], h, act=cfg.act), jnp.float32(0.0)
+    return cfg.constrain(x + f, None, None), aux, new_cache
+
+
+def lm_backbone(params, cfg: LMConfig, tokens, positions=None, caches=None):
+    """Returns (hidden (B,S,d), aux_loss, new_caches)."""
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :],
+                                     (b, s))
+    x = cfg.constrain(params["embed"][tokens].astype(cfg.param_dtype),
+                      None, None)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
+    aux_total = jnp.float32(0.0)
+    new_caches = []
+    for bi, blk in enumerate(blocks_of(cfg)):
+        bp = params[f"block{bi}"]
+        wins = jnp.asarray(blk["windows"], jnp.int32)
+        cache_b = caches[bi] if caches is not None else None
+
+        def scan_fn(carry, xs):
+            x, aux = carry
+            if cache_b is not None:
+                lp, w, lc = xs
+                x, a, nc = _layer_apply(cfg, lp, x, positions, w,
+                                        is_moe=blk["is_moe"], cache=lc)
+            else:
+                lp, w = xs
+                x, a, nc = _layer_apply(cfg, lp, x, positions, w,
+                                        is_moe=blk["is_moe"], cache=None)
+                nc = 0
+            return (x, aux + a), nc
+
+        xs = (bp, wins, cache_b) if cache_b is not None else (bp, wins)
+        if cfg.remat and cfg.remat_policy == "moe_save":
+            body = jax.checkpoint(
+                scan_fn, policy=jax.checkpoint_policies
+                .save_only_these_names("moe_dispatch", "moe_out"))
+        elif cfg.remat:
+            body = jax.checkpoint(scan_fn)
+        else:
+            body = scan_fn
+        if cfg.unroll:
+            ncs = []
+            for li in range(blk["count"]):
+                xsl = jax.tree_util.tree_map(lambda a: a[li], xs)
+                (x, aux_total), nci = body((x, aux_total), xsl)
+                ncs.append(nci)
+            nc = (jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ncs)
+                  if cache_b is not None else 0)
+        else:
+            (x, aux_total), nc = jax.lax.scan(body, (x, aux_total), xs)
+        new_caches.append(nc if cache_b is not None else None)
+    x = _norm(cfg, x, params.get("norm_final"))
+    return x, aux_total, new_caches
+
+
+def lm_logits(params, cfg: LMConfig, hidden):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return cfg.constrain(hidden @ head.astype(hidden.dtype),
+                         None, cfg.act_tp)
+
+
+def lm_loss(params, cfg: LMConfig, tokens, *, aux_weight=0.01,
+            mtp_weight=0.3):
+    """Next-token CE (+ MoE aux + optional MTP loss).  tokens: (B, S)."""
+    hidden, aux, _ = lm_backbone(params, cfg, tokens)
+    logits = lm_logits(params, cfg, hidden[:, :-1])
+    loss = L.cross_entropy_loss(logits, tokens[:, 1:])
+    if cfg.mtp:
+        # predict t+2 from (h_t, embed(token_{t+1})) — DeepSeek-V3 §2.2
+        h = hidden[:, :-2]
+        emb_next = params["embed"][tokens[:, 1:-1]].astype(h.dtype)
+        mtp_in = L.dense(params["mtp_proj"],
+                         jnp.concatenate([h, emb_next], axis=-1))
+        b, s2, _ = mtp_in.shape
+        pos = jnp.broadcast_to(jnp.arange(s2, dtype=jnp.int32)[None], (b, s2))
+        mtp_h, mtp_aux, _ = _layer_apply(
+            cfg, params["mtp_layer"], mtp_in, pos, jnp.int32(-1),
+            is_moe=False, cache=None)
+        mtp_logits = lm_logits(params, cfg, mtp_h)
+        loss = loss + mtp_weight * L.cross_entropy_loss(mtp_logits,
+                                                        tokens[:, 2:])
+    return loss + aux_weight * aux
+
+
+# ------------------------------------------------------------------ decode
+
+class BlockCache(NamedTuple):
+    """Per-block stacked KV cache.  GQA: k/v (L,B,S,Hkv,D); MLA: latent."""
+    a: jnp.ndarray
+    b: jnp.ndarray
+    pos: jnp.ndarray   # (L, B, S) slot positions (-2^30 = empty)
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int, *, filled: bool = False):
+    caches = []
+    dt = cfg.param_dtype
+    for blk in blocks_of(cfg):
+        lcount = blk["count"]
+        if filled:
+            pos = jnp.broadcast_to(
+                jnp.arange(max_len, dtype=jnp.int32)[None, None],
+                (lcount, batch, max_len))
+        else:
+            # empty slots carry +2^30 so the causal test q_pos >= k_pos
+            # masks them out until written
+            pos = jnp.full((lcount, batch, max_len), jnp.int32(2 ** 30))
+        if cfg.mla is not None:
+            r = cfg.mla
+            caches.append(BlockCache(
+                a=jnp.zeros((lcount, batch, max_len, r.kv_lora_rank), dt),
+                b=jnp.zeros((lcount, batch, max_len, 1, r.qk_rope_head_dim),
+                            dt),
+                pos=pos))
+        else:
+            shape = (lcount, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+            caches.append(BlockCache(a=jnp.zeros(shape, dt),
+                                     b=jnp.zeros(shape, dt), pos=pos))
+    return caches
+
+
+def _cache_write(cfg: LMConfig, buf, new, slot):
+    """Write ``new`` (B, 1, ...) at ring slot into ``buf`` (B, S, ...)."""
+    if not cfg.scatter_cache_update:
+        start = (0, slot) + (0,) * (buf.ndim - 2)
+        return jax.lax.dynamic_update_slice(buf, new.astype(buf.dtype),
+                                            start)
+    hit = (jnp.arange(buf.shape[1], dtype=jnp.int32) == slot)
+    hit = hit.reshape((1, -1) + (1,) * (buf.ndim - 2))
+    return jnp.where(hit, new.astype(buf.dtype), buf)
+
+
+def _layer_decode(cfg: LMConfig, p, x, positions, window, cache: dict,
+                  write_slot, *, is_moe: bool):
+    """One-token decode against a fixed-capacity ring cache."""
+    h = _norm(cfg, x, p.get("norm_attn"))
+    ck, cv, cpos = cache["a"], cache["b"], cache["pos"]
+    if cfg.mla is not None:
+        r = cfg.mla
+        from repro.models.layers import dense
+        b, s, _ = h.shape
+        dn, dr = r.qk_nope_head_dim, r.qk_rope_head_dim
+        q = dense(p["attn"]["wq_up"], dense(p["attn"]["wq_down"], h))
+        q = q.reshape(b, s, r.n_heads, dn + dr)
+        q_nope, q_rope = q[..., :dn], q[..., dn:]
+        q_rope = A.apply_rope(q_rope, positions, cfg.rope_theta)
+        kv = dense(p["attn"]["wkv_down"], h)
+        c_new, kr_new = kv[..., :r.kv_lora_rank], kv[..., r.kv_lora_rank:]
+        kr_new = A.apply_rope(kr_new[:, :, None, :], positions, cfg.rope_theta)
+        ck = _cache_write(cfg, ck, c_new, write_slot)
+        cv = _cache_write(cfg, cv, kr_new, write_slot)
+        cpos = _cache_write(cfg, cpos, positions.astype(cpos.dtype),
+                            write_slot)
+        sk = ck.shape[1]
+        scale = 1.0 / jnp.sqrt(jnp.float32(dn + dr))
+        mask = (positions[:, :, None] >= cpos[:, None, :])[:, None]
+        if cfg.absorbed_mla_decode:
+            # fold wk_up into q: q_abs (B,1,H,r_kv); attend latents directly
+            wk = p["attn"]["wk_up"]["w"].reshape(r.kv_lora_rank, r.n_heads,
+                                                 dn).astype(h.dtype)
+            q_abs = jnp.einsum("bqhd,rhd->bqhr", q_nope, wk)
+            logits = (jnp.einsum("bqhr,bkr->bhqk", q_abs, ck)
+                      + jnp.einsum("bqhd,bkd->bhqk", q_rope, cv[:, :, 0, :])
+                      ).astype(jnp.float32) * scale
+            logits = jnp.where(mask, logits, -1e30)
+            probs = jax.nn.softmax(logits, axis=-1).astype(h.dtype)
+            lat = jnp.einsum("bhqk,bkr->bqhr", probs, ck)
+            wv = p["attn"]["wv_up"]["w"].reshape(r.kv_lora_rank, r.n_heads,
+                                                 r.v_head_dim).astype(h.dtype)
+            a = jnp.einsum("bqhr,rhd->bqhd", lat, wv).reshape(
+                b, s, r.n_heads * r.v_head_dim)
+        else:
+            k_nope = dense(p["attn"]["wk_up"], ck).reshape(b, sk, r.n_heads,
+                                                           dn)
+            v = dense(p["attn"]["wv_up"], ck).reshape(b, sk, r.n_heads,
+                                                      r.v_head_dim)
+            logits = (jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope)
+                      + jnp.einsum("bqhd,bkd->bhqk", q_rope, cv[:, :, 0, :])
+                      ).astype(jnp.float32) * scale
+            logits = jnp.where(mask, logits, -1e30)
+            probs = jax.nn.softmax(logits, axis=-1).astype(h.dtype)
+            a = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(
+                b, s, r.n_heads * r.v_head_dim)
+        a = dense(p["attn"]["wo"], a)
+    else:
+        from repro.models.layers import dense
+        b, s, _ = h.shape
+        q = dense(p["attn"]["wq"], h).reshape(b, s, cfg.n_heads, cfg.head_dim)
+        k = dense(p["attn"]["wk"], h).reshape(b, s, cfg.n_kv_heads,
+                                              cfg.head_dim)
+        v = dense(p["attn"]["wv"], h).reshape(b, s, cfg.n_kv_heads,
+                                              cfg.head_dim)
+        q = A.apply_rope(q, positions, cfg.rope_theta)
+        k = A.apply_rope(k, positions, cfg.rope_theta)
+        ck = _cache_write(cfg, ck, k, write_slot)
+        cv = _cache_write(cfg, cv, v, write_slot)
+        cpos = _cache_write(cfg, cpos, positions.astype(cpos.dtype),
+                            write_slot)
+        a = A._sdpa(q, ck, cv, positions, cpos, window,
+                    1.0 / jnp.sqrt(cfg.head_dim).astype(jnp.float32),
+                    shard=cfg.attn_shard)
+        a = dense(p["attn"]["wo"], a.reshape(b, s,
+                                             cfg.n_heads * cfg.head_dim))
+    x = x + a
+    h = _norm(cfg, x, p.get("norm_ffn"))
+    if is_moe:
+        f, _ = M.moe_apply(p["moe"], h, cfg.moe, act=cfg.act)
+    else:
+        f = L.ffn(p["ffn"], h, act=cfg.act)
+    return x + f, {"a": ck, "b": cv, "pos": cpos}
+
+
+def serve_step(params, cfg: LMConfig, tokens, caches, cur_pos):
+    """Decode one token.  tokens (B,1); caches from init_cache; cur_pos ()
+    int32 = logical position of this token; ring slot = cur_pos % capacity.
+    Returns (logits (B,1,V), new caches)."""
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(cur_pos[None, None].astype(jnp.int32),
+                                 (b, s))
+    x = cfg.constrain(params["embed"][tokens].astype(cfg.param_dtype),
+                      None, None)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
+    new_caches = []
+    for bi, blk in enumerate(blocks_of(cfg)):
+        bp = params[f"block{bi}"]
+        wins = jnp.asarray(blk["windows"], jnp.int32)
+        cap = caches[bi].pos.shape[-1]
+        slot = (cur_pos % cap).astype(jnp.int32)
+
+        def scan_fn(x, xs):
+            lp, w, ca, cb, cp = xs
+            x, nc = _layer_decode(cfg, lp, x, positions, w,
+                                  {"a": ca, "b": cb, "pos": cp}, slot,
+                                  is_moe=blk["is_moe"])
+            return x, (nc["a"], nc["b"], nc["pos"])
+
+        xs = (bp, wins, caches[bi].a, caches[bi].b, caches[bi].pos)
+        if cfg.unroll:
+            outs = []
+            for li in range(blk["count"]):
+                xsl = jax.tree_util.tree_map(lambda a: a[li], xs)
+                x, o = scan_fn(x, xsl)
+                outs.append(o)
+            na, nb, npos = jax.tree_util.tree_map(lambda *a: jnp.stack(a),
+                                                  *outs)
+        else:
+            x, (na, nb, npos) = jax.lax.scan(scan_fn, x, xs)
+        new_caches.append(BlockCache(a=na, b=nb, pos=npos))
+    x = _norm(cfg, x, params.get("norm_final"))
+    return lm_logits(params, cfg, x), new_caches

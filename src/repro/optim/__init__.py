@@ -1,0 +1,9 @@
+from repro.optim.adamw import (AdamWConfig, AdamWState, adamw_init,
+                               adamw_update, global_norm)
+from repro.optim.compress import EFState, ef_init, compress_grads, \
+    decompress_grads, psum_compressed
+from repro.optim.schedule import cosine_with_warmup
+
+__all__ = ["AdamWConfig", "AdamWState", "adamw_init", "adamw_update",
+           "global_norm", "EFState", "ef_init", "compress_grads",
+           "decompress_grads", "psum_compressed", "cosine_with_warmup"]

@@ -1,0 +1,116 @@
+"""AdamW with optional block-quantized int8 moments (fits 671B on one pod).
+
+The int8 state path quantizes m and v per 256-element block with a float32
+scale (absmax quantization), cutting optimizer memory from 8 bytes/param to
+~2.03 bytes/param — the enabler for deepseek-v3 training on a single v5e pod
+(see EXPERIMENTS.md §Dry-run memory table).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    int8_states: bool = False
+    block: int = 256
+    grad_clip: Optional[float] = 1.0
+
+
+# ------------------------------------------------------- int8 quantization
+#
+# Shape-preserving absmax quantization along the LAST axis: q keeps the
+# param's shape (int8), scales keep all leading axes (last axis / block).
+# This makes the optimizer-state sharding identical to the param sharding
+# (scales: same spec with the last axis replicated) — see launch/sharding.py.
+
+def _block_for(last: int, block: int) -> int:
+    return block if (last % block == 0) else last
+
+
+def _quantize(x, block):
+    x = x if x.ndim else x.reshape(1)
+    last = x.shape[-1]
+    b = _block_for(last, block)
+    xr = x.reshape(*x.shape[:-1], last // b, b)
+    scale = jnp.max(jnp.abs(xr), axis=-1) / 127.0
+    q = jnp.round(xr / jnp.maximum(scale, 1e-20)[..., None])
+    return (q.astype(jnp.int8).reshape(x.shape),
+            scale.astype(jnp.float32))
+
+
+def _dequantize(q, scale, shape=None):
+    nb = scale.shape[-1]
+    b = q.shape[-1] // nb
+    qr = q.reshape(*q.shape[:-1], nb, b).astype(jnp.float32)
+    out = (qr * scale[..., None]).reshape(q.shape)
+    return out.reshape(shape) if shape is not None else out
+
+
+# ----------------------------------------------------------------- update
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: any
+    v: any
+
+
+def adamw_init(params, cfg: AdamWConfig) -> AdamWState:
+    if cfg.int8_states:
+        zeros = jax.tree.map(
+            lambda p: _quantize(jnp.zeros_like(p, jnp.float32), cfg.block), params)
+    else:
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros, v=zeros)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, state: AdamWState, params, cfg: AdamWConfig):
+    step = state.step + 1
+    if cfg.grad_clip is not None:
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        if cfg.int8_states:
+            m_f = _dequantize(m[0], m[1], p.shape)
+            v_f = _dequantize(v[0], v[1], p.shape)
+        else:
+            m_f, v_f = m, v
+        m_f = cfg.b1 * m_f + (1 - cfg.b1) * g
+        v_f = cfg.b2 * v_f + (1 - cfg.b2) * g * g
+        mhat = m_f / bc1
+        vhat = v_f / bc2
+        new_p = (p.astype(jnp.float32)
+                 - cfg.lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                             + cfg.weight_decay * p.astype(jnp.float32)))
+        if cfg.int8_states:
+            return (new_p.astype(p.dtype), _quantize(m_f, cfg.block),
+                    _quantize(v_f, cfg.block))
+        return new_p.astype(p.dtype), m_f, v_f
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v)
+           for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, m=new_m, v=new_v)

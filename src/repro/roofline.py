@@ -1,0 +1,355 @@
+"""Roofline terms from a compiled dry-run artifact (EXPERIMENTS.md §Roofline).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+  compute term    = HLO_FLOPs_per_chip / peak_FLOP/s
+  memory term     = HLO_bytes_per_chip / HBM_bw
+  collective term = wire_bytes_per_chip / link_bw
+
+``cost_analysis()`` of the SPMD-partitioned executable reports *per-chip*
+flops/bytes (the partitioned module is the per-device program), so the terms
+above divide by single-chip peaks.  collective bytes are parsed from the
+optimized HLO text: per collective op we estimate per-chip wire bytes with
+ring-algorithm factors (all-reduce 2x payload, all-gather/reduce-scatter/
+all-to-all ~1x, collective-permute 1x).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, asdict
+
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+LINK_BW = 50e9            # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<types>.+?)\s+"
+    r"(?P<op>all-reduce(?:-start)?|all-gather(?:-start)?|"
+    r"reduce-scatter|all-to-all|collective-permute(?:-start)?|"
+    r"collective-broadcast)\(")
+
+_TYPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+
+_WIRE_FACTOR = {
+    "all-reduce": 2.0,          # ring: reduce-scatter + all-gather
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+    "collective-broadcast": 1.0,
+}
+
+
+def _type_bytes(types_str: str) -> int:
+    total = 0
+    for dt, dims in _TYPE_RE.findall(types_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    n_ops: int = 0
+    wire_bytes: float = 0.0
+    by_op: dict = None
+
+
+_COMP_RE = re.compile(r"^(?:ENTRY )?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*"
+                      r"\([^)]*\)? -> .*\{\s*$")
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-~!]+)\s+\(.*\{\s*$")
+_CALLEE_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w\.\-~!]+)")
+_WHILE_RE = re.compile(r"\bwhile\(.*?\bcondition=%?([\w\.\-~!]+).*?"
+                       r"\bbody=%?([\w\.\-~!]+)|\bwhile\(.*?"
+                       r"\bbody=%?([\w\.\-~!]+).*?\bcondition=%?([\w\.\-~!]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _COMP_START_RE.match(line)
+        if m and ("->" in line):
+            cur = m.group(1)
+            comps[cur] = []
+        elif cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    """Scan trip count: the largest integer constant compared in the cond."""
+    best = 1
+    for line in cond_lines:
+        if "constant(" in line:
+            for c in _CONST_RE.findall(line):
+                best = max(best, int(c))
+    return best
+
+
+def _multipliers(comps: dict[str, list[str]]) -> dict[str, float]:
+    """Execution-count multiplier per computation (while bodies x trip)."""
+    # call edges: (caller -> callee, weight)
+    edges: dict[str, list[tuple[str, float]]] = {c: [] for c in comps}
+    for name, lines in comps.items():
+        for line in lines:
+            mw = re.search(r"\bwhile\(", line)
+            callees = _CALLEE_RE.findall(line)
+            if mw:
+                cond = body = None
+                m1 = re.search(r"condition=%?([\w\.\-~!]+)", line)
+                m2 = re.search(r"body=%?([\w\.\-~!]+)", line)
+                cond = m1.group(1) if m1 else None
+                body = m2.group(1) if m2 else None
+                trip = _trip_count(comps.get(cond, [])) if cond else 1
+                if body in comps:
+                    edges[name].append((body, float(trip)))
+                if cond in comps:
+                    edges[name].append((cond, float(trip)))
+            else:
+                for c in callees:
+                    if c in comps:
+                        edges[name].append((c, 1.0))
+    # roots: computations never referenced (the entry); propagate with
+    # sum-over-call-sites semantics by fixed-point relaxation (call graph
+    # is a DAG, so this converges within its depth)
+    referenced = {c for outs in edges.values() for c, _ in outs}
+    roots = [c for c in comps if c not in referenced]
+    mult = {c: (1.0 if c in roots else 0.0) for c in comps}
+    for _ in range(80):
+        new = {c: (1.0 if c in roots else 0.0) for c in comps}
+        for caller, outs in edges.items():
+            for callee, w in outs:
+                new[callee] += mult[caller] * w
+        if all(abs(new[c] - mult[c]) < 1e-9 for c in comps):
+            mult = new
+            break
+        mult = new
+    return mult
+
+
+def _multipliers_kinds(comps: dict[str, list[str]]):
+    """Two multiplier maps: one following all call edges (flops), one
+    excluding fusion/to_apply edges (bytes — XLA counts a fusion as its
+    operands+outputs, not its interior)."""
+    all_edges: dict[str, list[tuple[str, float]]] = {c: [] for c in comps}
+    loop_edges: dict[str, list[tuple[str, float]]] = {c: [] for c in comps}
+    for name, lines in comps.items():
+        for line in lines:
+            m2 = re.search(r"body=%?([\w\.\-~!]+)", line)
+            m1 = re.search(r"condition=%?([\w\.\-~!]+)", line)
+            if " while(" in line and m2:
+                cond = m1.group(1) if m1 else None
+                body = m2.group(1)
+                trip = _trip_count(comps.get(cond, [])) if cond else 1
+                for tgt in (body, cond):
+                    if tgt in comps:
+                        all_edges[name].append((tgt, float(trip)))
+                        loop_edges[name].append((tgt, float(trip)))
+                continue
+            for c in _CALLEE_RE.findall(line):
+                if c in comps:
+                    all_edges[name].append((c, 1.0))
+
+    def solve(edges):
+        referenced = {c for outs in edges.values() for c, _ in outs}
+        roots = [c for c in comps if c not in referenced]
+        # roots for loop_edges include fusion comps (unreachable) — zero
+        # them unless they are true entry roots of the *all* graph
+        mult = {c: (1.0 if c in roots else 0.0) for c in comps}
+        for _ in range(80):
+            new = {c: (1.0 if c in roots else 0.0) for c in comps}
+            for caller, outs in edges.items():
+                for callee, w in outs:
+                    new[callee] += mult[caller] * w
+            if all(abs(new[c] - mult[c]) < 1e-9 for c in comps):
+                return new
+            mult = new
+        return mult
+
+    all_mult = solve(all_edges)
+    # bytes graph: roots = same entry as all-graph; fusion callees excluded
+    ref_all = {c for outs in all_edges.values() for c, _ in outs}
+    entry_roots = [c for c in comps if c not in ref_all]
+    bytes_mult = {c: (1.0 if c in entry_roots else 0.0) for c in comps}
+    for _ in range(80):
+        new = {c: (1.0 if c in entry_roots else 0.0) for c in comps}
+        for caller, outs in loop_edges.items():
+            for callee, w in outs:
+                new[callee] += bytes_mult[caller] * w
+        if all(abs(new[c] - bytes_mult[c]) < 1e-9 for c in comps):
+            bytes_mult = new
+            break
+        bytes_mult = new
+    return all_mult, bytes_mult
+
+
+_LHS_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-~!]+)\s*=\s*(.+?)\s+"
+                     r"([a-z][a-z0-9\-]*)\(")
+_SHAPE1_RE = re.compile(r"^\(?([a-z0-9]+)\[([0-9,]*)\]")
+_OPERAND_RE = re.compile(r"%([\w\.\-~!]+)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _dims(s: str) -> list[int]:
+    return [int(d) for d in s.split(",") if d]
+
+
+def hlo_cost(hlo_text: str) -> tuple[float, float]:
+    """(flops, bytes_accessed) with while-body trip weighting.
+
+    flops: 2 * prod(out) * prod(contracted lhs dims) per dot op (matmul
+    convention; elementwise flops are negligible for these workloads).
+    bytes: per op, output + operand tensor bytes (the XLA bytes-accessed
+    convention), fusion interiors excluded; while bodies weighted by trip.
+    """
+    comps = _split_computations(hlo_text)
+    fmult, bmult = _multipliers_kinds(comps)
+    flops = 0.0
+    byts = 0.0
+    for name, lines in comps.items():
+        fm = fmult.get(name, 0.0)
+        bm = bmult.get(name, 0.0)
+        if fm <= 0 and bm <= 0:
+            continue
+        # symbol table: op name -> (bytes, dims-of-first-shape)
+        table: dict[str, tuple[int, list[int] | None]] = {}
+        parsed = []
+        for line in lines:
+            m = _LHS_RE.match(line)
+            if not m:
+                continue
+            lhs_name, type_str, opkind = m.groups()
+            b = _type_bytes(type_str)
+            ms = _SHAPE1_RE.match(type_str.strip())
+            dims = _dims(ms.group(2)) if ms else None
+            table[lhs_name] = (b, dims)
+            parsed.append((lhs_name, type_str, opkind, line))
+        for lhs_name, type_str, opkind, line in parsed:
+            rest = line.split(opkind + "(", 1)[1] if opkind + "(" in line \
+                else ""
+            args = rest.split(")", 1)[0]
+            operands = [o for o in _OPERAND_RE.findall(args) if o in table]
+            if fm > 0 and opkind == "dot":
+                mc = _LHS_CONTRACT_RE.search(line)
+                out_dims = table[lhs_name][1] or []
+                lhs_dims = (table[operands[0]][1] or []) if operands else []
+                if mc is not None:
+                    k = 1
+                    for d in _dims(mc.group(1)):
+                        if d < len(lhs_dims):
+                            k *= lhs_dims[d]
+                    n = 1
+                    for d in out_dims:
+                        n *= d
+                    flops += 2.0 * n * k * fm
+            if bm > 0 and opkind not in ("parameter", "constant",
+                                         "get-tuple-element", "tuple",
+                                         "bitcast"):
+                total = table[lhs_name][0]
+                total += sum(table[o][0] for o in operands)
+                byts += total * bm
+    return flops, byts
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Collective wire bytes, with while-body ops multiplied by trip count
+    (XLA prints / cost-counts loop bodies once)."""
+    comps = _split_computations(hlo_text)
+    mult = _multipliers(comps) if comps else {}
+    by_op: dict[str, float] = {}
+    n = 0
+
+    def scan_lines(lines, m):
+        nonlocal n
+        for line in lines:
+            mm = _COLL_RE.search(line)
+            if not mm:
+                continue
+            op = mm.group("op").replace("-start", "")
+            payload = _type_bytes(mm.group("types"))
+            by_op[op] = by_op.get(op, 0.0) + payload * _WIRE_FACTOR[op] * m
+            n += 1
+
+    if comps:
+        for name, lines in comps.items():
+            scan_lines(lines, max(mult.get(name, 0.0), 0.0) or 0.0)
+    else:
+        scan_lines(hlo_text.splitlines(), 1.0)
+    return CollectiveStats(n_ops=n, wire_bytes=sum(by_op.values()),
+                           by_op=by_op)
+
+
+@dataclass
+class Roofline:
+    flops_per_chip: float
+    bytes_per_chip: float
+    wire_bytes_per_chip: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    dominant: str
+    model_flops: float | None = None
+    useful_flops_ratio: float | None = None
+    n_collectives: int = 0
+    collectives_by_op: dict = None
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def roofline_from(cost: dict, hlo_text: str, *, chips: int,
+                  model_flops: float | None = None) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    coll = parse_collectives(hlo_text)
+    t_c = flops / PEAK_FLOPS
+    t_m = byts / HBM_BW
+    t_x = coll.wire_bytes / LINK_BW
+    dominant = max((("compute", t_c), ("memory", t_m),
+                    ("collective", t_x)), key=lambda kv: kv[1])[0]
+    ratio = None
+    if model_flops:
+        total_hlo = flops * chips
+        ratio = model_flops / total_hlo if total_hlo else None
+    return Roofline(flops_per_chip=flops, bytes_per_chip=byts,
+                    wire_bytes_per_chip=coll.wire_bytes,
+                    t_compute=t_c, t_memory=t_m, t_collective=t_x,
+                    dominant=dominant, model_flops=model_flops,
+                    useful_flops_ratio=ratio, n_collectives=coll.n_ops,
+                    collectives_by_op=coll.by_op)
+
+
+def lm_model_flops(cfg, tokens: int, *, training: bool) -> float:
+    """6·N·D (dense) or 6·N_active·D (MoE); D = tokens processed."""
+    import jax
+    import numpy as np
+    from repro.models import transformer as T
+
+    shapes = jax.eval_shape(lambda: T.lm_init(jax.random.key(0), cfg))
+    active = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        p = jax.tree_util.keystr(path)
+        n = int(np.prod(leaf.shape))
+        if "'embed'" in p:
+            # lookup is a gather, not a matmul; tied head counted below
+            continue
+        if "experts" in p and cfg.moe is not None:
+            active += n * cfg.moe.top_k // cfg.moe.n_experts
+        else:
+            active += n
+    if cfg.tie_embeddings:
+        active += cfg.vocab * cfg.d_model      # LM head matmul
+    mult = 3.0 if training else 1.0            # fwd + 2x bwd
+    return 2.0 * active * tokens * mult

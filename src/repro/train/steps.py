@@ -1,0 +1,81 @@
+"""train_step / serve_step builders: the units the launcher jits and shards.
+
+``build_lm_train_step`` returns a pure (state, batch) -> (state, metrics)
+function with: remat policy over layers (scan already bounds HLO size; remat
+bounds activation memory), AdamW (optionally int8 states), grad accumulation
+microbatching, optional error-feedback compressed DP reduction.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.optim import (AdamWConfig, AdamWState, adamw_init, adamw_update,
+                         cosine_with_warmup)
+
+
+class TrainState(NamedTuple):
+    step: jnp.ndarray
+    params: any
+    opt: AdamWState
+
+
+def init_train_state(key, cfg, opt_cfg: AdamWConfig) -> TrainState:
+    params = T.lm_init(key, cfg)
+    return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                      opt=adamw_init(params, opt_cfg))
+
+
+def build_lm_train_step(cfg, opt_cfg: AdamWConfig, *, remat: bool = True,
+                        microbatches: int = 1, schedule=None):
+    import dataclasses
+    if remat and not cfg.remat:
+        cfg = dataclasses.replace(cfg, remat=True)   # per-layer scan remat
+    loss_fn = T.lm_loss
+
+    def compute_grads(params, tokens):
+        if microbatches == 1:
+            return jax.value_and_grad(lambda p: loss_fn(p, cfg, tokens))(params)
+        mb = tokens.reshape(microbatches, -1, tokens.shape[-1])
+
+        def acc(carry, batch):
+            loss_sum, g_sum = carry
+            l, g = jax.value_and_grad(
+                lambda p: loss_fn(p, cfg, batch))(params)
+            return (loss_sum + l,
+                    jax.tree.map(jnp.add, g_sum, g)), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        (loss, grads), _ = jax.lax.scan(acc, (jnp.float32(0), zeros), mb)
+        scale = 1.0 / microbatches
+        return loss * scale, jax.tree.map(lambda g: g * scale, grads)
+
+    def train_step(state: TrainState, tokens):
+        loss, grads = compute_grads(state.params, tokens)
+        ocfg = opt_cfg
+        if schedule is not None:
+            ocfg = opt_cfg._replace(lr=schedule(state.step))
+        new_params, new_opt = adamw_update(grads, state.opt, state.params,
+                                           ocfg)
+        return (TrainState(step=state.step + 1, params=new_params,
+                           opt=new_opt),
+                {"loss": loss.astype(jnp.float32)})
+
+    return train_step
+
+
+def build_lm_serve_step(cfg):
+    def serve_step(params, tokens, caches, cur_pos):
+        return T.serve_step(params, cfg, tokens, caches, cur_pos)
+    return serve_step
+
+
+def build_lm_prefill(cfg):
+    def prefill(params, tokens):
+        hidden, _, _ = T.lm_backbone(params, cfg, tokens)
+        return T.lm_logits(params, cfg, hidden[:, -1:])
+    return prefill

@@ -1,0 +1,174 @@
+"""Coverage greedy vs. numpy oracle (exact), IMM end-to-end, LT, MRIM."""
+import numpy as np
+import jax
+import pytest
+
+from repro.graph import csr as csr_mod
+from repro.graph import generators, weights
+from repro.core import coverage as cov
+from repro.core import oracle, lt as lt_mod, forward, mrim
+from repro.core.imm import imm as imm_solve
+
+
+def _wc_graph(n=60, m=240, seed=0):
+    src, dst = generators.erdos_renyi(n, m, seed=seed)
+    return weights.wc_weights(csr_mod.from_edges(src, dst, n))
+
+
+def _random_rr_sets(n, count, rng, max_len=8):
+    sets = []
+    for _ in range(count):
+        ln = int(rng.integers(1, max_len))
+        sets.append(rng.choice(n, size=ln, replace=False).tolist())
+    return sets
+
+
+def test_greedy_matches_oracle_exactly():
+    rng = np.random.default_rng(0)
+    n, k = 50, 6
+    rr = _random_rr_sets(n, 300, rng)
+    store = cov.build_store(rr, n)
+    res = cov.select_seeds(store, k)
+    seeds_o, frac_o = oracle.greedy_max_coverage(rr, n, k)
+    assert np.asarray(res.seeds).tolist() == seeds_o
+    assert abs(float(res.frac) - frac_o) < 1e-6
+
+
+def test_occur_histogram():
+    rng = np.random.default_rng(1)
+    n = 30
+    rr = _random_rr_sets(n, 100, rng)
+    store = cov.build_store(rr, n)
+    occ = np.asarray(cov.occur_histogram(store))
+    expect = np.zeros(n, dtype=np.int64)
+    for row in rr:
+        for v in row:
+            expect[v] += 1
+    np.testing.assert_array_equal(occ, expect)
+
+
+def test_build_store_from_padded_arrays():
+    nodes = np.asarray([[3, 1, 0, 0], [2, 0, 0, 0], [4, 5, 6, 0]])
+    lens = np.asarray([2, 1, 3])
+    store = cov.build_store((nodes, lens), 8)
+    assert store.n_rr == 3
+    flat = np.asarray(store.rr_flat)[np.asarray(store.valid)]
+    assert flat.tolist() == [3, 1, 2, 4, 5, 6]
+    ids = np.asarray(store.rr_ids)[np.asarray(store.valid)]
+    assert ids.tolist() == [0, 0, 1, 2, 2, 2]
+
+
+def test_merge_stores():
+    s1 = cov.build_store([[0, 1], [2]], 5)
+    s2 = cov.build_store([[3], [4, 0]], 5)
+    m = cov.merge_stores([s1, s2])
+    assert m.n_rr == 4
+    res = cov.select_seeds(m, 1)
+    assert int(res.seeds[0]) == 0  # node 0 covers 2 of 4 sets
+
+
+def test_imm_pipeline_end_to_end_quality():
+    """IMM (both engines) reaches the oracle IMM's influence spread."""
+    g = _wc_graph(n=80, m=400, seed=2)
+    k, eps = 4, 0.4
+    # oracle IMM
+    g_rev = csr_mod.reverse(g)
+    offs = np.asarray(g_rev.offsets); idx = np.asarray(g_rev.indices)
+    w = np.asarray(g_rev.weights)
+    seeds_o, _, theta_o = oracle.imm_oracle(offs, idx, w, g.n_nodes, k, eps,
+                                            seed=0)
+    rng = np.random.default_rng(123)
+    foffs = np.asarray(g.offsets); fidx = np.asarray(g.indices)
+    fw = np.asarray(g.weights)
+    spread_o = oracle.forward_ic_spread(foffs, fidx, fw, seeds_o, rng, 300)
+    for engine in ("queue", "dense"):
+        seeds, est, stats = imm_solve(g, k, eps, engine=engine, batch=128,
+                                    seed=1)
+        assert len(set(seeds.tolist())) == k
+        assert stats.theta > 0 and stats.n_rr_sampled >= stats.theta
+        spread = oracle.forward_ic_spread(foffs, fidx, fw, seeds.tolist(),
+                                          rng, 300)
+        # same quality within 15% (both are (1-1/e-eps) approximations)
+        assert spread >= 0.85 * spread_o, (engine, spread, spread_o)
+
+
+def test_rr_spread_estimator_matches_forward_mc():
+    """Eq. (3): n * Pr[S cap RR != 0] ~= E[I(S)] (statistical)."""
+    g = _wc_graph(n=50, m=250, seed=4)
+    g_rev = csr_mod.reverse(g)
+    seeds = [0, 7, 13]
+    from repro.core import rrset
+    hits, total = 0, 0
+    for i in range(8):
+        s = rrset.sample_rrsets_queue(jax.random.key(i), g_rev, 256,
+                                      qcap=g.n_nodes)
+        for row in rrset.to_lists(s):
+            total += 1
+            if set(row) & set(seeds):
+                hits += 1
+    est_ris = g.n_nodes * hits / total
+    est_fwd = forward.ic_spread(jax.random.key(99), g, seeds, n_sims=2048)
+    assert abs(est_ris - est_fwd) / est_fwd < 0.15, (est_ris, est_fwd)
+
+
+# ---------------------------------------------------------------------- LT
+
+def test_lt_walk_validity():
+    g = _wc_graph(n=50, m=300, seed=5)   # WC: in-weights sum to 1 -> valid LT
+    g_rev = csr_mod.reverse(g)
+    s = lt_mod.sample_rrsets_lt(jax.random.key(0), g_rev, batch=64,
+                                qcap=g.n_nodes)
+    nodes = np.asarray(s.nodes); lens = np.asarray(s.lengths)
+    offs = np.asarray(g_rev.offsets); idx = np.asarray(g_rev.indices)
+    for b in range(64):
+        row = nodes[b, :lens[b]].tolist()
+        assert len(set(row)) == len(row)
+        # consecutive nodes connected in reverse graph
+        for u, v in zip(row, row[1:]):
+            assert v in idx[offs[u]:offs[u + 1]].tolist()
+
+
+def test_lt_matches_oracle_statistically():
+    g = _wc_graph(n=40, m=240, seed=6)
+    g_rev = csr_mod.reverse(g)
+    offs = np.asarray(g_rev.offsets); idx = np.asarray(g_rev.indices)
+    w = np.asarray(g_rev.weights)
+    rng = np.random.default_rng(0)
+    total = 1024
+    occ_o = np.zeros(g.n_nodes)
+    for _ in range(total):
+        for v in oracle.rr_set_lt(offs, idx, w, int(rng.integers(g.n_nodes)), rng):
+            occ_o[v] += 1
+    occ_j = np.zeros(g.n_nodes)
+    for i in range(total // 128):
+        s = lt_mod.sample_rrsets_lt(jax.random.key(i), g_rev, 128,
+                                    qcap=g.n_nodes)
+        nodes = np.asarray(s.nodes); lens = np.asarray(s.lengths)
+        for b in range(128):
+            occ_j[nodes[b, :lens[b]]] += 1
+    p_o, p_j = occ_o / total, occ_j / total
+    se = np.sqrt((p_o * (1 - p_o) + p_j * (1 - p_j)) / total) + 1e-9
+    z = np.abs(p_o - p_j) / se
+    assert z.max() < 4.5, f"max z={z.max():.2f}"
+
+
+def test_imm_lt_model_runs():
+    g = _wc_graph(n=60, m=300, seed=7)
+    seeds, est, stats = imm_solve(g, 3, 0.45, model="lt", batch=128, seed=3)
+    assert len(set(seeds.tolist())) == 3
+    # estimate within 25% of forward LT MC
+    fwd = forward.lt_spread(jax.random.key(5), g, seeds.tolist(), n_sims=1024)
+    assert abs(est - fwd) / fwd < 0.25, (est, fwd)
+
+
+# -------------------------------------------------------------------- MRIM
+
+def test_mrim_budgets_and_quality():
+    g = _wc_graph(n=50, m=250, seed=8)
+    res = mrim.solve_mrim(g, k=2, t_rounds=3, n_rr=512, batch=64, seed=0)
+    assert len(res.seeds_per_round) == 3
+    for s in res.seeds_per_round:
+        assert len(s) == 2
+    # spread of T rounds of k seeds >= spread of single round (monotonicity)
+    single = mrim.solve_mrim(g, k=2, t_rounds=1, n_rr=512, batch=64, seed=0)
+    assert res.spread_estimate >= single.spread_estimate * 0.95

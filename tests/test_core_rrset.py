@@ -1,0 +1,166 @@
+"""RR-set engine correctness: deterministic, structural, and statistical."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import networkx as nx
+import pytest
+
+from repro.graph import csr as csr_mod
+from repro.graph import generators, weights
+from repro.core import rrset, dense, coverage as cov
+from repro.core import oracle
+
+
+def _wc_graph(n=60, m=240, seed=0):
+    src, dst = generators.erdos_renyi(n, m, seed=seed)
+    return weights.wc_weights(csr_mod.from_edges(src, dst, n))
+
+
+def _det_graph(p, n=40, m=160, seed=1):
+    src, dst = generators.erdos_renyi(n, m, seed=seed)
+    return weights.uniform_weights(csr_mod.from_edges(src, dst, n), p=p)
+
+
+def _nx_reverse_reach(g, root):
+    src, dst, _ = csr_mod.to_edges(g)
+    G = nx.DiGraph()
+    G.add_nodes_from(range(g.n_nodes))
+    G.add_edges_from(zip(src.tolist(), dst.tolist()))
+    return nx.ancestors(G, root) | {root}
+
+
+@pytest.mark.parametrize("engine", ["queue", "dense"])
+def test_p1_rrset_equals_reverse_reachability(engine):
+    """With p=1 every edge survives: RR set == exact reverse-reachable set."""
+    g = _det_graph(p=1.0)
+    g_rev = csr_mod.reverse(g)
+    key = jax.random.key(0)
+    if engine == "queue":
+        s = rrset.sample_rrsets_queue(key, g_rev, batch=16, qcap=g.n_nodes)
+        rr = rrset.to_lists(s)
+        roots = np.asarray(s.roots)
+        assert not bool(np.asarray(s.overflowed).any())
+    else:
+        s = dense.sample_rrsets_dense(key, g_rev, batch=16)
+        rr = dense.membership_to_lists(s.membership)
+        roots = np.asarray(s.roots)
+    for row, root in zip(rr, roots):
+        assert set(row) == _nx_reverse_reach(g, int(root))
+
+
+@pytest.mark.parametrize("engine", ["queue", "dense"])
+def test_p0_rrset_is_singleton(engine):
+    g = _det_graph(p=0.0)
+    g_rev = csr_mod.reverse(g)
+    key = jax.random.key(1)
+    if engine == "queue":
+        s = rrset.sample_rrsets_queue(key, g_rev, batch=8, qcap=g.n_nodes)
+        rr = rrset.to_lists(s)
+        roots = np.asarray(s.roots)
+    else:
+        s = dense.sample_rrsets_dense(key, g_rev, batch=8)
+        rr = dense.membership_to_lists(s.membership)
+        roots = np.asarray(s.roots)
+    for row, root in zip(rr, roots):
+        assert row == [int(root)]
+
+
+def test_queue_rrsets_are_valid_and_unique():
+    """Structural invariants: root first, no duplicates, all reverse-reachable."""
+    g = _wc_graph()
+    g_rev = csr_mod.reverse(g)
+    s = rrset.sample_rrsets_queue(jax.random.key(2), g_rev, batch=64,
+                                  qcap=g.n_nodes)
+    rr = rrset.to_lists(s)
+    roots = np.asarray(s.roots)
+    for row, root in zip(rr, roots):
+        assert row[0] == int(root)
+        assert len(set(row)) == len(row)
+        reach = _nx_reverse_reach(g, int(root))
+        assert set(row) <= reach
+
+
+def test_queue_small_chunk_matches_structure():
+    """EC smaller than degrees exercises the multi-chunk path."""
+    g = _det_graph(p=1.0, n=30, m=300, seed=3)
+    g_rev = csr_mod.reverse(g)
+    s = rrset.sample_rrsets_queue(jax.random.key(3), g_rev, batch=8,
+                                  qcap=g.n_nodes, ec=4)
+    rr = rrset.to_lists(s)
+    for row, root in zip(rr, np.asarray(s.roots)):
+        assert set(row) == _nx_reverse_reach(g, int(root))
+
+
+def test_engines_agree_statistically():
+    """Occur rates of both engines agree within CLT tolerance (same dist)."""
+    g = _wc_graph(n=40, m=200, seed=5)
+    g_rev = csr_mod.reverse(g)
+    B, R = 128, 8
+    occ_q = np.zeros(g.n_nodes)
+    occ_d = np.zeros(g.n_nodes)
+    for i in range(R):
+        sq = rrset.sample_rrsets_queue(jax.random.key(10 + i), g_rev, B,
+                                       qcap=g.n_nodes)
+        for row in rrset.to_lists(sq):
+            occ_q[row] += 1
+        sd = dense.sample_rrsets_dense(jax.random.key(100 + i), g_rev, B)
+        occ_d += np.asarray(sd.membership).sum(axis=0)
+    total = B * R
+    p_q, p_d = occ_q / total, occ_d / total
+    se = np.sqrt((p_q * (1 - p_q) + p_d * (1 - p_d)) / total) + 1e-9
+    z = np.abs(p_q - p_d) / se
+    # 40 comparisons; allow 4.5 sigma
+    assert z.max() < 4.5, f"max z={z.max():.2f}"
+
+
+def test_queue_engine_matches_oracle_statistically():
+    g = _wc_graph(n=40, m=200, seed=6)
+    g_rev = csr_mod.reverse(g)
+    offs = np.asarray(g_rev.offsets); idx = np.asarray(g_rev.indices)
+    w = np.asarray(g_rev.weights)
+    rng = np.random.default_rng(0)
+    total = 1024
+    occ_o = np.zeros(g.n_nodes)
+    for _ in range(total):
+        for v in oracle.rr_set_ic(offs, idx, w, int(rng.integers(g.n_nodes)), rng):
+            occ_o[v] += 1
+    occ_q = np.zeros(g.n_nodes)
+    for i in range(total // 128):
+        s = rrset.sample_rrsets_queue(jax.random.key(i), g_rev, 128,
+                                      qcap=g.n_nodes)
+        for row in rrset.to_lists(s):
+            occ_q[row] += 1
+    p_o, p_q = occ_o / total, occ_q / total
+    se = np.sqrt((p_o * (1 - p_o) + p_q * (1 - p_q)) / total) + 1e-9
+    z = np.abs(p_o - p_q) / se
+    assert z.max() < 4.5, f"max z={z.max():.2f}"
+
+
+def test_overflow_flag_set_when_qcap_too_small():
+    g = _det_graph(p=1.0, n=50, m=400, seed=7)
+    g_rev = csr_mod.reverse(g)
+    s = rrset.sample_rrsets_queue(jax.random.key(4), g_rev, batch=32, qcap=2)
+    rr = rrset.to_lists(s)
+    # every produced row still fits the cap and is duplicate-free
+    for row in rr:
+        assert len(row) <= 2
+        assert len(set(row)) == len(row)
+    assert bool(np.asarray(s.overflowed).any())
+
+
+def test_multi_edges_single_enqueue():
+    """Parallel edges to one node: p=1 must not enqueue the node twice."""
+    src = np.asarray([0, 0, 0, 0, 1, 1])
+    dst = np.asarray([1, 1, 1, 2, 2, 2])
+    g = csr_mod.from_edges(src, dst, 3,
+                           weights=np.ones(6, dtype=np.float32))
+    g_rev = csr_mod.reverse(g)
+    # root=2 in reverse graph reaches 0 and 1 through parallel edges
+    nodes, lengths, overflow, _ = rrset._sample_queue(
+        jax.random.key(0), g_rev.offsets, g_rev.indices, g_rev.weights,
+        jnp.asarray([2, 2, 2, 2], jnp.int32), batch=4, qcap=3, ec=8,
+        n=3, m=6)
+    for b in range(4):
+        row = np.asarray(nodes[b, :int(lengths[b])])
+        assert sorted(row.tolist()) == [0, 1, 2]
+    assert not bool(np.asarray(overflow).any())

@@ -1,0 +1,115 @@
+import numpy as np
+import jax
+import jax.numpy as jnp
+import networkx as nx
+import pytest
+
+from repro.graph import csr as csr_mod
+from repro.graph import generators, weights, sampler
+
+
+def _random_edges(n=50, m=200, seed=0):
+    return generators.erdos_renyi(n, m, seed=seed)
+
+
+def test_csr_roundtrip():
+    src, dst = _random_edges()
+    g = csr_mod.from_edges(src, dst, 50)
+    s2, d2, _ = csr_mod.to_edges(g)
+    assert sorted(zip(s2.tolist(), d2.tolist())) == sorted(zip(src.tolist(), dst.tolist()))
+
+
+def test_csr_rows_match_adjacency():
+    src, dst = _random_edges(seed=3)
+    g = csr_mod.from_edges(src, dst, 50)
+    offs = np.asarray(g.offsets)
+    idx = np.asarray(g.indices)
+    adj = {}
+    for s, d in zip(src, dst):
+        adj.setdefault(int(s), []).append(int(d))
+    for u in range(50):
+        row = sorted(idx[offs[u]:offs[u + 1]].tolist())
+        assert row == sorted(adj.get(u, []))
+
+
+def test_reverse_is_transpose():
+    src, dst = _random_edges(seed=1)
+    g = csr_mod.from_edges(src, dst, 50, weights=np.arange(len(src), dtype=np.float32))
+    gt = csr_mod.reverse(g)
+    s, d, w = csr_mod.to_edges(g)
+    s2, d2, w2 = csr_mod.to_edges(gt)
+    fwd = sorted(zip(s.tolist(), d.tolist(), w.tolist()))
+    rev = sorted(zip(d2.tolist(), s2.tolist(), w2.tolist()))
+    assert fwd == rev
+
+
+def test_wc_weights_sum_to_one_per_node():
+    src, dst = _random_edges(seed=2)
+    g = weights.wc_weights(csr_mod.from_edges(src, dst, 50))
+    s, d, w = csr_mod.to_edges(g)
+    sums = np.zeros(50)
+    np.add.at(sums, d, w)
+    indeg = np.bincount(d, minlength=50)
+    np.testing.assert_allclose(sums[indeg > 0], 1.0, rtol=1e-5)
+
+
+def test_barabasi_albert_properties():
+    src, dst = generators.barabasi_albert(2000, 3, seed=0)
+    assert np.all(src != dst)
+    # symmetric edge set
+    fwd = set(zip(src.tolist(), dst.tolist()))
+    assert all((d, s) in fwd for s, d in list(fwd)[:500])
+    # power-law-ish: max degree much larger than mean
+    deg = np.bincount(src, minlength=2000)
+    assert deg.max() > 5 * deg.mean()
+
+
+def test_icosahedral_multimesh_counts():
+    verts, src, dst = generators.icosahedral_multimesh(2)
+    # 10*4^R + 2 vertices
+    assert verts.shape == (162, 3)
+    np.testing.assert_allclose(np.linalg.norm(verts, axis=1), 1.0, rtol=1e-5)
+    # symmetric, no self loops
+    assert np.all(src != dst)
+    e = set(zip(src.tolist(), dst.tolist()))
+    assert all((d, s) in e for s, d in list(e)[:200])
+
+
+def test_two_tier_reachability():
+    src, dst, n = generators.two_tier_social(4, 2)
+    g = csr_mod.from_edges(src, dst, n)
+    G = nx.DiGraph(list(zip(src.tolist(), dst.tolist())))
+    # every leaf reachable from core 0 through the ring
+    reach = nx.descendants(G, 0) | {0}
+    assert len(reach) == n
+
+
+def test_neighbor_sampler_shapes_and_validity():
+    src, dst = _random_edges(n=30, m=120, seed=5)
+    g = csr_mod.from_edges(src, dst, 30)
+    seeds = jnp.asarray([0, 3, 7, 11], dtype=jnp.int32)
+    sub = sampler.sample_subgraph(jax.random.key(0), g, seeds, (5, 3))
+    b1, b2 = sub.blocks
+    assert b1.nodes.shape == (4 * 5,)
+    assert b2.nodes.shape == (4 * 5 * 3,)
+    offs = np.asarray(g.offsets); idx = np.asarray(g.indices)
+    nodes1 = np.asarray(b1.nodes); mask1 = np.asarray(b1.mask)
+    parents = np.asarray(seeds)[np.asarray(b1.parent_idx)]
+    for nb, p, mk in zip(nodes1, parents, mask1):
+        if mk:
+            assert nb in idx[offs[p]:offs[p + 1]]
+        else:
+            assert nb == p  # self-loop padding
+
+
+def test_partition_edges_covers_all():
+    from repro.graph import partition
+    src, dst = _random_edges(seed=7)
+    g = csr_mod.from_edges(src, dst, 50, weights=np.arange(len(src), dtype=np.float32))
+    sh = partition.partition_edges(g, 8)
+    assert sh.src.shape[0] == 8
+    m = len(src)
+    assert int(sh.mask.sum()) == m
+    flat = sorted(zip(np.asarray(sh.src).ravel()[np.asarray(sh.mask).ravel()].tolist(),
+                      np.asarray(sh.dst).ravel()[np.asarray(sh.mask).ravel()].tolist()))
+    assert flat == sorted(zip(src.tolist(), dst.tolist()))

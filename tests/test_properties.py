@@ -1,0 +1,158 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+import jax
+import networkx as nx
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from repro.graph import csr as csr_mod
+from repro.graph import generators, weights
+from repro.core import rrset, coverage as cov, oracle
+
+SET = settings(max_examples=15, deadline=None,
+               suppress_health_check=[HealthCheck.too_slow])
+
+
+@st.composite
+def random_graph(draw, max_n=40):
+    n = draw(st.integers(5, max_n))
+    m = draw(st.integers(n, 4 * n))
+    seed = draw(st.integers(0, 2 ** 16))
+    src, dst = generators.erdos_renyi(n, m, seed=seed)
+    return csr_mod.from_edges(src, dst, n), n
+
+
+@st.composite
+def random_rr_sets(draw, max_n=40, max_sets=60):
+    n = draw(st.integers(3, max_n))
+    count = draw(st.integers(1, max_sets))
+    rngseed = draw(st.integers(0, 2 ** 16))
+    rng = np.random.default_rng(rngseed)
+    sets = []
+    for _ in range(count):
+        ln = int(rng.integers(1, min(n, 8)))
+        sets.append(rng.choice(n, size=ln, replace=False).tolist())
+    return sets, n
+
+
+@SET
+@given(random_graph(), st.integers(0, 2 ** 16))
+def test_prop_rrset_structural_invariants(gn, key_seed):
+    """Root first; unique nodes; subset of exact reverse reachability."""
+    g, n = gn
+    g = weights.wc_weights(g)
+    g_rev = csr_mod.reverse(g)
+    s = rrset.sample_rrsets_queue(jax.random.key(key_seed), g_rev, batch=8,
+                                  qcap=n)
+    src, dst, _ = csr_mod.to_edges(g)
+    G = nx.DiGraph()
+    G.add_nodes_from(range(n))
+    G.add_edges_from(zip(src.tolist(), dst.tolist()))
+    for row, root in zip(rrset.to_lists(s), np.asarray(s.roots)):
+        assert row[0] == int(root)
+        assert len(set(row)) == len(row)
+        assert set(row) <= (nx.ancestors(G, int(root)) | {int(root)})
+
+
+@SET
+@given(random_rr_sets(), st.integers(1, 6))
+def test_prop_greedy_matches_oracle(rrn, k):
+    """JAX greedy == numpy greedy for any RR multiset (exact, incl. ties)."""
+    rr, n = rrn
+    k = min(k, n)
+    store = cov.build_store(rr, n)
+    res = cov.select_seeds(store, k)
+    seeds_o, frac_o = oracle.greedy_max_coverage(rr, n, k)
+    assert np.asarray(res.seeds).tolist() == seeds_o
+    assert abs(float(res.frac) - frac_o) < 1e-6
+
+
+@SET
+@given(random_rr_sets())
+def test_prop_store_roundtrip(rrn):
+    rr, n = rrn
+    store = cov.build_store(rr, n)
+    flat = np.asarray(store.rr_flat)[np.asarray(store.valid)]
+    ids = np.asarray(store.rr_ids)[np.asarray(store.valid)]
+    rebuilt = [[] for _ in range(store.n_rr)]
+    for v, i in zip(flat, ids):
+        rebuilt[i].append(int(v))
+    assert rebuilt == [list(map(int, r)) for r in rr]
+
+
+@SET
+@given(st.integers(10, 10_000), st.integers(1, 50),
+       st.floats(0.05, 0.9), st.floats(0.05, 0.9))
+def test_prop_theta_monotone_in_eps(n, k, e1, e2):
+    """Smaller ε ⇒ larger λ' and λ* (θ inverse-quadratic in ε, §4.5)."""
+    k = min(k, n - 1)
+    lo, hi = sorted((e1, e2))
+    if hi - lo < 1e-3:
+        return
+    lp_hi, ls_hi, _, _ = oracle.imm_theta_params(n, k, hi)
+    lp_lo, ls_lo, _, _ = oracle.imm_theta_params(n, k, lo)
+    assert lp_lo > lp_hi
+    assert ls_lo > ls_hi
+
+
+@SET
+@given(random_rr_sets(), st.integers(1, 4))
+def test_prop_gains_monotone_nonincreasing(rrn, k):
+    """Greedy marginal gains are non-increasing (submodularity)."""
+    rr, n = rrn
+    k = min(k, n)
+    res = cov.select_seeds(cov.build_store(rr, n), k)
+    gains = np.asarray(res.gains)
+    assert all(gains[i] >= gains[i + 1] for i in range(len(gains) - 1))
+
+
+@SET
+@given(st.integers(2, 8), st.integers(1, 4), st.integers(0, 2 ** 16))
+def test_prop_grouped_moe_matches_global(n_tok_per_group, groups, seed):
+    """Group-local dispatch == global dispatch at generous capacity."""
+    import jax.numpy as jnp
+    from repro.models import moe as M
+    cfg0 = M.MoEConfig(n_experts=4, top_k=2, d_ff_expert=16, n_shared=0,
+                       capacity_factor=8.0)
+    cfgg = cfg0._replace(dispatch_groups=groups)
+    p = M.moe_init(jax.random.key(seed), 8, cfg0)
+    x = jax.random.normal(jax.random.key(seed + 1),
+                          (groups * n_tok_per_group, 8))
+    y0, _ = M.moe_apply(p, x, cfg0)
+    yg, _ = M.moe_apply(p, x, cfgg)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(yg), atol=3e-5)
+
+
+@SET
+@given(st.integers(4, 24), st.integers(1, 8), st.integers(0, 2 ** 16))
+def test_prop_chunked_attention_matches_full(s, chunk, seed):
+    import jax.numpy as jnp
+    from repro.models import attention as A
+    b, h, d = 1, 2, 8
+    q = jax.random.normal(jax.random.key(seed), (b, s, h, d))
+    k = jax.random.normal(jax.random.key(seed + 1), (b, s, h, d))
+    v = jax.random.normal(jax.random.key(seed + 2), (b, s, h, d))
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    full = A._sdpa(q, k, v, pos, pos, None, 0.35)
+    chk = A.sdpa_chunked(q, k, v, pos, pos, None, 0.35, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chk),
+                               atol=3e-5, rtol=1e-4)
+
+
+@SET
+@given(random_graph(max_n=30), st.integers(0, 2 ** 16))
+def test_prop_lt_walks_are_paths(gn, key_seed):
+    """LT RR sets are simple reverse paths (frontier never exceeds 1)."""
+    import jax
+    from repro.core import lt as lt_mod
+    g, n = gn
+    g = weights.wc_weights(g)
+    g_rev = csr_mod.reverse(g)
+    s = lt_mod.sample_rrsets_lt(jax.random.key(key_seed), g_rev, batch=8,
+                                qcap=n)
+    nodes = np.asarray(s.nodes); lens = np.asarray(s.lengths)
+    offs = np.asarray(g_rev.offsets); idx = np.asarray(g_rev.indices)
+    for b in range(8):
+        row = nodes[b, :lens[b]].tolist()
+        assert len(set(row)) == len(row)
+        for u, v in zip(row, row[1:]):
+            assert v in idx[offs[u]:offs[u + 1]].tolist()

@@ -1,0 +1,73 @@
+"""Persistent-lane (refill) sampler: correctness + utilization win."""
+import numpy as np
+import jax
+import networkx as nx
+
+from repro.graph import csr as csr_mod
+from repro.graph import generators, weights
+from repro.core import rrset
+
+
+def _wc_graph(n=60, m=240, seed=0):
+    src, dst = generators.erdos_renyi(n, m, seed=seed)
+    return weights.wc_weights(csr_mod.from_edges(src, dst, n))
+
+
+def test_refill_p1_sets_are_reverse_reachable():
+    src, dst = generators.erdos_renyi(40, 160, seed=1)
+    g = weights.uniform_weights(csr_mod.from_edges(src, dst, 40), p=1.0)
+    g_rev = csr_mod.reverse(g)
+    s = rrset.sample_rrsets_refill(jax.random.key(0), g_rev, batch=4,
+                                   quota=12, out_cap=6 * 40)
+    assert not bool(np.asarray(s.overflowed).any())
+    assert int(np.asarray(s.n_done).sum()) >= 12
+    G = nx.DiGraph()
+    G.add_nodes_from(range(40))
+    G.add_edges_from(zip(src.tolist(), dst.tolist()))
+    for row in rrset.refill_to_lists(s):
+        root = row[0]
+        assert set(row) == (nx.ancestors(G, root) | {root})
+        assert len(set(row)) == len(row)
+
+
+def test_refill_statistics_match_round_engine():
+    g = _wc_graph(n=40, m=200, seed=2)
+    g_rev = csr_mod.reverse(g)
+    occ_ref = np.zeros(40)
+    occ_rf = np.zeros(40)
+    total = 0
+    for i in range(4):
+        sr = rrset.sample_rrsets_queue(jax.random.key(i), g_rev, 256,
+                                       qcap=40)
+        for row in rrset.to_lists(sr):
+            occ_ref[row] += 1
+        sf = rrset.sample_rrsets_refill(jax.random.key(100 + i), g_rev,
+                                        batch=64, quota=256,
+                                        out_cap=40 * 8)
+        rows = rrset.refill_to_lists(sf)
+        total += len(rows)
+        for row in rows:
+            occ_rf[row] += 1
+    p1, p2 = occ_ref / 1024, occ_rf / total
+    se = np.sqrt((p1 * (1 - p1) + p2 * (1 - p2)) / min(1024, total)) + 1e-9
+    assert (np.abs(p1 - p2) / se).max() < 4.5
+
+
+def test_refill_uses_fewer_lane_steps():
+    """The §Perf/IM hypothesis: refill needs far fewer micro-steps than the
+    round engine for the same number of RR sets (tail-latency removal)."""
+    src, dst = generators.barabasi_albert(5000, 6, seed=0)
+    g = weights.wc_weights(csr_mod.from_edges(src, dst, 5000))
+    g_rev = csr_mod.reverse(g)
+    # 512 RR sets each way
+    steps_round = 0
+    for i in range(4):
+        s = rrset.sample_rrsets_queue(jax.random.key(i), g_rev, 128,
+                                      qcap=5000)
+        steps_round += int(s.steps)
+    sf = rrset.sample_rrsets_refill(jax.random.key(9), g_rev, batch=128,
+                                    quota=512, out_cap=8192)
+    assert not bool(np.asarray(sf.overflowed).any())
+    assert int(np.asarray(sf.n_done).sum()) >= 512
+    steps_refill = int(sf.steps)
+    assert steps_refill < 0.75 * steps_round, (steps_refill, steps_round)
