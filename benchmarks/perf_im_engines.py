@@ -11,6 +11,10 @@ every lane = one parallel time unit on width-B vector hardware.
 which is exactly the quantity the paper's GPU measures (they report 33-220x
 on a 2560-warp V100; we report the same ratio for the 512-lane config).
 Also measures the round->refill utilization win (paper Alg. 6 structure).
+
+Both engines are driven through the SamplerEngine protocol: the benchmark
+sees only ``engine.sample(key) -> RRBatch`` and the canonical ``steps``
+counter, so any registered engine can be dropped into the comparison.
 """
 from __future__ import annotations
 
@@ -19,7 +23,7 @@ import jax
 
 from benchmarks.common import ba_graph, write_csv, report
 from repro.graph import csr as csr_mod
-from repro.core import rrset
+from repro.core.engine import make_engine
 
 N, R, QUOTA, B = 20000, 8, 2048, 512
 
@@ -32,24 +36,26 @@ def main():
     # serial work model: ops = nodes visited + edges examined (the oracle
     # walks each adjacency once per visited node)
     # --- round engine
+    round_eng = make_engine("queue", g_rev, batch=B, qcap=N)
     steps_round = 0
     serial_ops = 0
     done = 0
     i = 0
     while done < QUOTA:
-        s = rrset.sample_rrsets_queue(jax.random.key(i), g_rev, B, qcap=N)
-        steps_round += int(s.steps)
-        nodes = np.asarray(s.nodes); lens = np.asarray(s.lengths)
-        for b in range(B):
-            vis = nodes[b, :lens[b]]
-            serial_ops += lens[b] + deg[vis].sum()
-        done += B
+        b = round_eng.sample(jax.random.key(i))
+        steps_round += int(b.steps)
+        nodes = np.asarray(b.nodes); lens = np.asarray(b.lengths)
+        for r in range(b.n_sets):
+            vis = nodes[r, :lens[r]]
+            serial_ops += lens[r] + deg[vis].sum()
+        done += b.n_sets
         i += 1
-    # --- refill engine (same quota)
-    sf = rrset.sample_rrsets_refill(jax.random.key(99), g_rev, batch=B,
-                                    quota=QUOTA, out_cap=8 * QUOTA // B * 64)
-    steps_refill = int(sf.steps)
-    n_sets = int(np.asarray(sf.n_done).sum())
+    # --- refill engine (same quota, B persistent lanes)
+    refill_eng = make_engine("refill", g_rev, batch=QUOTA, lanes=B,
+                             out_cap=8 * QUOTA // B * 64)
+    bf = refill_eng.sample(jax.random.key(99))
+    steps_refill = int(bf.steps)
+    n_sets = bf.n_sets
     speedup_round = serial_ops / max(steps_round, 1)
     speedup_refill = serial_ops / max(steps_refill, 1) * done / max(n_sets, 1)
     rows.append(["round", done, steps_round, int(serial_ops),

@@ -26,7 +26,8 @@ def main():
     ap.add_argument("--k", type=int, default=20)
     ap.add_argument("--eps", type=float, default=0.35)
     ap.add_argument("--model", choices=["ic", "lt"], default="ic")
-    ap.add_argument("--engine", choices=["queue", "dense"], default="queue")
+    ap.add_argument("--engine", choices=["queue", "dense", "refill"],
+                    default="queue")
     ap.add_argument("--ckpt", default="/tmp/repro_im_ckpt")
     args = ap.parse_args()
 

@@ -8,6 +8,7 @@ import jax
 from repro.graph import csr, generators, weights
 from repro.core.imm import imm
 from repro.core import forward
+from repro.core.engine import list_engines, make_engine
 
 
 def main():
@@ -16,12 +17,21 @@ def main():
     g = weights.wc_weights(csr.from_edges(src, dst, 2000))
     print(f"graph: n={g.n_nodes} m={g.n_edges}")
 
-    # 2. run gIM (IMM accelerated by the batched queue engine)
+    # 2. run gIM (IMM accelerated by the batched queue engine).  Any name
+    #    from the engine registry works here — see DESIGN.md §3.
+    print(f"registered engines: {list_engines()}")
     seeds, spread_est, stats = imm(g, k=10, eps=0.35, engine="queue",
                                    batch=512, seed=0)
     print(f"seeds: {sorted(seeds.tolist())}")
     print(f"RIS spread estimate:  {spread_est:8.1f} "
           f"(theta={stats.theta}, rounds={stats.rounds})")
+
+    # 2b. the engine protocol directly: sample one canonical RRBatch
+    eng = make_engine("queue", csr.reverse(g), batch=8)
+    batch = eng.sample(jax.random.key(0))
+    print(f"one RRBatch: {batch.n_sets} sets, "
+          f"max size {int(np.asarray(batch.lengths).max())}, "
+          f"{int(batch.steps)} micro-steps")
 
     # 3. validate with forward Monte-Carlo (Kempe-style simulation)
     mc = forward.ic_spread(jax.random.key(7), g, seeds.tolist(), n_sims=512)

@@ -1,0 +1,41 @@
+"""Version shims for jax APIs that moved between releases.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to the top-level
+``jax`` namespace, and ``jax.lax.pvary`` only exists on newer releases (it is
+only needed under the newer varying-types semantics, so the fallback is the
+identity).  Import from here instead of hard-coding either location.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:  # jax >= 0.6
+    from jax import shard_map  # type: ignore[attr-defined]
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+_HAS_CHECK_REP = "check_rep" in inspect.signature(shard_map).parameters
+
+
+def shard_map_unchecked(f, *, mesh, in_specs, out_specs):
+    """``shard_map`` with replication checking off where the flag exists.
+
+    Older shard_map has no replication rule for ``while_loop`` bodies (the
+    samplers) and needs ``check_rep=False``; newer jax renamed/retired the
+    flag and handles while_loop natively, so there we pass nothing.
+    """
+    kw = {"check_rep": False} if _HAS_CHECK_REP else {}
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     **kw)
+
+
+def pvary(x, axis_names):
+    """``jax.lax.pvary`` when available, identity otherwise (pre-varying-types
+    shard_map treats unvaried locals as already device-varying)."""
+    fn = getattr(jax.lax, "pvary", None)
+    if fn is None:
+        return x
+    return fn(x, (axis_names,) if isinstance(axis_names, str)
+              else tuple(axis_names))

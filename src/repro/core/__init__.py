@@ -1,15 +1,22 @@
 from repro.core.imm import imm, IMMSolver
-from repro.core.coverage import (RRStore, build_store, merge_stores,
-                                 occur_histogram, select_seeds)
+from repro.core.engine import (SamplerEngine, RRBatch, register_engine,
+                               get_engine, make_engine, list_engines,
+                               resolve_engine_name)
+from repro.core.coverage import (RRStore, IncrementalRRStore, build_store,
+                                 merge_stores, occur_histogram, select_seeds)
 from repro.core.rrset import sample_rrsets_queue, to_lists
-from repro.core.dense import sample_rrsets_dense, membership_to_lists
+from repro.core.dense import (sample_rrsets_dense, membership_to_lists,
+                              membership_to_padded)
 from repro.core.lt import sample_rrsets_lt
 from repro.core.forward import ic_spread, lt_spread
 from repro.core.mrim import solve_mrim
 
 __all__ = [
-    "imm", "IMMSolver", "RRStore", "build_store", "merge_stores",
+    "imm", "IMMSolver",
+    "SamplerEngine", "RRBatch", "register_engine", "get_engine",
+    "make_engine", "list_engines", "resolve_engine_name",
+    "RRStore", "IncrementalRRStore", "build_store", "merge_stores",
     "occur_histogram", "select_seeds", "sample_rrsets_queue", "to_lists",
-    "sample_rrsets_dense", "membership_to_lists", "sample_rrsets_lt",
-    "ic_spread", "lt_spread", "solve_mrim",
+    "sample_rrsets_dense", "membership_to_lists", "membership_to_padded",
+    "sample_rrsets_lt", "ic_spread", "lt_spread", "solve_mrim",
 ]

@@ -32,6 +32,18 @@ class RRStore(NamedTuple):
     n_nodes: int
 
 
+def _compact_padded(nodes, lens, base: int = 0):
+    """(B, W) padded rows + lengths -> (flat elements, row ids + base), the
+    CSR-of-RR compaction shared by ``build_store`` and the incremental
+    store (paper Alg. 6 lines 4-11, vectorized)."""
+    nodes = np.asarray(nodes)
+    lens = np.asarray(lens, dtype=np.int64)
+    mask = np.arange(nodes.shape[1])[None, :] < lens[:, None]
+    flat = nodes[mask].astype(np.int64)
+    ids = np.repeat(np.arange(len(lens), dtype=np.int64) + base, lens)
+    return flat, ids, lens
+
+
 def build_store(rr_lists_or_arrays, n: int, pad_to: int | None = None) -> RRStore:
     """Host-side compaction (paper Alg. 6 lines 4-11)."""
     if isinstance(rr_lists_or_arrays, list):
@@ -39,12 +51,9 @@ def build_store(rr_lists_or_arrays, n: int, pad_to: int | None = None) -> RRStor
         flat = (np.concatenate([np.asarray(r, dtype=np.int64)
                                 for r in rr_lists_or_arrays])
                 if lens.sum() else np.zeros(0, np.int64))
+        ids = np.repeat(np.arange(len(lens), dtype=np.int64), lens)
     else:  # (nodes (B, Q), lengths (B,)) padded arrays from the samplers
-        nodes, lens = rr_lists_or_arrays
-        nodes = np.asarray(nodes); lens = np.asarray(lens, dtype=np.int64)
-        mask = np.arange(nodes.shape[1])[None, :] < lens[:, None]
-        flat = nodes[mask].astype(np.int64)
-    ids = np.repeat(np.arange(len(lens), dtype=np.int64), lens)
+        flat, ids, lens = _compact_padded(*rr_lists_or_arrays)
     t = flat.shape[0]
     t_pad = pad_to if pad_to is not None else t
     if t_pad < t:
@@ -56,6 +65,64 @@ def build_store(rr_lists_or_arrays, n: int, pad_to: int | None = None) -> RRStor
                    rr_ids=jnp.asarray(ids, jnp.int32),
                    valid=jnp.asarray(valid),
                    n_rr=int(len(lens)), n_nodes=n)
+
+
+class IncrementalRRStore:
+    """Growing CSR-of-RR with amortized-O(1)-per-element ``append_batch``.
+
+    The Alg. 2 LB loop selects seeds after every θ_i escalation; rebuilding
+    the store from the per-round pool each time is O(rounds · T) host work
+    per selection (O(rounds²) over the loop).  Here each round's batch is
+    compacted exactly once into doubling flat/ids buffers, and ``snapshot``
+    returns a cached device-resident :class:`RRStore` view (invalidated only
+    by the next append).
+    """
+
+    def __init__(self, n_nodes: int, capacity: int = 1024):
+        self.n_nodes = n_nodes
+        self._flat = np.empty(max(capacity, 1), np.int64)
+        self._ids = np.empty(max(capacity, 1), np.int64)
+        self._t = 0
+        self._n_rr = 0
+        self._cache: RRStore | None = None
+
+    @property
+    def n_rr(self) -> int:
+        return self._n_rr
+
+    def _reserve(self, extra: int):
+        need = self._t + extra
+        if need <= self._flat.shape[0]:
+            return
+        cap = self._flat.shape[0]
+        while cap < need:
+            cap *= 2
+        for name in ("_flat", "_ids"):
+            buf = np.empty(cap, np.int64)
+            buf[:self._t] = getattr(self, name)[:self._t]
+            setattr(self, name, buf)
+
+    def append_batch(self, batch) -> None:
+        """Append one engine batch: an ``RRBatch`` or a ``(nodes, lengths)``
+        pair of padded arrays (the ``build_store`` array form)."""
+        nodes, lens = (batch.nodes, batch.lengths) if hasattr(batch, "nodes") \
+            else batch
+        flat, ids, lens = _compact_padded(nodes, lens, base=self._n_rr)
+        self._reserve(flat.shape[0])
+        self._flat[self._t:self._t + flat.shape[0]] = flat
+        self._ids[self._t:self._t + flat.shape[0]] = ids
+        self._t += flat.shape[0]
+        self._n_rr += len(lens)
+        self._cache = None
+
+    def snapshot(self) -> RRStore:
+        if self._cache is None:
+            self._cache = RRStore(
+                rr_flat=jnp.asarray(self._flat[:self._t], jnp.int32),
+                rr_ids=jnp.asarray(self._ids[:self._t], jnp.int32),
+                valid=jnp.ones(self._t, bool),
+                n_rr=self._n_rr, n_nodes=self.n_nodes)
+        return self._cache
 
 
 def merge_stores(stores: list[RRStore]) -> RRStore:
@@ -208,7 +275,7 @@ def select_seeds_sharded(mesh, store_shards, k: int, n: int, axis_names):
     Per-seed collective cost: one psum over (n,) int32 — see DESIGN.md §4.
     """
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+    from repro.compat import shard_map, pvary
 
     local_n_rr = store_shards.n_rr  # rows per shard (uniform)
 
@@ -235,9 +302,7 @@ def select_seeds_sharded(mesh, store_shards, k: int, n: int, axis_names):
             gain = jax.lax.psum(newly.sum(dtype=jnp.int32), axis_names)
             return (occur, covered | row_has), (u, gain)
 
-        covered = jax.lax.pvary(jnp.zeros(local_n_rr, bool),
-                                (axis_names,) if isinstance(axis_names, str)
-                                else tuple(axis_names))
+        covered = pvary(jnp.zeros(local_n_rr, bool), axis_names)
         (_, covered), (seeds, gains) = jax.lax.scan(
             step, (occur, covered), None, length=k)
         return seeds[None], gains[None]

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.graph.csr import CSRGraph
+from repro.core.packing import pack_rows
 
 
 class DenseSample(NamedTuple):
@@ -74,6 +75,17 @@ def membership_to_lists(membership) -> list[list[int]]:
     """Convert (B, n) bool membership to python RR-set lists (tests/oracles)."""
     mem = np.asarray(membership)
     return [np.nonzero(row)[0].tolist() for row in mem]
+
+
+def membership_to_padded(membership):
+    """Vectorized (B, n) bool membership -> (nodes (B, W), lengths (B,)).
+
+    W = max set size; rows are ascending node ids.  One rank-scatter instead
+    of a per-row python ``nonzero`` loop (the engine-protocol hot path).
+    """
+    mem = np.asarray(membership, bool)
+    cols = np.broadcast_to(np.arange(mem.shape[1], dtype=np.int64), mem.shape)
+    return pack_rows(cols, mem)
 
 
 # ---------------------------------------------------------------------------

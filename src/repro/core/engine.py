@@ -1,0 +1,302 @@
+"""SamplerEngine protocol + registry: one API for every RR-sampling engine.
+
+The paper's claim that "other variations of the IM problem need only minor
+modifications" (§3.7 LT, §4.8 MRIM) becomes a first-class contract here:
+every sampling engine — the gIM queue decomposition, the dense-frontier
+reference, the persistent-lane refill worker, the LT walk sampler, and
+MRIM's round-tagged variant — is an adapter class that
+
+* is configured by a per-engine ``Config`` dataclass,
+* is registered under a short name (``register_engine`` / ``get_engine``),
+* returns one canonical :class:`RRBatch` from ``sample(key)``.
+
+Downstream (``IMMSolver``, ``solve_mrim``, the sharded launch pipeline,
+benchmarks) consumes only the protocol, so adding a diffusion model means
+writing one adapter — no solver changes.  See DESIGN.md §3.
+
+Layering: this module imports the low-level samplers (``rrset``, ``dense``,
+``lt``); it is imported by the solvers (``imm``, ``mrim``) and launchers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import NamedTuple, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.csr import CSRGraph
+from repro.core import rrset as rr_queue
+from repro.core import dense as rr_dense
+from repro.core import lt as rr_lt
+from repro.core.packing import pack_rows
+
+
+class RRBatch(NamedTuple):
+    """Canonical, device-resident result of one ``SamplerEngine.sample`` call.
+
+    One row per completed RR set; rows are padded to the batch's max length.
+    ``nodes`` entries beyond ``lengths[i]`` are undefined (consumers mask by
+    length — ``coverage.build_store`` / ``IncrementalRRStore.append_batch``
+    do).  Node ids live in the engine's ``item_space`` (plain engines:
+    ``[0, n)``; MRIM: ``round * n + node`` in ``[0, n * t_rounds)``).
+
+    ``overflowed`` is per *lane* (engines whose lanes each emit one set have
+    lanes == rows; the refill engine reports its persistent lanes).
+    ``steps`` is the scalar count of lockstep micro-steps this batch cost —
+    the hardware-transferable parallel-time metric of §Perf/IM.
+    """
+    nodes: jnp.ndarray       # (R, W) int32/int64, padded per-set node ids
+    lengths: jnp.ndarray     # (R,) int — RR-set sizes (>= 1)
+    overflowed: jnp.ndarray  # (L,) bool — per-lane truncation flags
+    steps: jnp.ndarray       # () int — lockstep micro-steps executed
+
+    @property
+    def n_sets(self) -> int:
+        return int(self.lengths.shape[0])
+
+    @classmethod
+    def make(cls, nodes, lengths, overflowed, steps) -> "RRBatch":
+        return cls(nodes=jnp.asarray(nodes), lengths=jnp.asarray(lengths),
+                   overflowed=jnp.asarray(overflowed),
+                   steps=jnp.asarray(steps))
+
+
+@runtime_checkable
+class SamplerEngine(Protocol):
+    """What the solvers require of an engine (structural — no inheritance)."""
+    name: str
+
+    @property
+    def item_space(self) -> int:
+        """Size of the id space ``nodes`` draws from (coverage histogram n)."""
+        ...
+
+    def sample(self, key) -> RRBatch:
+        """Sample one batch of RR sets; ``key`` is a jax PRNG key."""
+        ...
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_ENGINES: dict[str, type] = {}
+
+# engines living outside core (to avoid core -> launch import cycles) are
+# resolved by importing their home module on first lookup
+_LAZY_ENGINES: dict[str, str] = {"queue_sharded": "repro.launch.im_solve"}
+
+
+def register_engine(name: str):
+    """Class decorator: register ``cls`` under ``name`` (sets ``cls.name``)."""
+    def deco(cls):
+        cls.name = name
+        _ENGINES[name] = cls
+        return cls
+    return deco
+
+
+def get_engine(name: str) -> type:
+    if name not in _ENGINES and name in _LAZY_ENGINES:
+        import importlib
+        importlib.import_module(_LAZY_ENGINES[name])
+    try:
+        return _ENGINES[name]
+    except KeyError:
+        raise KeyError(f"unknown engine {name!r}; registered: "
+                       f"{sorted(set(_ENGINES) | set(_LAZY_ENGINES))}"
+                       ) from None
+
+
+def list_engines() -> list[str]:
+    return sorted(set(_ENGINES) | set(_LAZY_ENGINES))
+
+
+def make_engine(name: str, g_rev: CSRGraph, **opts) -> "SamplerEngine":
+    """Instantiate a registered engine on the reverse graph.
+
+    ``opts`` may be a superset of the engine's ``Config`` fields — unknown
+    keys and ``None`` values are dropped, so callers (``IMMSolver``) can pass
+    one uniform option set (batch/qcap/ec/...) to any engine.
+    """
+    cls = get_engine(name)
+    fields = {f.name for f in dataclasses.fields(cls.Config)}
+    cfg = cls.Config(**{k: v for k, v in opts.items()
+                        if k in fields and v is not None})
+    return cls(g_rev, cfg)
+
+
+def resolve_engine_name(engine: str, model: str = "ic") -> str:
+    """Back-compat mapping from the old (engine, model) pair to an engine
+    name: ``model="lt"`` overrides the IC engine choice (the LT walk sampler
+    is the only LT engine)."""
+    return "lt" if model == "lt" else engine
+
+
+def resolve_qcap(qcap: Optional[int], g_rev: CSRGraph) -> int:
+    """Default queue capacity: the whole node set (an RR set can never be
+    larger, so the default never overflows)."""
+    return qcap if qcap is not None else g_rev.n_nodes
+
+
+# ---------------------------------------------------------------------------
+# Engine adapters
+# ---------------------------------------------------------------------------
+
+@register_engine("queue")
+class QueueEngine:
+    """gIM-faithful work-efficient sampler (paper Alg. 3/6; core/rrset.py)."""
+
+    @dataclass(frozen=True)
+    class Config:
+        batch: int = 256
+        qcap: Optional[int] = None   # default: n_nodes
+        ec: int = rr_queue.EC_DEFAULT
+
+    def __init__(self, g_rev: CSRGraph, config: Optional[Config] = None):
+        self.g_rev = g_rev
+        self.config = config if config is not None else self.Config()
+        self.qcap = resolve_qcap(self.config.qcap, g_rev)
+
+    @property
+    def item_space(self) -> int:
+        return self.g_rev.n_nodes
+
+    def sample(self, key) -> RRBatch:
+        s = rr_queue.sample_rrsets_queue(key, self.g_rev, self.config.batch,
+                                         self.qcap, self.config.ec)
+        return RRBatch.make(s.nodes, s.lengths, s.overflowed, s.steps)
+
+
+@register_engine("dense")
+class DenseEngine:
+    """Dense-frontier masked-SpMV sampler (core/dense.py); membership is
+    converted to padded rows by one vectorized rank-scatter (no per-row
+    python ``nonzero`` loop)."""
+
+    @dataclass(frozen=True)
+    class Config:
+        batch: int = 256
+
+    def __init__(self, g_rev: CSRGraph, config: Optional[Config] = None):
+        self.g_rev = g_rev
+        self.config = config if config is not None else self.Config()
+
+    @property
+    def item_space(self) -> int:
+        return self.g_rev.n_nodes
+
+    def sample(self, key) -> RRBatch:
+        s = rr_dense.sample_rrsets_dense(key, self.g_rev, self.config.batch)
+        nodes, lens = rr_dense.membership_to_padded(s.membership)
+        overflow = np.zeros(self.config.batch, bool)  # dense never truncates
+        return RRBatch.make(nodes, lens, overflow, s.levels)
+
+
+@register_engine("refill")
+class RefillEngine:
+    """Persistent-lane worker (paper Alg. 6): lanes refill with fresh roots
+    until ``batch`` RR sets are complete; a sample may return slightly more
+    than ``batch`` rows (in-flight sets always finish, unbiased)."""
+
+    @dataclass(frozen=True)
+    class Config:
+        batch: int = 256             # quota: target RR sets per sample()
+        lanes: Optional[int] = None  # default: batch//4 clamped to [8, 256]
+        out_cap: Optional[int] = None
+        ec: int = rr_queue.EC_DEFAULT
+
+    def __init__(self, g_rev: CSRGraph, config: Optional[Config] = None):
+        self.g_rev = g_rev
+        cfg = config if config is not None else self.Config()
+        self.config = cfg
+        self.lanes = (cfg.lanes if cfg.lanes is not None
+                      else max(min(cfg.batch // 4, 256), 8))
+        self.out_cap = (cfg.out_cap if cfg.out_cap is not None
+                        else min(8 * cfg.batch // self.lanes, 64) * 64)
+
+    @property
+    def item_space(self) -> int:
+        return self.g_rev.n_nodes
+
+    def sample(self, key) -> RRBatch:
+        s = rr_queue.sample_rrsets_refill(key, self.g_rev, self.lanes,
+                                          quota=self.config.batch,
+                                          out_cap=self.out_cap,
+                                          ec=self.config.ec)
+        nodes, lens = rr_queue.refill_to_padded(s)
+        return RRBatch.make(nodes, lens, s.overflowed, s.steps)
+
+
+@register_engine("lt")
+class LTEngine:
+    """Linear-threshold walk sampler (paper §3.7; core/lt.py)."""
+
+    @dataclass(frozen=True)
+    class Config:
+        batch: int = 256
+        qcap: Optional[int] = None
+
+    def __init__(self, g_rev: CSRGraph, config: Optional[Config] = None):
+        self.g_rev = g_rev
+        self.config = config if config is not None else self.Config()
+        self.qcap = resolve_qcap(self.config.qcap, g_rev)
+
+    @property
+    def item_space(self) -> int:
+        return self.g_rev.n_nodes
+
+    def sample(self, key) -> RRBatch:
+        s = rr_lt.sample_rrsets_lt(key, self.g_rev, self.config.batch,
+                                   self.qcap)
+        return RRBatch.make(s.nodes, s.lengths, s.overflowed, s.steps)
+
+
+@register_engine("mrim")
+class MRIMEngine:
+    """Multi-round IM sampler (paper §4.8): each RR sample is T tagged BFS
+    from a shared root, run as T adjacent queue-engine lanes; elements are
+    encoded ``round * n + node`` so coverage machinery is reused verbatim on
+    an item space of n·T.  Lane segments are merged into one padded row per
+    sample by a vectorized rank-scatter (no per-sample python loop)."""
+
+    @dataclass(frozen=True)
+    class Config:
+        batch: int = 64
+        t_rounds: int = 2
+        qcap: Optional[int] = None
+        ec: int = rr_queue.EC_DEFAULT
+
+    def __init__(self, g_rev: CSRGraph, config: Optional[Config] = None):
+        self.g_rev = g_rev
+        self.config = config if config is not None else self.Config()
+        self.qcap = resolve_qcap(self.config.qcap, g_rev)
+
+    @property
+    def item_space(self) -> int:
+        return self.g_rev.n_nodes * self.config.t_rounds
+
+    def sample(self, key) -> RRBatch:
+        g_rev, cfg, qcap = self.g_rev, self.config, self.qcap
+        n, m = g_rev.n_nodes, g_rev.n_edges
+        t = cfg.t_rounds
+        key, kroot, ksample = jax.random.split(key, 3)
+        roots = jax.random.randint(kroot, (cfg.batch,), 0, n, dtype=jnp.int32)
+        tiled_roots = jnp.repeat(roots, t)            # lane b*T+r -> root b
+        nodes, lengths, overflowed, steps = rr_queue._sample_queue(
+            ksample, g_rev.offsets, g_rev.indices, g_rev.weights, tiled_roots,
+            batch=cfg.batch * t, qcap=qcap, ec=cfg.ec, n=n, m=m)
+        rounds = np.tile(np.arange(t, dtype=np.int64), cfg.batch)
+        enc = (np.asarray(nodes).astype(np.int64) + (rounds * n)[:, None]
+               ).reshape(cfg.batch, t * qcap)
+        lane_len = np.asarray(lengths).reshape(cfg.batch, t)
+        # valid positions: within each lane's segment, first lane_len entries
+        seg = np.arange(t * qcap) // qcap
+        pos = np.arange(t * qcap) % qcap
+        mask = pos[None, :] < lane_len[:, seg]
+        out_nodes, out_lens = pack_rows(np.asarray(enc), mask)
+        overflow = np.asarray(overflowed).reshape(cfg.batch, t).any(axis=1)
+        return RRBatch.make(out_nodes, out_lens, overflow, steps)

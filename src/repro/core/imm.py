@@ -1,31 +1,32 @@
 """IMM driver (paper Alg. 2 + θ sampling + seed selection), engine-agnostic.
 
-The host orchestrates rounds of B RR sets (exactly like gIM's persistent
-N_b-block kernel relaunches, Alg. 6) against either engine:
-
-* ``engine="queue"`` — gIM-faithful work-efficient sampler (core/rrset.py)
-* ``engine="dense"`` — dense-frontier sampler (core/dense.py)
+The host orchestrates rounds of RR batches (exactly like gIM's persistent
+N_b-block kernel relaunches, Alg. 6) against any registered
+:class:`~repro.core.engine.SamplerEngine` — ``queue`` (gIM-faithful),
+``dense`` (frontier-SpMV), ``refill`` (persistent lanes), ``lt`` (LT walks),
+or a caller-supplied engine instance (e.g. the sharded launcher's).  Every
+round is ``batch = engine.sample(key)`` → ``store.append_batch(batch)``; the
+solver never inspects engine internals.
 
 All martingale math (λ', λ*, the Alg. 2 LB loop) follows IMM [Tang et al.'15]
 and is shared with the numpy oracle (core/oracle.py) so both sides compute
-identical θ schedules.
+identical θ schedules.  The RR pool is an incremental CSR-of-RR
+(:class:`~repro.core.coverage.IncrementalRRStore`), so the LB loop's repeated
+selections reuse one growing store instead of re-merging every round.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Optional, Union
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.graph.csr import CSRGraph, reverse
 from repro.core import coverage as cov
 from repro.core.oracle import imm_theta_params
-from repro.core import rrset as rr_queue
-from repro.core import dense as rr_dense
-from repro.core import lt as rr_lt
+from repro.core.engine import (SamplerEngine, make_engine, resolve_engine_name)
 
 
 @dataclass
@@ -42,88 +43,71 @@ class IMMStats:
 
 
 class IMMSolver:
-    """Stateful solver: owns the RR pool so Alg. 2 reuses earlier samples."""
+    """Stateful solver: owns the RR pool so Alg. 2 reuses earlier samples.
 
-    def __init__(self, g: CSRGraph, *, engine: str = "queue", batch: int = 256,
-                 qcap: Optional[int] = None, ec: int = rr_queue.EC_DEFAULT,
-                 model: str = "ic", seed: int = 0):
+    ``engine`` is a registered engine name or a ready ``SamplerEngine``
+    instance; ``batch``/``qcap``/``ec`` are forwarded to the engine's config
+    (each engine takes the subset it understands).  ``model="lt"`` keeps its
+    historical meaning by resolving to the ``lt`` engine.
+    """
+
+    def __init__(self, g: CSRGraph, *,
+                 engine: Union[str, SamplerEngine] = "queue",
+                 batch: Optional[int] = None, qcap: Optional[int] = None,
+                 ec: Optional[int] = None, model: Optional[str] = None,
+                 seed: int = 0):
         self.g = g
-        self.g_rev = reverse(g)
         self.n = g.n_nodes
-        self.engine = engine
-        self.batch = batch
-        self.qcap = qcap if qcap is not None else self.n
-        self.ec = ec
-        self.model = model
+        if isinstance(engine, str):
+            name = resolve_engine_name(engine, model or "ic")
+            self.g_rev = reverse(g)
+            # None options fall through to each engine Config's own defaults
+            self.engine: SamplerEngine = make_engine(
+                name, self.g_rev, batch=batch, qcap=qcap, ec=ec)
+        else:
+            # engine instance passed in: it owns its graph + configuration,
+            # so sampling options on the solver would be silently ignored
+            if any(v is not None for v in (batch, qcap, ec, model)):
+                raise ValueError(
+                    "batch/qcap/ec/model have no effect when an engine "
+                    "instance is passed; configure the engine instead")
+            self.engine = engine
+            self.g_rev = getattr(engine, "g_rev", None)
+        if self.engine.item_space != self.n:
+            # e.g. engine="mrim": its ids are round*n+node encodings that
+            # would leak out of solve() as nonsense seeds — route those
+            # through their own solver (solve_mrim)
+            raise ValueError(
+                f"engine {getattr(self.engine, 'name', '?')!r} samples an "
+                f"item space of {self.engine.item_space}, not the graph's "
+                f"{self.n} nodes; IMMSolver needs a plain node-id engine "
+                "(tagged engines like 'mrim' have dedicated solvers)")
+        self.engine_name = getattr(self.engine, "name",
+                                   type(self.engine).__name__)
         self.key = jax.random.key(seed)
-        self._pool_nodes: list[np.ndarray] = []
-        self._pool_lens: list[np.ndarray] = []
+        self.store = cov.IncrementalRRStore(self.engine.item_space)
         self.stats = IMMStats()
 
     # -- sampling ----------------------------------------------------------
     def _round(self):
         self.key, sub = jax.random.split(self.key)
-        if self.model == "lt":
-            s = rr_lt.sample_rrsets_lt(sub, self.g_rev, self.batch, self.qcap)
-            nodes, lens = np.asarray(s.nodes), np.asarray(s.lengths)
-            overflow = np.asarray(s.overflowed)
-            self.stats.sampling_steps += int(s.steps)
-        elif self.engine == "queue":
-            s = rr_queue.sample_rrsets_queue(sub, self.g_rev, self.batch,
-                                             self.qcap, self.ec)
-            nodes, lens = np.asarray(s.nodes), np.asarray(s.lengths)
-            overflow = np.asarray(s.overflowed)
-            self.stats.sampling_steps += int(s.steps)
-        elif self.engine == "refill":
-            lanes = max(min(self.batch // 4, 256), 8)
-            s = rr_queue.sample_rrsets_refill(
-                sub, self.g_rev, lanes, quota=self.batch,
-                out_cap=min(8 * self.batch // lanes, 64) * 64,
-                ec=self.ec)
-            rows = rr_queue.refill_to_lists(s)
-            width = max(max((len(r) for r in rows), default=1), 1)
-            nodes = np.zeros((len(rows), width), np.int64)
-            lens = np.zeros(len(rows), np.int64)
-            for i, r in enumerate(rows):
-                nodes[i, :len(r)] = r
-                lens[i] = len(r)
-            overflow = np.asarray(s.overflowed)
-            self.stats.sampling_steps += int(s.steps)
-            self.stats.rounds += 1
-            self.stats.n_rr_sampled += len(rows)
-            self._pool_nodes.append(nodes)
-            self._pool_lens.append(lens)
-            self.stats.overflow_fraction = (
-                (self.stats.overflow_fraction * (self.stats.rounds - 1)
-                 + overflow.mean()) / self.stats.rounds)
-            return
-        else:
-            s = rr_dense.sample_rrsets_dense(sub, self.g_rev, self.batch)
-            mem = np.asarray(s.membership)
-            lens = mem.sum(axis=1).astype(np.int64)
-            width = max(int(lens.max()), 1)
-            nodes = np.zeros((self.batch, width), dtype=np.int64)
-            for i in range(self.batch):
-                nz = np.nonzero(mem[i])[0]
-                nodes[i, :len(nz)] = nz
-            overflow = np.zeros(self.batch, bool)
-            self.stats.sampling_steps += int(s.levels)
-        self._pool_nodes.append(nodes)
-        self._pool_lens.append(lens)
+        batch = self.engine.sample(sub)
+        self.store.append_batch(batch)
         self.stats.rounds += 1
-        self.stats.n_rr_sampled += self.batch
+        self.stats.n_rr_sampled += batch.n_sets
+        self.stats.sampling_steps += int(batch.steps)
+        overflow = np.asarray(batch.overflowed)
         self.stats.overflow_fraction = (
             (self.stats.overflow_fraction * (self.stats.rounds - 1)
-             + overflow.mean()) / self.stats.rounds)
+             + float(overflow.mean() if overflow.size else 0.0))
+            / self.stats.rounds)
 
     def sample_until(self, theta: int):
         while self.stats.n_rr_sampled < theta:
             self._round()
 
     def _store(self) -> cov.RRStore:
-        stores = [cov.build_store((nd, ln), self.n)
-                  for nd, ln in zip(self._pool_nodes, self._pool_lens)]
-        return cov.merge_stores(stores)
+        return self.store.snapshot()
 
     # -- full IMM ----------------------------------------------------------
     def solve(self, k: int, eps: float, ell: float = 1.0,

@@ -25,39 +25,20 @@ import numpy as np
 from repro.graph.csr import CSRGraph, reverse
 from repro.core import rrset as rr_queue
 from repro.core import coverage as cov
+from repro.core.engine import MRIMEngine, make_engine
 
 
 def sample_mrim_round(key, g_rev: CSRGraph, batch: int, t_rounds: int,
                       qcap: int, ec: int = rr_queue.EC_DEFAULT):
     """Sample ``batch`` MRIM RR sets (each = T tagged BFS from a shared root).
 
-    Returns (nodes (B, T*qcap) encoded ids, lengths (B,), overflowed (B,)).
+    Thin compatibility wrapper over :class:`~repro.core.engine.MRIMEngine`.
+    Returns (nodes (B, W) encoded ids, lengths (B,), overflowed (B,)).
     """
-    n, m = g_rev.n_nodes, g_rev.n_edges
-    key, kroot, ksample = jax.random.split(key, 3)
-    roots = jax.random.randint(kroot, (batch,), 0, n, dtype=jnp.int32)
-    tiled_roots = jnp.repeat(roots, t_rounds)          # lane b*T+t -> root b
-    nodes, lengths, overflowed, steps = rr_queue._sample_queue(
-        ksample, g_rev.offsets, g_rev.indices, g_rev.weights, tiled_roots,
-        batch=batch * t_rounds, qcap=qcap, ec=ec, n=n, m=m)
-    # encode (node, round): lane b*T+t contributes round t
-    rounds = jnp.tile(jnp.arange(t_rounds, dtype=jnp.int32), batch)
-    enc = nodes + (rounds * n)[:, None]
-    # merge T lanes per sample into one RR row
-    enc = enc.reshape(batch, t_rounds * qcap)
-    lane_len = lengths.reshape(batch, t_rounds)
-    # compact each row host-side (sampling rounds are host-orchestrated anyway)
-    enc_np = np.asarray(enc)
-    len_np = np.asarray(lane_len)
-    out_nodes = np.zeros((batch, t_rounds * qcap), dtype=np.int64)
-    out_lens = np.zeros(batch, dtype=np.int64)
-    for b in range(batch):
-        parts = [enc_np[b, t * qcap: t * qcap + len_np[b, t]]
-                 for t in range(t_rounds)]
-        row = np.concatenate(parts)
-        out_nodes[b, :len(row)] = row
-        out_lens[b] = len(row)
-    return out_nodes, out_lens, np.asarray(overflowed.reshape(batch, t_rounds).any(axis=1))
+    eng = MRIMEngine(g_rev, MRIMEngine.Config(batch=batch, t_rounds=t_rounds,
+                                              qcap=qcap, ec=ec))
+    b = eng.sample(key)
+    return np.asarray(b.nodes), np.asarray(b.lengths), np.asarray(b.overflowed)
 
 
 @functools.partial(jax.jit, static_argnames=("n_rr", "n", "t_rounds", "k"))
@@ -104,19 +85,13 @@ def solve_mrim(g: CSRGraph, k: int, t_rounds: int, n_rr: int, *,
     isolates the sampling/selection engines)."""
     g_rev = reverse(g)
     n = g.n_nodes
-    qcap = qcap if qcap is not None else n
     key = jax.random.key(seed)
-    pool_nodes, pool_lens = [], []
-    done = 0
-    while done < n_rr:
+    eng = make_engine("mrim", g_rev, batch=batch, t_rounds=t_rounds, qcap=qcap)
+    inc = cov.IncrementalRRStore(eng.item_space)
+    while inc.n_rr < n_rr:
         key, sub = jax.random.split(key)
-        nodes, lens, _ = sample_mrim_round(sub, g_rev, batch, t_rounds, qcap)
-        pool_nodes.append(nodes)
-        pool_lens.append(lens)
-        done += batch
-    stores = [cov.build_store((nd, ln), n * t_rounds)
-              for nd, ln in zip(pool_nodes, pool_lens)]
-    store = cov.merge_stores(stores)
+        inc.append_batch(eng.sample(sub))
+    store = inc.snapshot()
     occur0 = cov.occur_histogram(store)
     seeds, gains = _greedy_mrim(store.rr_flat, store.rr_ids, store.valid,
                                 occur0, n_rr=store.n_rr, n=n,

@@ -1,0 +1,26 @@
+"""Host-side vectorized padded-row packing shared by the engine adapters.
+
+Low-level (imports nothing from core) so both the samplers and the engine
+layer can use it without cycles.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def pack_rows(values: np.ndarray, mask: np.ndarray):
+    """Left-compact masked elements of each row into a padded matrix.
+
+    values, mask: (B, C).  Returns (rows (B, W), lengths (B,)) where W is the
+    max per-row count; column order is preserved.  Fully vectorized: rank =
+    prefix count of the mask, then one scatter.
+    """
+    mask = np.asarray(mask, bool)
+    values = np.asarray(values)
+    lens = mask.sum(axis=1).astype(np.int64)
+    width = max(int(lens.max()) if lens.size else 0, 1)
+    out = np.zeros((mask.shape[0], width), values.dtype)
+    rank = mask.cumsum(axis=1) - 1
+    r, c = np.nonzero(mask)
+    out[r, rank[r, c]] = values[r, c]
+    return out, lens

@@ -306,3 +306,30 @@ def refill_to_lists(sample: RefillSample) -> list[list[int]]:
             out.append(flat[b, off:off + ln].tolist())
             off += ln
     return out
+
+
+def refill_to_padded(sample: RefillSample):
+    """Vectorized unpack of a RefillSample into (nodes (R, W), lengths (R,)).
+
+    R = total completed sets across lanes, W = max set size.  Sets are laid
+    out contiguously per lane (root first), so per-set start offsets are an
+    exclusive prefix sum of the recorded lengths; one broadcast gather plus a
+    validity mask replaces the per-set python slicing loop.
+    """
+    flat = np.asarray(sample.flat)
+    lengths = np.asarray(sample.lengths, np.int64)    # (B, S)
+    n_done = np.asarray(sample.n_done, np.int64)      # (B,)
+    b, s = lengths.shape
+    set_valid = np.arange(s)[None, :] < n_done[:, None]
+    if not set_valid.any():
+        return np.zeros((0, 1), np.int64), np.zeros(0, np.int64)
+    starts = np.concatenate(
+        [np.zeros((b, 1), np.int64), lengths.cumsum(axis=1)[:, :-1]], axis=1)
+    width = max(int(lengths[set_valid].max()), 1)
+    idx = starts[:, :, None] + np.arange(width, dtype=np.int64)[None, None, :]
+    rows = np.take_along_axis(flat[:, None, :],
+                              np.clip(idx, 0, flat.shape[1] - 1), axis=2)
+    col_valid = np.arange(width)[None, None, :] < lengths[:, :, None]
+    rows = np.where(col_valid, rows, 0).reshape(b * s, width)
+    keep = set_valid.reshape(b * s)
+    return rows[keep].astype(np.int64), lengths[set_valid]

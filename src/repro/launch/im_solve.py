@@ -1,9 +1,11 @@
 """Distributed IM solve: the paper's pipeline on an N-device mesh.
 
 Every device runs the batched queue sampler on its own threefry counter
-range (gIM's grid dimension -> mesh dimension, DESIGN.md §4); Occur is
-psum-reduced; seed selection runs the sharded Alg. 7.  Works on any device
-count (elastic); on this CPU container use XLA_FLAGS to fake devices:
+range (gIM's grid dimension -> mesh dimension, DESIGN.md §4); the per-device
+rows are stacked into one canonical :class:`~repro.core.engine.RRBatch`, so
+the whole pipeline is just ``IMMSolver`` driving a ``SamplerEngine`` whose
+``sample()`` happens to fan out over the mesh.  Works on any device count
+(elastic); on this CPU container use XLA_FLAGS to fake devices:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src python -m repro.launch.im_solve --n 2000 --k 10
@@ -12,88 +14,97 @@ from __future__ import annotations
 
 import argparse
 import time
+from dataclasses import dataclass
+from typing import Optional
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
 
+from repro.compat import shard_map_unchecked
 from repro.graph import csr, generators, weights
-from repro.core import rrset, coverage as cov
-from repro.core.oracle import imm_theta_params
-import math
+from repro.core import rrset
+from repro.core.engine import RRBatch, register_engine, resolve_qcap
+from repro.core.imm import IMMSolver
 
 
-def sample_round_sharded(mesh, g_rev, batch_per_dev: int, qcap: int,
-                         round_idx: int, seed: int):
-    """One round: every device samples batch_per_dev RR sets."""
-    n, m = g_rev.n_nodes, g_rev.n_edges
-    n_dev = mesh.devices.size
+@register_engine("queue_sharded")
+class ShardedQueueEngine:
+    """Queue engine fanned out over a device mesh (one lane block per device).
 
-    def local(offsets, indices, w):
-        dev = jax.lax.axis_index(mesh.axis_names).astype(jnp.uint32)
-        key = jax.random.fold_in(
-            jax.random.fold_in(jax.random.key(seed), round_idx), dev)
-        key, sub = jax.random.split(key)
-        roots = jax.random.randint(sub, (batch_per_dev,), 0, n,
-                                   dtype=jnp.int32)
-        nodes, lengths, overflow, _ = rrset._sample_queue(
-            key, offsets, indices, w, roots,
-            batch=batch_per_dev, qcap=qcap, ec=128, n=n, m=m)
-        return nodes[None], lengths[None], overflow[None]
+    ``batch`` is per-device; a ``sample()`` returns ``n_dev * batch`` rows.
+    Per-device keys are derived by folding the device index into the caller's
+    key, mirroring gIM's per-block curand streams.
+    """
 
-    fn = shard_map(local, mesh=mesh,
-                   in_specs=(P(), P(), P()),
-                   out_specs=(P(mesh.axis_names), P(mesh.axis_names),
-                              P(mesh.axis_names)))
-    nodes, lengths, overflow = fn(g_rev.offsets, g_rev.indices,
-                                  g_rev.weights)
-    return (np.asarray(nodes).reshape(n_dev * batch_per_dev, qcap),
-            np.asarray(lengths).reshape(-1),
-            np.asarray(overflow).reshape(-1))
+    @dataclass(frozen=True)
+    class Config:
+        batch: int = 128             # RR sets per device per round
+        qcap: Optional[int] = None
+        ec: int = rrset.EC_DEFAULT
+
+    def __init__(self, g_rev, config: Optional[Config] = None,
+                 mesh: Optional[Mesh] = None):
+        self.g_rev = g_rev
+        self.config = config if config is not None else self.Config()
+        self.qcap = resolve_qcap(self.config.qcap, g_rev)
+        self.mesh = mesh if mesh is not None else Mesh(
+            np.asarray(jax.devices()), ("dev",))
+        self._fn = None
+
+    @property
+    def item_space(self) -> int:
+        return self.g_rev.n_nodes
+
+    def _build(self):
+        g_rev, mesh = self.g_rev, self.mesh
+        n, m = g_rev.n_nodes, g_rev.n_edges
+        axis = mesh.axis_names[0]
+        bpd, qcap, ec = self.config.batch, self.qcap, self.config.ec
+
+        def local(offsets, indices, w, keydata):
+            # full 128-bit key state travels as raw uint32 data (typed keys
+            # don't cross shard_map on older jax); fold_in(dev) gives each
+            # device its own collision-free stream, like gIM's per-block
+            # curand sequences
+            dev = jax.lax.axis_index(axis).astype(jnp.uint32)
+            key = jax.random.fold_in(jax.random.wrap_key_data(keydata), dev)
+            key, sub = jax.random.split(key)
+            roots = jax.random.randint(sub, (bpd,), 0, n, dtype=jnp.int32)
+            nodes, lengths, overflow, steps = rrset._sample_queue(
+                key, offsets, indices, w, roots,
+                batch=bpd, qcap=qcap, ec=ec, n=n, m=m)
+            return nodes[None], lengths[None], overflow[None], steps[None]
+
+        return shard_map_unchecked(
+            local, mesh=mesh,
+            in_specs=(P(), P(), P(), P()),
+            out_specs=(P(axis), P(axis), P(axis), P(axis)))
+
+    def sample(self, key) -> RRBatch:
+        if self._fn is None:
+            self._fn = self._build()
+        g_rev = self.g_rev
+        nodes, lengths, overflow, steps = self._fn(
+            g_rev.offsets, g_rev.indices, g_rev.weights,
+            jax.random.key_data(key))
+        n_dev = self.mesh.devices.size
+        # devices run concurrently: the batch's parallel-time cost is the
+        # slowest device's lockstep count, not the sum
+        return RRBatch.make(nodes.reshape(n_dev * self.config.batch, -1),
+                            lengths.reshape(-1), overflow.reshape(-1),
+                            steps.max())
 
 
 def solve(g, k: int, eps: float, *, batch_per_dev: int = 128, seed: int = 0):
-    devices = np.asarray(jax.devices())
-    mesh = Mesh(devices, ("dev",))
-    n_dev = devices.size
     g_rev = csr.reverse(g)
-    n = g.n_nodes
-    qcap = n
-    lam_p, lam_star, eps_p, _ = imm_theta_params(n, k, eps)
-    pool_nodes, pool_lens = [], []
-    n_sampled = 0
-
-    def sample_until(theta):
-        nonlocal n_sampled
-        r = 0
-        while n_sampled < theta:
-            nodes, lens, _ = sample_round_sharded(
-                mesh, g_rev, batch_per_dev, qcap, len(pool_nodes), seed)
-            pool_nodes.append(nodes)
-            pool_lens.append(lens)
-            n_sampled += nodes.shape[0]
-            r += 1
-
-    def select(k):
-        stores = [cov.build_store((nd, ln), n)
-                  for nd, ln in zip(pool_nodes, pool_lens)]
-        return cov.select_seeds(cov.merge_stores(stores), k)
-
-    lb = 1.0
-    for i in range(1, max(int(math.log2(n)), 2)):
-        x = n / 2.0 ** i
-        sample_until(int(math.ceil(lam_p / x)))
-        res = select(k)
-        if n * float(res.frac) >= (1 + eps_p) * x:
-            lb = n * float(res.frac) / (1 + eps_p)
-            break
-    theta = int(math.ceil(lam_star / lb))
-    sample_until(theta)
-    res = select(k)
-    return (np.asarray(res.seeds), n * float(res.frac),
-            dict(theta=theta, sampled=n_sampled, devices=n_dev))
+    engine = ShardedQueueEngine(
+        g_rev, ShardedQueueEngine.Config(batch=batch_per_dev))
+    solver = IMMSolver(g, engine=engine, seed=seed)
+    seeds, est, stats = solver.solve(k, eps)
+    return seeds, est, dict(theta=stats.theta, sampled=stats.n_rr_sampled,
+                            devices=engine.mesh.devices.size)
 
 
 def main():

@@ -1,0 +1,209 @@
+"""SamplerEngine protocol: registry, RRBatch contract, engine parity with the
+numpy oracle, incremental-store equivalence, and unified stats accounting."""
+import numpy as np
+import jax
+import pytest
+
+from repro.graph import csr as csr_mod
+from repro.graph import generators, weights
+from repro.core import coverage as cov, oracle
+from repro.core.engine import (RRBatch, SamplerEngine, get_engine,
+                               make_engine, list_engines, register_engine,
+                               resolve_engine_name)
+from repro.core.imm import IMMSolver, imm
+
+CORE_ENGINES = ("queue", "dense", "refill", "lt", "mrim")
+
+
+def _wc_graph(n=40, m=200, seed=0):
+    src, dst = generators.erdos_renyi(n, m, seed=seed)
+    return weights.wc_weights(csr_mod.from_edges(src, dst, n))
+
+
+# ------------------------------------------------------------------ registry
+
+def test_registry_round_trip():
+    assert set(CORE_ENGINES) <= set(list_engines())
+    for name in CORE_ENGINES:
+        cls = get_engine(name)
+        assert cls.name == name
+        eng = make_engine(name, csr_mod.reverse(_wc_graph()), batch=16)
+        assert isinstance(eng, SamplerEngine)
+        assert eng.item_space >= 1
+
+
+def test_get_engine_unknown_name():
+    with pytest.raises(KeyError, match="unknown engine"):
+        get_engine("definitely-not-registered")
+
+
+def test_register_engine_decorator():
+    from repro.core import engine as engine_mod
+    try:
+        @register_engine("_test_dummy")
+        class Dummy:
+            class Config:
+                pass
+        assert get_engine("_test_dummy") is Dummy
+        assert Dummy.name == "_test_dummy"
+    finally:
+        engine_mod._ENGINES.pop("_test_dummy", None)  # keep registry clean
+
+
+def test_resolve_engine_name():
+    assert resolve_engine_name("queue", "ic") == "queue"
+    assert resolve_engine_name("dense", "ic") == "dense"
+    assert resolve_engine_name("queue", "lt") == "lt"
+
+
+def test_make_engine_filters_foreign_options():
+    # dense has no qcap/ec: a uniform caller option set must still work
+    g_rev = csr_mod.reverse(_wc_graph())
+    eng = make_engine("dense", g_rev, batch=8, qcap=999, ec=64, lanes=None)
+    assert eng.config.batch == 8
+
+
+# ----------------------------------------------------- RRBatch contract
+
+@pytest.mark.parametrize("name", ("queue", "dense", "refill", "lt"))
+def test_engine_batch_contract_and_oracle_parity(name):
+    n = 40
+    g = _wc_graph(n=n, m=200, seed=1)
+    g_rev = csr_mod.reverse(g)
+    eng = make_engine(name, g_rev, batch=64)
+    b = eng.sample(jax.random.key(0))
+    assert isinstance(b, RRBatch)
+    nodes, lens = np.asarray(b.nodes), np.asarray(b.lengths)
+    assert nodes.ndim == 2
+    assert lens.shape == (b.n_sets,) == (nodes.shape[0],)
+    assert (lens >= 1).all() and int(lens.max()) <= nodes.shape[1]
+    rr = [nodes[i, :lens[i]].tolist() for i in range(b.n_sets)]
+    for row in rr:
+        assert len(set(row)) == len(row)           # row-unique elements
+        assert all(0 <= v < n for v in row)
+    # parity: greedy on the canonical batch == numpy oracle on the same sets
+    res = cov.select_seeds(cov.build_store((nodes, lens), n), 4)
+    _, frac_o = oracle.greedy_max_coverage(rr, n, 4)
+    assert abs(float(res.frac) - frac_o) < 1e-6
+    assert abs(n * float(res.frac) - n * frac_o) < 1e-3
+
+
+def test_mrim_engine_item_space_and_tags():
+    n, t = 40, 3
+    g_rev = csr_mod.reverse(_wc_graph(n=n, m=200, seed=2))
+    eng = make_engine("mrim", g_rev, batch=16, t_rounds=t)
+    assert eng.item_space == n * t
+    b = eng.sample(jax.random.key(0))
+    nodes, lens = np.asarray(b.nodes), np.asarray(b.lengths)
+    assert b.n_sets == 16
+    for i in range(b.n_sets):
+        row = nodes[i, :lens[i]]
+        assert len(set(row.tolist())) == len(row)  # (node, round) unique
+        assert (row >= 0).all() and (row < n * t).all()
+        # every round contributes at least the root
+        assert set(row // n) == set(range(t))
+
+
+# --------------------------------------------------- incremental store
+
+def test_incremental_store_matches_merge_stores():
+    g_rev = csr_mod.reverse(_wc_graph(n=30, m=150, seed=3))
+    eng = make_engine("queue", g_rev, batch=24)
+    inc = cov.IncrementalRRStore(30, capacity=4)   # force buffer doubling
+    per_round = []
+    for i in range(4):
+        b = eng.sample(jax.random.key(i))
+        inc.append_batch(b)
+        per_round.append(cov.build_store(
+            (np.asarray(b.nodes), np.asarray(b.lengths)), 30))
+    merged = cov.merge_stores(per_round)
+    snap = inc.snapshot()
+    assert snap.n_rr == merged.n_rr == inc.n_rr
+    valid = np.asarray(merged.valid)
+    np.testing.assert_array_equal(np.asarray(snap.rr_flat),
+                                  np.asarray(merged.rr_flat)[valid])
+    np.testing.assert_array_equal(np.asarray(snap.rr_ids),
+                                  np.asarray(merged.rr_ids)[valid])
+    assert np.asarray(snap.valid).all()
+    # identical seed selection
+    r1 = cov.select_seeds(snap, 3)
+    r2 = cov.select_seeds(merged, 3)
+    assert np.asarray(r1.seeds).tolist() == np.asarray(r2.seeds).tolist()
+    assert float(r1.frac) == pytest.approx(float(r2.frac))
+
+
+def test_incremental_store_snapshot_cached():
+    inc = cov.IncrementalRRStore(10)
+    inc.append_batch((np.asarray([[1, 2, 0]]), np.asarray([2])))
+    s1 = inc.snapshot()
+    assert inc.snapshot() is s1                    # cached between appends
+    inc.append_batch((np.asarray([[3]]), np.asarray([1])))
+    s2 = inc.snapshot()
+    assert s2 is not s1 and s2.n_rr == 2
+
+
+# ------------------------------------------------- unified stats accounting
+
+class _SpyEngine:
+    """Wraps an engine, recording every batch it hands the solver."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.name = f"spy:{inner.name}"
+        self.batches = []
+
+    @property
+    def item_space(self):
+        return self.inner.item_space
+
+    def sample(self, key):
+        b = self.inner.sample(key)
+        self.batches.append(b)
+        return b
+
+
+@pytest.mark.parametrize("name", ("queue", "refill", "dense", "lt"))
+def test_round_stats_accounting_is_engine_uniform(name):
+    """Regression for the old refill branch's duplicated stats bookkeeping:
+    every engine's stats must follow the one shared accounting tail."""
+    g = _wc_graph(n=30, m=150, seed=4)
+    spy = _SpyEngine(make_engine(name, csr_mod.reverse(g), batch=32))
+    solver = IMMSolver(g, engine=spy, seed=0)
+    for _ in range(3):
+        solver._round()
+    st = solver.stats
+    assert st.rounds == len(spy.batches) == 3
+    assert st.n_rr_sampled == sum(b.n_sets for b in spy.batches)
+    assert st.n_rr_sampled == solver.store.n_rr
+    assert st.sampling_steps == sum(int(b.steps) for b in spy.batches)
+    means = [float(np.asarray(b.overflowed).mean()) for b in spy.batches]
+    assert st.overflow_fraction == pytest.approx(np.mean(means))
+
+
+def test_imm_refill_matches_queue_quality():
+    g = _wc_graph(n=60, m=300, seed=5)
+    s_q, e_q, st_q = imm(g, 4, 0.45, engine="queue", batch=128, seed=1)
+    s_r, e_r, st_r = imm(g, 4, 0.45, engine="refill", batch=128, seed=1)
+    assert len(set(s_r.tolist())) == 4
+    assert st_r.n_rr_sampled >= st_r.theta > 0
+    assert 0.0 <= st_r.overflow_fraction <= 1.0
+    # same estimator, same θ schedule -> estimates agree within tolerance
+    assert abs(e_r - e_q) / e_q < 0.2, (e_r, e_q)
+
+
+def test_solver_rejects_tagged_item_space():
+    g = _wc_graph(n=30, m=150, seed=7)
+    with pytest.raises(ValueError, match="item space"):
+        IMMSolver(g, engine="mrim")         # round*n+node ids must not leak
+    with pytest.raises(ValueError, match="no effect"):
+        eng = make_engine("queue", csr_mod.reverse(g), batch=16)
+        IMMSolver(g, engine=eng, batch=16)  # options + instance conflict
+
+
+def test_solver_accepts_engine_instance():
+    g = _wc_graph(n=30, m=150, seed=6)
+    eng = make_engine("queue", csr_mod.reverse(g), batch=32)
+    solver = IMMSolver(g, engine=eng, seed=0)
+    assert solver.engine is eng
+    seeds, est, st = solver.solve(2, 0.5, max_theta=128)
+    assert len(set(seeds.tolist())) == 2 and est > 0

@@ -2,6 +2,10 @@
 import numpy as np
 import jax
 import networkx as nx
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="optional dep: property tests need hypothesis")
 from hypothesis import given, settings, strategies as st, HealthCheck
 
 from repro.graph import csr as csr_mod
