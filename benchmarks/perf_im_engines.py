@@ -15,44 +15,98 @@ Also measures the round->refill utilization win (paper Alg. 6 structure).
 Both engines are driven through the SamplerEngine protocol: the benchmark
 sees only ``engine.sample(key) -> RRBatch`` and the canonical ``steps``
 counter, so any registered engine can be dropped into the comparison.
+
+Second half (``BENCH_pipeline.json``): *wall-clock* end-to-end ``imm()`` per
+engine on the default benchmark graph — the device-resident pipeline's
+figure of merit.  Wall time on this CPU container is meaningful here because
+it measures exactly what the device pipeline changed: host↔device bounces,
+per-round recompiles, and the O(EC²) dedup — not vector throughput.
 """
 from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
 
 import numpy as np
 import jax
 
-from benchmarks.common import ba_graph, write_csv, report
+from benchmarks.common import OUT_DIR, ba_graph, write_csv, report
 from repro.graph import csr as csr_mod
 from repro.core.engine import make_engine
+from repro.core.imm import imm
 
 N, R, QUOTA, B = 20000, 8, 2048, 512
+PIPELINE_ENGINES = ("queue", "refill", "dense", "lt")
 
 
-def main():
-    g = ba_graph(N, R)
+def bench_pipeline(n=N, r=R, k=10, eps=0.4, max_theta=4096, batch=512,
+                   engines=PIPELINE_ENGINES, seed=0):
+    """Time end-to-end ``imm()`` per engine; returns the result dict."""
+    g = ba_graph(n, r)
+    out = {"graph": {"kind": "barabasi_albert", "n": n, "r": r,
+                     "weights": "wc"},
+           "params": {"k": k, "eps": eps, "max_theta": max_theta,
+                      "batch": batch, "seed": seed},
+           # same imm() call measured on the parent commit (host-pipeline
+           # IncrementalRRStore + per-escalation recompiles + O(EC²) dedup),
+           # same machine/config; recorded for the device-pipeline A/B
+           "baseline_main": ({"queue": {"wall_s": 98.57},
+                              "refill": {"wall_s": 34.54},
+                              "commit": "5812556"}
+                             if (n, r, k, eps, max_theta, batch) ==
+                                (20000, 8, 10, 0.4, 4096, 512) else None),
+           "engines": {}}
+    for name in engines:
+        t0 = time.perf_counter()
+        seeds, est, stats = imm(g, k, eps, engine=name, batch=batch,
+                                seed=seed, max_theta=max_theta)
+        dt = time.perf_counter() - t0
+        out["engines"][name] = {
+            "wall_s": round(dt, 3),
+            "theta": stats.theta,
+            "rr_sets": stats.n_rr_sampled,
+            "rounds": stats.rounds,
+            "micro_steps": stats.sampling_steps,
+            "lb_iters": stats.lb_iters,
+            "spread_estimate": round(float(est), 1),
+        }
+        report(f"perf_im/pipeline/{name}", dt * 1e6,
+               f"wall={dt:.2f}s;rr={stats.n_rr_sampled};"
+               f"rounds={stats.rounds}")
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, "BENCH_pipeline.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
+def main(n=N, r=R, quota=QUOTA, b=B, pipeline_kw=None):
+    g = ba_graph(n, r)
     g_rev = csr_mod.reverse(g)
     deg = np.diff(np.asarray(g_rev.offsets))
     rows = []
     # serial work model: ops = nodes visited + edges examined (the oracle
     # walks each adjacency once per visited node)
     # --- round engine
-    round_eng = make_engine("queue", g_rev, batch=B, qcap=N)
+    round_eng = make_engine("queue", g_rev, batch=b, qcap=n)
     steps_round = 0
     serial_ops = 0
     done = 0
     i = 0
-    while done < QUOTA:
-        b = round_eng.sample(jax.random.key(i))
-        steps_round += int(b.steps)
-        nodes = np.asarray(b.nodes); lens = np.asarray(b.lengths)
-        for r in range(b.n_sets):
-            vis = nodes[r, :lens[r]]
-            serial_ops += lens[r] + deg[vis].sum()
-        done += b.n_sets
+    while done < quota:
+        b_ = round_eng.sample(jax.random.key(i))
+        steps_round += int(b_.steps)
+        nodes = np.asarray(b_.nodes); lens = np.asarray(b_.lengths)
+        for row in range(b_.n_sets):
+            vis = nodes[row, :lens[row]]
+            serial_ops += lens[row] + deg[vis].sum()
+        done += b_.n_sets
         i += 1
     # --- refill engine (same quota, B persistent lanes)
-    refill_eng = make_engine("refill", g_rev, batch=QUOTA, lanes=B,
-                             out_cap=8 * QUOTA // B * 64)
+    refill_eng = make_engine("refill", g_rev, batch=quota, lanes=b,
+                             out_cap=8 * quota // b * 64)
     bf = refill_eng.sample(jax.random.key(99))
     steps_refill = int(bf.steps)
     n_sets = bf.n_sets
@@ -69,7 +123,26 @@ def main():
     report("perf_im/refill", steps_refill,
            f"par_speedup={speedup_refill:.0f}x;"
            f"step_win={steps_round / max(steps_refill, 1):.2f}x")
+    bench_pipeline(n=n, r=r, **(pipeline_kw or {}))
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=N)
+    ap.add_argument("--r", type=int, default=R)
+    ap.add_argument("--quota", type=int, default=QUOTA)
+    ap.add_argument("--b", type=int, default=B)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--eps", type=float, default=0.4)
+    ap.add_argument("--max-theta", type=int, default=4096)
+    ap.add_argument("--batch", type=int, default=512)
+    ap.add_argument("--engines", default=",".join(PIPELINE_ENGINES))
+    ap.add_argument("--pipeline-only", action="store_true",
+                    help="skip the micro-step section (CI smoke)")
+    args = ap.parse_args()
+    pkw = dict(k=args.k, eps=args.eps, max_theta=args.max_theta,
+               batch=args.batch, engines=tuple(args.engines.split(",")))
+    if args.pipeline_only:
+        bench_pipeline(n=args.n, r=args.r, **pkw)
+    else:
+        main(n=args.n, r=args.r, quota=args.quota, b=args.b, pipeline_kw=pkw)

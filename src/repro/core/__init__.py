@@ -2,8 +2,9 @@ from repro.core.imm import imm, IMMSolver
 from repro.core.engine import (SamplerEngine, RRBatch, register_engine,
                                get_engine, make_engine, list_engines,
                                resolve_engine_name)
-from repro.core.coverage import (RRStore, IncrementalRRStore, build_store,
-                                 merge_stores, occur_histogram, select_seeds)
+from repro.core.coverage import (RRStore, IncrementalRRStore, DeviceRRStore,
+                                 build_store, merge_stores, occur_histogram,
+                                 select_seeds, select_seeds_device)
 from repro.core.rrset import sample_rrsets_queue, to_lists
 from repro.core.dense import (sample_rrsets_dense, membership_to_lists,
                               membership_to_padded)
@@ -15,8 +16,9 @@ __all__ = [
     "imm", "IMMSolver",
     "SamplerEngine", "RRBatch", "register_engine", "get_engine",
     "make_engine", "list_engines", "resolve_engine_name",
-    "RRStore", "IncrementalRRStore", "build_store", "merge_stores",
-    "occur_histogram", "select_seeds", "sample_rrsets_queue", "to_lists",
+    "RRStore", "IncrementalRRStore", "DeviceRRStore", "build_store",
+    "merge_stores", "occur_histogram", "select_seeds", "select_seeds_device",
+    "sample_rrsets_queue", "to_lists",
     "sample_rrsets_dense", "membership_to_lists", "membership_to_padded",
     "sample_rrsets_lt", "ic_spread", "lt_spread", "solve_mrim",
 ]

@@ -9,6 +9,11 @@ vectorized processing we carry ``rr_ids`` = the row id of every flat element
   per-RR membership scan of u   -> equality scan + segment_max by rr_ids
   Covered flag + decrement      -> mask + segment scatter-sub on Occur
 
+The pool itself is device-resident (:class:`DeviceRRStore`): appends are
+jit'd rank-scatters into doubling donated buffers and the fused selection
+(:func:`select_seeds_device`) runs on the capacity-padded live buffers, so
+the whole IMM hot loop executes under ``jax.transfer_guard("disallow")``.
+
 Distributed mode: RR rows are sharded across devices (each device keeps the
 rows it sampled); ``Occur`` is psum-reduced, argmax is replicated math, and
 coverage updates stay local — per seed the only collective is one psum(n).
@@ -21,6 +26,13 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.packing import rank_positions
+from repro.kernels.bitset import _popcount
+
+
+def _ceil_pow2(x: int) -> int:
+    return 1 << max(x - 1, 0).bit_length()
 
 
 class RRStore(NamedTuple):
@@ -104,15 +116,20 @@ class IncrementalRRStore:
 
     def append_batch(self, batch) -> None:
         """Append one engine batch: an ``RRBatch`` or a ``(nodes, lengths)``
-        pair of padded arrays (the ``build_store`` array form)."""
+        pair of padded arrays (the ``build_store`` array form).  Rows with
+        length 0 are *padding rows* (no RR set — fixed-shape device engine
+        paths emit them) and are dropped: they get no row id and do not count
+        toward ``n_rr``."""
         nodes, lens = (batch.nodes, batch.lengths) if hasattr(batch, "nodes") \
             else batch
-        flat, ids, lens = _compact_padded(nodes, lens, base=self._n_rr)
+        flat, ids, lens = _compact_padded(nodes, lens)
+        row_rank = np.cumsum(lens > 0) - 1           # compact out empty rows
         self._reserve(flat.shape[0])
         self._flat[self._t:self._t + flat.shape[0]] = flat
-        self._ids[self._t:self._t + flat.shape[0]] = ids
+        self._ids[self._t:self._t + flat.shape[0]] = \
+            self._n_rr + row_rank[ids]
         self._t += flat.shape[0]
-        self._n_rr += len(lens)
+        self._n_rr += int((lens > 0).sum())
         self._cache = None
 
     def snapshot(self) -> RRStore:
@@ -123,6 +140,238 @@ class IncrementalRRStore:
                 valid=jnp.ones(self._t, bool),
                 n_rr=self._n_rr, n_nodes=self.n_nodes)
         return self._cache
+
+
+# ---------------------------------------------------------------------------
+# Device-resident RR pool (paper §3.5 memory layout, kept on-accelerator).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def _batch_counts(lens, *, width):
+    """(elements, valid rows) of one padded batch, as a (2,) device vector."""
+    lens = jnp.minimum(jnp.maximum(lens.astype(jnp.int32), 0), width)
+    return jnp.stack([lens.sum(dtype=jnp.int32),
+                      (lens > 0).sum(dtype=jnp.int32)])
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3, 4))
+def _append_scatter(flat, ids, valid, t, n_rr, nodes, lens):
+    """Rank-scatter one padded batch into the live device buffers, in place.
+
+    All five state operands are donated, so XLA updates the pool buffers
+    without a copy; ``t``/``n_rr`` ride along as device scalars.  Element
+    ranks are a row-major prefix sum of the validity mask (rows stay
+    contiguous, matching the host compaction order exactly); rows with
+    length 0 are padding and receive no row id.
+    """
+    cap = flat.shape[0]
+    r, w = nodes.shape
+    lens = jnp.minimum(jnp.maximum(lens.astype(jnp.int32), 0), w)
+    mask = jnp.arange(w, dtype=jnp.int32)[None, :] < lens[:, None]
+    fm = mask.reshape(-1)
+    dest = t + jnp.cumsum(fm, dtype=jnp.int32) - 1
+    dest = jnp.where(fm, dest, cap)                  # OOB -> dropped
+    flat = flat.at[dest].set(nodes.reshape(-1).astype(jnp.int32), mode="drop")
+    valid = valid.at[dest].set(True, mode="drop")
+    row_valid = lens > 0
+    rid = n_rr + jnp.cumsum(row_valid, dtype=jnp.int32) - 1
+    ids = ids.at[dest].set(
+        jnp.broadcast_to(rid[:, None], (r, w)).reshape(-1), mode="drop")
+    return (flat, ids, valid, t + fm.sum(dtype=jnp.int32),
+            n_rr + row_valid.sum(dtype=jnp.int32))
+
+
+_PACK = 1 << 15   # packed-append window (elements per DUS write)
+
+
+@functools.partial(jax.jit, static_argnames=("pack", "n"),
+                   donate_argnums=(0, 1, 2, 3, 4))
+def _append_packed(flat, ids, valid, t, n_rr, nodes, lens, *, pack, n):
+    """Rank-scatter append, packed variant for wide batches.
+
+    XLA:CPU lowers scatter to a serial per-update loop, so the plain
+    rank-scatter costs O(R·W) scatter updates even though only
+    ``sum(lens)`` elements are real.  Here the valid elements are gathered
+    into a ``pack``-wide window first (vectorized binary search over the
+    mask prefix sum — log(R·W) gather steps) and written with *contiguous*
+    ``dynamic_update_slice`` ops; positions past the batch's element count
+    get the virgin-buffer values (sentinel/0/False), which the next append
+    overwrites.  Host picks this path whenever R·W ≫ elements ≤ pack.
+    """
+    r, w = nodes.shape
+    lens = jnp.minimum(jnp.maximum(lens.astype(jnp.int32), 0), w)
+    mask = jnp.arange(w, dtype=jnp.int32)[None, :] < lens[:, None]
+    fm = mask.reshape(-1)
+    csum = jnp.cumsum(fm.astype(jnp.int32))
+    total = csum[-1]
+    size = r * w
+    src = rank_positions(csum, pack, size)
+    jvalid = jnp.arange(1, pack + 1, dtype=jnp.int32) <= total
+    fnodes = nodes.reshape(-1).astype(jnp.int32)[src]
+    row_valid = lens > 0
+    rid = n_rr + jnp.cumsum(row_valid.astype(jnp.int32)) - 1
+    upd_flat = jnp.where(jvalid, fnodes, n)
+    upd_ids = jnp.where(jvalid, rid[src // w], 0)
+    flat = jax.lax.dynamic_update_slice(flat, upd_flat, (t,))
+    ids = jax.lax.dynamic_update_slice(ids, upd_ids, (t,))
+    valid = jax.lax.dynamic_update_slice(valid, jvalid, (t,))
+    return (flat, ids, valid, t + total,
+            n_rr + row_valid.sum(dtype=jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("newcap", "n"))
+def _grow_buffers(flat, ids, valid, *, newcap, n):
+    # no donation: the outputs are larger than the inputs, so aliasing is
+    # impossible — growth is the one amortized O(cap) device copy
+
+    pad = newcap - flat.shape[0]
+    return (jnp.concatenate([flat, jnp.full((pad,), n, jnp.int32)]),
+            jnp.concatenate([ids, jnp.zeros((pad,), jnp.int32)]),
+            jnp.concatenate([valid, jnp.zeros((pad,), bool)]))
+
+
+@functools.partial(jax.jit, static_argnames=("num_rows", "n_words"))
+def _bitset_from_flat(flat, ids, valid, *, num_rows, n_words):
+    """Pack the flat pool into a (num_rows, n_words) membership bit matrix.
+
+    Elements are row-unique (RRBatch contract), so within one (row, word)
+    cell every scattered bit is distinct and scatter-add == scatter-or.
+    """
+    w = jnp.where(valid, flat >> 5, n_words)         # sentinel -> dropped
+    bit = jnp.where(
+        valid,
+        jnp.left_shift(jnp.uint32(1), (flat & 31).astype(jnp.uint32)),
+        jnp.uint32(0))
+    return jnp.zeros((num_rows, n_words), jnp.uint32).at[
+        jnp.clip(ids, 0, num_rows - 1), w].add(bit, mode="drop")
+
+
+class DeviceRRStore:
+    """Growing CSR-of-RR pool that *lives on the accelerator* (DESIGN.md §3).
+
+    The numpy :class:`IncrementalRRStore` pulls every batch to the host and
+    re-uploads the pool before each selection — exactly the host
+    orchestration the paper's §3.5 layout avoids.  Here ``append_batch`` is
+    one jit'd rank-scatter into doubling device buffers (``donate_argnums``
+    ⇒ in-place, amortized O(1) growth) and selection runs directly on the
+    capacity-padded live buffers, so shapes stay stable across rounds and
+    the fused greedy compiles O(log rounds) times instead of every round.
+
+    Host knowledge: the exact element/row counts are mirrored on the host
+    via one *explicit* scalar fetch per append (``jax.device_get`` of a (2,)
+    vector) — the same per-relaunch ``N_RR`` readback gIM's Alg. 6 host loop
+    performs, and the only host↔device traffic an append causes.  Explicit
+    transfers are permitted under ``jax.transfer_guard("disallow")``, which
+    the IMM driver holds over the whole sampling+selection loop.
+
+    ``snapshot()`` returns a classic :class:`RRStore` view sliced to the
+    live extent (device-side slice, no host transfer) for compatibility;
+    the fused selection (:func:`select_seeds_device`) bypasses it and reads
+    the padded buffers directly.  A snapshot is valid until the next
+    ``append_batch`` (donation retires the previous buffers).
+    """
+
+    def __init__(self, n_nodes: int, capacity: int = 4096):
+        if n_nodes >= np.iinfo(np.int32).max:
+            raise ValueError("item space must fit int32")
+        self.n_nodes = n_nodes
+        cap = _ceil_pow2(max(capacity, 1))
+        self._flat = jnp.full((cap,), n_nodes, jnp.int32)
+        self._ids = jnp.zeros((cap,), jnp.int32)
+        self._valid = jnp.zeros((cap,), bool)
+        self._t_dev = jnp.zeros((), jnp.int32)
+        self._nrr_dev = jnp.zeros((), jnp.int32)
+        self._t = 0                      # host mirrors (exact)
+        self._n_rr = 0
+        self._cache: RRStore | None = None
+        self._bitset = None              # (num_rows, n_words) cache
+
+    @property
+    def n_rr(self) -> int:
+        return self._n_rr
+
+    @property
+    def n_elems(self) -> int:
+        return self._t
+
+    @property
+    def capacity(self) -> int:
+        return int(self._flat.shape[0])
+
+    @property
+    def n_rr_dev(self):
+        """Row count as a device scalar (denominator of F_R under the guard)."""
+        return self._nrr_dev
+
+    def append_batch(self, batch) -> None:
+        """Compact one batch (``RRBatch`` or ``(nodes, lengths)``) into the
+        pool.  Zero-length rows are padding (fixed-shape device engine
+        paths emit them) and are dropped."""
+        nodes, lens = (batch.nodes, batch.lengths) if hasattr(batch, "nodes") \
+            else batch
+        nodes = jnp.asarray(nodes)
+        lens = jnp.asarray(lens)
+        if nodes.ndim != 2 or lens.shape != (nodes.shape[0],):
+            raise ValueError("append_batch wants padded (R, W) nodes + (R,) "
+                             "lengths")
+        elems, rows = (int(x) for x in jax.device_get(
+            _batch_counts(lens, width=nodes.shape[1])))
+        r, w = nodes.shape
+        # wide batches (device engine padding ≫ payload) go through the
+        # packed append: gather-pack + contiguous writes beat a serial
+        # R·W-update scatter by orders of magnitude on CPU
+        packed = r * w > _PACK and elems <= _PACK
+        need = self._t + (max(elems, _PACK) if packed else elems)
+        if need > self.capacity:
+            newcap = self.capacity
+            while newcap < need:
+                newcap *= 2
+            self._flat, self._ids, self._valid = _grow_buffers(
+                self._flat, self._ids, self._valid,
+                newcap=newcap, n=self.n_nodes)
+        if packed:
+            (self._flat, self._ids, self._valid, self._t_dev,
+             self._nrr_dev) = _append_packed(
+                self._flat, self._ids, self._valid, self._t_dev,
+                self._nrr_dev, nodes, lens, pack=_PACK, n=self.n_nodes)
+        else:
+            (self._flat, self._ids, self._valid, self._t_dev,
+             self._nrr_dev) = _append_scatter(
+                self._flat, self._ids, self._valid, self._t_dev,
+                self._nrr_dev, nodes, lens)
+        self._t += elems
+        self._n_rr += rows
+        self._cache = None
+        self._bitset = None
+
+    def snapshot(self) -> RRStore:
+        """Back-compat :class:`RRStore` view of the live extent (valid until
+        the next append)."""
+        if self._cache is None:
+            t = self._t
+            self._cache = RRStore(
+                rr_flat=self._flat[:t], rr_ids=self._ids[:t],
+                valid=self._valid[:t], n_rr=self._n_rr, n_nodes=self.n_nodes)
+        return self._cache
+
+    def row_capacity(self) -> int:
+        """Static row bound for the fused selection: next power of two ≥
+        n_rr (and ≥ 32 so the Covered bitset packs whole words).  Selection
+        recompiles only when this doubles."""
+        return max(32, _ceil_pow2(max(self._n_rr, 1)))
+
+    def bitset_matrix(self):
+        """(row_capacity, ceil(n/32)) packed membership matrix (cached)."""
+        num_rows = self.row_capacity()
+        n_words = (self.n_nodes + 31) // 32
+        if self._bitset is None or self._bitset.shape != (num_rows, n_words):
+            self._bitset = _bitset_from_flat(
+                self._flat, self._ids, self._valid,
+                num_rows=num_rows, n_words=n_words)
+        return self._bitset
+
+    def select(self, k: int, method: str = "auto") -> "CoverageResult":
+        return select_seeds_device(self, k, method=method)
 
 
 def merge_stores(stores: list[RRStore]) -> RRStore:
@@ -187,6 +436,111 @@ def select_seeds(store: RRStore, k: int) -> CoverageResult:
     return CoverageResult(seeds=seeds, gains=gains, frac=frac.astype(jnp.float32))
 
 
+# ---------------------------------------------------------------------------
+# Fused selection on the device-resident pool (capacity-stable shapes).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("num_rows", "n", "k"))
+def _greedy_fused(flat, ids, valid, n_rr, *, num_rows, n, k):
+    """Alg. 7 as ONE scan over the capacity-padded buffers.
+
+    Differences from :func:`_greedy`: operands are the pool's *capacity*
+    buffers (shapes change only at doublings, so the LB loop re-selects
+    without recompiling), the row count arrives as a device scalar (only the
+    F_R denominator needs it), and Covered lives as a packed
+    ``(num_rows/32,)`` uint32 bitset — per-seed gains are popcount
+    arithmetic on the newly-covered words.  The Occur decrement stays a
+    masked scatter over the flat elements: on a sparse pool that is
+    O(elements), strictly less work than any dense per-node pass (the
+    bit-matrix decrement variant lives in :func:`_greedy_bitset`).
+    """
+    nw = num_rows // 32                              # num_rows is a mult of 32
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    occur0 = jnp.zeros(n + 1, jnp.int32).at[flat].add(
+        valid.astype(jnp.int32), mode="drop")[:n]
+
+    def step(carry, _):
+        occur, cov_words = carry
+        u = jnp.argmax(occur).astype(jnp.int32)
+        match = (flat == u) & valid                  # membership scan
+        row_has = jax.ops.segment_max(match.astype(jnp.int32), ids,
+                                      num_segments=num_rows) > 0
+        covered = (((cov_words[:, None] >> shifts[None, :])
+                    & jnp.uint32(1)) != 0).reshape(num_rows)
+        newly = row_has & ~covered
+        new_words = (newly.reshape(nw, 32).astype(jnp.uint32)
+                     << shifts[None, :]).sum(axis=1)
+        gain = _popcount(new_words).sum(dtype=jnp.int32)
+        elem_newly = newly[jnp.clip(ids, 0, num_rows - 1)] & valid
+        dec = jnp.zeros(n + 1, jnp.int32).at[flat].add(
+            elem_newly.astype(jnp.int32), mode="drop")[:n]
+        return (occur - dec, cov_words | new_words), (u, gain)
+
+    cov0 = jnp.zeros(nw, jnp.uint32)
+    _, (seeds, gains) = jax.lax.scan(step, (occur0, cov0), None, length=k)
+    frac = gains.sum(dtype=jnp.int32) / jnp.maximum(n_rr, 1)
+    return seeds, gains, frac.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _greedy_bitset(m_words, n_rr, *, k):
+    """Alg. 7 on the packed membership matrix, via the Pallas bitset kernels.
+
+    ``occur_from_bitset`` builds Occur as a cross-lane bit-column reduction
+    and its row-masked variant computes the per-seed decrement over the
+    newly covered rows — popcount arithmetic end to end, no flat scatter.
+    Work per seed is O(num_rows · n/32) regardless of sparsity, so this
+    path wins when RR sets are dense (mean size ≳ n/32) and the flat pool
+    would be larger than the bit matrix; ``select_seeds_device`` picks per
+    store.  Membership of the freshly selected seed is a bit-column test.
+    """
+    from repro.kernels import ops as kops
+    num_rows = m_words.shape[0]
+    occur0 = kops.occur_from_bitset(m_words)         # (n_words*32,)
+
+    def step(carry, _):
+        occur, covered = carry
+        u = jnp.argmax(occur).astype(jnp.int32)
+        col = m_words[:, u >> 5]
+        hit = ((col >> (u & 31).astype(jnp.uint32)) & jnp.uint32(1)) != 0
+        newly = hit & ~covered
+        dec = kops.occur_from_bitset_masked(m_words, newly)
+        gain = newly.sum(dtype=jnp.int32)
+        return (occur - dec, covered | hit), (u, gain)
+
+    covered0 = jnp.zeros(num_rows, bool)
+    _, (seeds, gains) = jax.lax.scan(step, (occur0, covered0), None, length=k)
+    frac = gains.sum(dtype=jnp.int32) / jnp.maximum(n_rr, 1)
+    return seeds, gains, frac.astype(jnp.float32)
+
+
+def select_seeds_device(store: "DeviceRRStore", k: int,
+                        method: str = "auto") -> CoverageResult:
+    """Fused greedy selection directly on a :class:`DeviceRRStore`.
+
+    ``method``: ``"flat"`` (scatter decrement, optimal for sparse RR pools),
+    ``"bitset"`` (Pallas bit-matrix path, optimal for dense pools), or
+    ``"auto"`` — bitset iff the bit matrix is no larger than the flat
+    capacity buffers it replaces (i.e. mean RR size ≳ n/32).  Everything
+    stays on device; the returned ``frac`` uses the device row count, so the
+    call is legal under ``jax.transfer_guard("disallow")``.
+    """
+    num_rows = store.row_capacity()
+    if method == "auto":
+        n_words = (store.n_nodes + 31) // 32
+        method = "bitset" if num_rows * n_words <= store.capacity else "flat"
+    if method == "flat":
+        seeds, gains, frac = _greedy_fused(
+            store._flat, store._ids, store._valid, store.n_rr_dev,
+            num_rows=num_rows, n=store.n_nodes, k=k)
+    elif method == "bitset":
+        seeds, gains, frac = _greedy_bitset(store.bitset_matrix(),
+                                            store.n_rr_dev, k=k)
+    else:
+        raise ValueError(f"unknown selection method {method!r}")
+    return CoverageResult(seeds=seeds, gains=gains, frac=frac)
+
+
 class PaddedStore(NamedTuple):
     """2D tile layout for the Pallas membership kernel (DESIGN.md §2):
     TPU prefers rectangular VMEM tiles over the GPU's ragged flat array."""
@@ -215,32 +569,33 @@ def build_padded_store(rr_lists, n: int, row_len: int | None = None,
 def select_seeds_padded(store: PaddedStore, k: int) -> CoverageResult:
     """Greedy selection with the Pallas membership kernel as the Alg. 7 scan.
 
-    The scan (the hot part: R×L element compares per seed) runs in the
-    kernel; Covered flags and the Occur decrement (scatter-add) stay in XLA,
-    which lowers scatter natively on TPU.
+    One fused ``lax.scan`` over the k seeds (the former per-seed python loop
+    unrolled k kernel launches and re-traced per call): the membership scan
+    (R×L element compares per seed) runs in the kernel; Covered flags and
+    the Occur decrement (scatter-add) stay in XLA, which lowers scatter
+    natively on TPU.
     """
     from repro.kernels import ops as kops
     rows, lengths, n = store.rows, store.lengths, store.n_nodes
     r, l = rows.shape
     lane = jnp.arange(l, dtype=jnp.int32)[None, :]
     valid = lane < lengths[:, None]
-    occur = jnp.zeros(n + 1, jnp.int32).at[rows].add(
+    occur0 = jnp.zeros(n + 1, jnp.int32).at[rows].add(
         valid.astype(jnp.int32), mode="drop")[:n]
-    covered = jnp.zeros(r, bool)
-    seeds, gains = [], []
-    for _ in range(k):
+
+    def step(carry, _):
+        occur, covered = carry
         u = jnp.argmax(occur).astype(jnp.int32)
         hit = kops.membership_rows(rows, lengths, u)
         newly = hit & ~covered
         dec = jnp.zeros(n + 1, jnp.int32).at[rows].add(
             (valid & newly[:, None]).astype(jnp.int32), mode="drop")[:n]
-        occur = occur - dec
-        covered = covered | hit
-        seeds.append(u)
-        gains.append(newly.sum(dtype=jnp.int32))
+        return (occur - dec, covered | hit), (u, newly.sum(dtype=jnp.int32))
+
+    _, (seeds, gains) = jax.lax.scan(step, (occur0, jnp.zeros(r, bool)),
+                                     None, length=k)
     n_rr = int((lengths > 0).sum())
-    gains = jnp.stack(gains)
-    return CoverageResult(seeds=jnp.stack(seeds), gains=gains,
+    return CoverageResult(seeds=seeds, gains=gains,
                           frac=(gains.sum() / jnp.maximum(n_rr, 1)
                                 ).astype(jnp.float32))
 

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.graph.csr import CSRGraph
-from repro.core.packing import pack_rows
+from repro.core.packing import pack_rows, pack_rows_device
 
 
 class DenseSample(NamedTuple):
@@ -58,6 +58,22 @@ def _sample_dense(key, edge_src, edge_dst, edge_w, roots, *, batch, n, m):
     frontier, visited, key, levels = jax.lax.while_loop(
         cond, body, (frontier, visited, key, jnp.int32(0)))
     return visited, levels
+
+
+@functools.partial(jax.jit, static_argnames=("batch", "n", "m"))
+def _dense_round(key, edge_src, edge_dst, edge_w, *, batch, n, m):
+    """Root draw + frontier BFS + padded conversion as ONE jit — the
+    device-resident engine path (``edge_src`` precomputed once at engine
+    construction, no per-round host work).  Key-split structure matches
+    :func:`sample_rrsets_dense` exactly."""
+    key, sub = jax.random.split(key)
+    roots = jax.random.randint(sub, (batch,), 0, n, dtype=jnp.int32)
+    membership, levels = _sample_dense(key, edge_src, edge_dst, edge_w, roots,
+                                       batch=batch, n=n, m=m)
+    cols = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (batch, n))
+    nodes, lens = pack_rows_device(cols, membership)
+    overflow = jnp.zeros((batch,), bool)             # dense never truncates
+    return nodes, lens, roots, overflow, levels
 
 
 def sample_rrsets_dense(key, g_rev: CSRGraph, batch: int) -> DenseSample:

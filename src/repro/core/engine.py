@@ -20,6 +20,7 @@ Layering: this module imports the low-level samplers (``rrset``, ``dense``,
 from __future__ import annotations
 
 import dataclasses
+import functools
 from dataclasses import dataclass
 from typing import NamedTuple, Optional, Protocol, runtime_checkable
 
@@ -27,11 +28,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.graph.csr import CSRGraph
+from repro.graph.csr import CSRGraph, coalesce_ic
 from repro.core import rrset as rr_queue
 from repro.core import dense as rr_dense
 from repro.core import lt as rr_lt
-from repro.core.packing import pack_rows
+from repro.core.packing import pack_rows_device
+
+
+@jax.jit
+def split_key(key):
+    """Guard-safe (carry, sub) key split: the pair indexing happens inside
+    the jit, so no host index scalar is committed under
+    ``jax.transfer_guard("disallow")``.  Shared by the device-resident
+    solvers (imm, mrim)."""
+    ks = jax.random.split(key)
+    return ks[0], ks[1]
 
 
 class RRBatch(NamedTuple):
@@ -47,6 +58,12 @@ class RRBatch(NamedTuple):
     lanes == rows; the refill engine reports its persistent lanes).
     ``steps`` is the scalar count of lockstep micro-steps this batch cost —
     the hardware-transferable parallel-time metric of §Perf/IM.
+
+    ``sample()`` returns only real sets (every ``lengths[i] >= 1``).  The
+    fixed-shape device paths (``sample_device``, preferred by the solvers
+    under ``jax.transfer_guard("disallow")``) may additionally emit *padding
+    rows* with ``lengths[i] == 0`` — no RR set at all — which the stores
+    drop without assigning a row id.
     """
     nodes: jnp.ndarray       # (R, W) int32/int64, padded per-set node ids
     lengths: jnp.ndarray     # (R,) int — RR-set sizes (>= 1)
@@ -66,7 +83,20 @@ class RRBatch(NamedTuple):
 
 @runtime_checkable
 class SamplerEngine(Protocol):
-    """What the solvers require of an engine (structural — no inheritance)."""
+    """What the solvers require of an engine (structural — no inheritance).
+
+    Optional extensions the solvers exploit when present:
+
+    * ``device_resident = True`` — every op in ``sample`` runs on device
+      (all operands are committed device arrays; host graph preprocessing
+      happened at construction).  The IMM driver then holds
+      ``jax.transfer_guard("disallow")`` over its whole hot loop.  Engines
+      that do host work per sample simply omit the attribute and the driver
+      falls back to unguarded execution — third-party adapters keep working.
+    * ``sample_device(key)`` — fixed-shape variant of ``sample`` that may
+      return zero-length padding rows (see :class:`RRBatch`); preferred by
+      the solvers because stable shapes mean stable jit caches.
+    """
     name: str
 
     @property
@@ -148,7 +178,10 @@ def resolve_qcap(qcap: Optional[int], g_rev: CSRGraph) -> int:
 
 @register_engine("queue")
 class QueueEngine:
-    """gIM-faithful work-efficient sampler (paper Alg. 3/6; core/rrset.py)."""
+    """gIM-faithful work-efficient sampler (paper Alg. 3/6; core/rrset.py).
+    ``sample`` is one jit (root draw included) over device operands."""
+
+    device_resident = True
 
     @dataclass(frozen=True)
     class Config:
@@ -157,9 +190,12 @@ class QueueEngine:
         ec: int = rr_queue.EC_DEFAULT
 
     def __init__(self, g_rev: CSRGraph, config: Optional[Config] = None):
-        self.g_rev = g_rev
+        # IC equivalence: parallel edges merge to p' = 1-∏(1-p), making the
+        # rows simple and the chunk dedup a no-op (detect returns "none")
+        self.g_rev = coalesce_ic(g_rev)
         self.config = config if config is not None else self.Config()
-        self.qcap = resolve_qcap(self.config.qcap, g_rev)
+        self.qcap = resolve_qcap(self.config.qcap, self.g_rev)
+        self._dedup = rr_queue.detect_dedup_mode(self.g_rev)
 
     @property
     def item_space(self) -> int:
@@ -167,33 +203,38 @@ class QueueEngine:
 
     def sample(self, key) -> RRBatch:
         s = rr_queue.sample_rrsets_queue(key, self.g_rev, self.config.batch,
-                                         self.qcap, self.config.ec)
+                                         self.qcap, self.config.ec,
+                                         dedup=self._dedup)
         return RRBatch.make(s.nodes, s.lengths, s.overflowed, s.steps)
 
 
 @register_engine("dense")
 class DenseEngine:
     """Dense-frontier masked-SpMV sampler (core/dense.py); membership is
-    converted to padded rows by one vectorized rank-scatter (no per-row
-    python ``nonzero`` loop)."""
+    converted to padded rows by one device rank-scatter inside the same jit
+    as the BFS (``edge_src`` is precomputed once here, not per round)."""
+
+    device_resident = True
 
     @dataclass(frozen=True)
     class Config:
         batch: int = 256
 
     def __init__(self, g_rev: CSRGraph, config: Optional[Config] = None):
-        self.g_rev = g_rev
+        self.g_rev = coalesce_ic(g_rev)      # exact for IC, fewer edges
         self.config = config if config is not None else self.Config()
+        self._edge_src = rr_dense._edge_src(self.g_rev)
 
     @property
     def item_space(self) -> int:
         return self.g_rev.n_nodes
 
     def sample(self, key) -> RRBatch:
-        s = rr_dense.sample_rrsets_dense(key, self.g_rev, self.config.batch)
-        nodes, lens = rr_dense.membership_to_padded(s.membership)
-        overflow = np.zeros(self.config.batch, bool)  # dense never truncates
-        return RRBatch.make(nodes, lens, overflow, s.levels)
+        g = self.g_rev
+        nodes, lens, _, overflow, levels = rr_dense._dense_round(
+            key, self._edge_src, g.indices, g.weights,
+            batch=self.config.batch, n=g.n_nodes, m=g.n_edges)
+        return RRBatch.make(nodes, lens, overflow, levels)
 
 
 @register_engine("refill")
@@ -202,38 +243,62 @@ class RefillEngine:
     until ``batch`` RR sets are complete; a sample may return slightly more
     than ``batch`` rows (in-flight sets always finish, unbiased)."""
 
+    device_resident = True
+
     @dataclass(frozen=True)
     class Config:
         batch: int = 256             # quota: target RR sets per sample()
-        lanes: Optional[int] = None  # default: batch//4 clamped to [8, 256]
+        lanes: Optional[int] = None  # default: batch//2 clamped to [8, 512]
         out_cap: Optional[int] = None
         ec: int = rr_queue.EC_DEFAULT
 
     def __init__(self, g_rev: CSRGraph, config: Optional[Config] = None):
-        self.g_rev = g_rev
+        self.g_rev = coalesce_ic(g_rev)
         cfg = config if config is not None else self.Config()
         self.config = cfg
+        # wide lane count: lockstep micro-steps (the dominant cost, fixed
+        # overhead per step) scale ~1/lanes; the paper's Alg. 6 likewise
+        # sizes persistent blocks to fill the machine
         self.lanes = (cfg.lanes if cfg.lanes is not None
-                      else max(min(cfg.batch // 4, 256), 8))
+                      else max(min(cfg.batch // 2, 512), 8))
         self.out_cap = (cfg.out_cap if cfg.out_cap is not None
                         else min(8 * cfg.batch // self.lanes, 64) * 64)
+        self._dedup = rr_queue.detect_dedup_mode(self.g_rev)
 
     @property
     def item_space(self) -> int:
         return self.g_rev.n_nodes
 
+    def _sample_raw(self, key):
+        return rr_queue.sample_rrsets_refill(key, self.g_rev, self.lanes,
+                                             quota=self.config.batch,
+                                             out_cap=self.out_cap,
+                                             ec=self.config.ec,
+                                             dedup=self._dedup)
+
     def sample(self, key) -> RRBatch:
-        s = rr_queue.sample_rrsets_refill(key, self.g_rev, self.lanes,
-                                          quota=self.config.batch,
-                                          out_cap=self.out_cap,
-                                          ec=self.config.ec)
+        s = self._sample_raw(key)
         nodes, lens = rr_queue.refill_to_padded(s)
+        return RRBatch.make(nodes, lens, s.overflowed, s.steps)
+
+    def sample_device(self, key) -> RRBatch:
+        """Fixed-shape device unpack: every (lane, slot) becomes a row,
+        unfinished slots as zero-length padding rows.  Same sample stream as
+        ``sample`` (identical key splits), but no host round-trip and a
+        shape that never depends on the data."""
+        s = self._sample_raw(key)
+        nodes, lens = rr_queue.refill_to_padded_device(s.flat, s.lengths,
+                                                       s.n_done)
         return RRBatch.make(nodes, lens, s.overflowed, s.steps)
 
 
 @register_engine("lt")
 class LTEngine:
-    """Linear-threshold walk sampler (paper §3.7; core/lt.py)."""
+    """Linear-threshold walk sampler (paper §3.7; core/lt.py).  The
+    segmented weight cumsum is built once here (the historical path redid
+    that host pass — and its upload — every round)."""
+
+    device_resident = True
 
     @dataclass(frozen=True)
     class Config:
@@ -244,15 +309,45 @@ class LTEngine:
         self.g_rev = g_rev
         self.config = config if config is not None else self.Config()
         self.qcap = resolve_qcap(self.config.qcap, g_rev)
+        self._rowcum = rr_lt.row_cumweights(g_rev)
 
     @property
     def item_space(self) -> int:
         return self.g_rev.n_nodes
 
     def sample(self, key) -> RRBatch:
-        s = rr_lt.sample_rrsets_lt(key, self.g_rev, self.config.batch,
-                                   self.qcap)
-        return RRBatch.make(s.nodes, s.lengths, s.overflowed, s.steps)
+        g = self.g_rev
+        nodes, lengths, _, overflowed, steps = rr_lt._lt_round(
+            key, g.offsets, g.indices, self._rowcum,
+            batch=self.config.batch, qcap=self.qcap,
+            n=g.n_nodes, m=g.n_edges)
+        return RRBatch.make(nodes, lengths, overflowed, steps)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("batch", "t", "qcap", "ec", "n", "m",
+                                    "dedup"))
+def _mrim_round(key, offsets, indices, weights, *, batch, t, qcap, ec, n, m,
+                dedup="sort"):
+    """Root draw + T tagged BFS + segment merge as ONE jit (device path).
+    Key-split structure matches the historical host implementation, keeping
+    sample streams bit-identical."""
+    key, kroot, ksample = jax.random.split(key, 3)
+    roots = jax.random.randint(kroot, (batch,), 0, n, dtype=jnp.int32)
+    tiled_roots = jnp.repeat(roots, t)                # lane b*T+r -> root b
+    nodes, lengths, overflowed, steps = rr_queue._sample_queue(
+        ksample, offsets, indices, weights, tiled_roots,
+        batch=batch * t, qcap=qcap, ec=ec, n=n, m=m, dedup=dedup)
+    rounds = jnp.tile(jnp.arange(t, dtype=jnp.int32), batch)
+    enc = (nodes + (rounds * n)[:, None]).reshape(batch, t * qcap)
+    lane_len = lengths.reshape(batch, t)
+    # valid positions: within each lane's segment, first lane_len entries
+    seg = jnp.arange(t * qcap, dtype=jnp.int32) // qcap
+    pos = jnp.arange(t * qcap, dtype=jnp.int32) % qcap
+    mask = pos[None, :] < lane_len[:, seg]
+    out_nodes, out_lens = pack_rows_device(enc, mask)
+    overflow = overflowed.reshape(batch, t).any(axis=1)
+    return out_nodes, out_lens, overflow, steps
 
 
 @register_engine("mrim")
@@ -261,7 +356,9 @@ class MRIMEngine:
     from a shared root, run as T adjacent queue-engine lanes; elements are
     encoded ``round * n + node`` so coverage machinery is reused verbatim on
     an item space of n·T.  Lane segments are merged into one padded row per
-    sample by a vectorized rank-scatter (no per-sample python loop)."""
+    sample by a device rank-scatter inside the sampling jit."""
+
+    device_resident = True
 
     @dataclass(frozen=True)
     class Config:
@@ -271,32 +368,21 @@ class MRIMEngine:
         ec: int = rr_queue.EC_DEFAULT
 
     def __init__(self, g_rev: CSRGraph, config: Optional[Config] = None):
-        self.g_rev = g_rev
+        self.g_rev = coalesce_ic(g_rev)
         self.config = config if config is not None else self.Config()
-        self.qcap = resolve_qcap(self.config.qcap, g_rev)
+        self.qcap = resolve_qcap(self.config.qcap, self.g_rev)
+        self._dedup = rr_queue.detect_dedup_mode(self.g_rev)
+        if self.item_space >= np.iinfo(np.int32).max:
+            raise ValueError("n_nodes * t_rounds must fit int32")
 
     @property
     def item_space(self) -> int:
         return self.g_rev.n_nodes * self.config.t_rounds
 
     def sample(self, key) -> RRBatch:
-        g_rev, cfg, qcap = self.g_rev, self.config, self.qcap
-        n, m = g_rev.n_nodes, g_rev.n_edges
-        t = cfg.t_rounds
-        key, kroot, ksample = jax.random.split(key, 3)
-        roots = jax.random.randint(kroot, (cfg.batch,), 0, n, dtype=jnp.int32)
-        tiled_roots = jnp.repeat(roots, t)            # lane b*T+r -> root b
-        nodes, lengths, overflowed, steps = rr_queue._sample_queue(
-            ksample, g_rev.offsets, g_rev.indices, g_rev.weights, tiled_roots,
-            batch=cfg.batch * t, qcap=qcap, ec=cfg.ec, n=n, m=m)
-        rounds = np.tile(np.arange(t, dtype=np.int64), cfg.batch)
-        enc = (np.asarray(nodes).astype(np.int64) + (rounds * n)[:, None]
-               ).reshape(cfg.batch, t * qcap)
-        lane_len = np.asarray(lengths).reshape(cfg.batch, t)
-        # valid positions: within each lane's segment, first lane_len entries
-        seg = np.arange(t * qcap) // qcap
-        pos = np.arange(t * qcap) % qcap
-        mask = pos[None, :] < lane_len[:, seg]
-        out_nodes, out_lens = pack_rows(np.asarray(enc), mask)
-        overflow = np.asarray(overflowed).reshape(cfg.batch, t).any(axis=1)
+        g, cfg = self.g_rev, self.config
+        out_nodes, out_lens, overflow, steps = _mrim_round(
+            key, g.offsets, g.indices, g.weights,
+            batch=cfg.batch, t=cfg.t_rounds, qcap=self.qcap, ec=cfg.ec,
+            n=g.n_nodes, m=g.n_edges, dedup=self._dedup)
         return RRBatch.make(out_nodes, out_lens, overflow, steps)

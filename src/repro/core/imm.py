@@ -8,11 +8,20 @@ or a caller-supplied engine instance (e.g. the sharded launcher's).  Every
 round is ``batch = engine.sample(key)`` → ``store.append_batch(batch)``; the
 solver never inspects engine internals.
 
+The hot loop is *device-resident*: the RR pool is a
+:class:`~repro.core.coverage.DeviceRRStore` (jit'd rank-scatter appends into
+donated doubling buffers), selection is the fused capacity-stable greedy
+(:func:`~repro.core.coverage.select_seeds_device`), and for engines that
+declare ``device_resident`` the whole sampling+selection loop runs under
+``jax.transfer_guard("disallow")``.  The only host↔device traffic per round
+is the store's explicit scalar count fetch — the same per-relaunch ``N_RR``
+readback gIM's Alg. 6 host loop performs; per-round stats (micro-steps,
+overflow) accumulate as device scalars and materialize once per
+``sample_until`` (or lazily on ``stats`` access).
+
 All martingale math (λ', λ*, the Alg. 2 LB loop) follows IMM [Tang et al.'15]
 and is shared with the numpy oracle (core/oracle.py) so both sides compute
-identical θ schedules.  The RR pool is an incremental CSR-of-RR
-(:class:`~repro.core.coverage.IncrementalRRStore`), so the LB loop's repeated
-selections reuse one growing store instead of re-merging every round.
+identical θ schedules.
 """
 from __future__ import annotations
 
@@ -21,12 +30,22 @@ from dataclasses import dataclass, field
 from typing import Optional, Union
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.graph.csr import CSRGraph, reverse
 from repro.core import coverage as cov
 from repro.core.oracle import imm_theta_params
-from repro.core.engine import (SamplerEngine, make_engine, resolve_engine_name)
+from repro.core.engine import (SamplerEngine, make_engine, resolve_engine_name,
+                               split_key as _split_key)
+
+
+@jax.jit
+def _accum_round_stats(steps_acc, ovf_acc, steps, overflowed):
+    """Device-scalar stat accumulation — replaces the per-round blocking
+    ``int(batch.steps)`` / ``np.asarray(batch.overflowed)`` syncs."""
+    return (steps_acc + steps.astype(jnp.int32),
+            ovf_acc + overflowed.sum(dtype=jnp.int32))
 
 
 @dataclass
@@ -85,26 +104,58 @@ class IMMSolver:
         self.engine_name = getattr(self.engine, "name",
                                    type(self.engine).__name__)
         self.key = jax.random.key(seed)
-        self.store = cov.IncrementalRRStore(self.engine.item_space)
-        self.stats = IMMStats()
+        self.store = cov.DeviceRRStore(self.engine.item_space)
+        self._stats = IMMStats()
+        self._stats_dirty = False
+        # stats accumulate as device scalars; materialized once per
+        # sample_until / on `stats` access, not per round
+        self._steps_acc = jnp.zeros((), jnp.int32)
+        self._ovf_acc = jnp.zeros((), jnp.int32)
+        self._ovf_lanes = 0
+        # engines advertising full device residency let the solver hold a
+        # transfer guard over the whole hot loop; host-path engines (e.g.
+        # third-party adapters) fall back to unguarded execution
+        self._guard = ("disallow"
+                       if getattr(self.engine, "device_resident", False)
+                       else "allow")
+        self._sample = getattr(self.engine, "sample_device",
+                               self.engine.sample)
+
+    # -- stats -------------------------------------------------------------
+    @property
+    def stats(self) -> IMMStats:
+        self._materialize_stats()
+        return self._stats
+
+    def _materialize_stats(self):
+        if self._stats_dirty:
+            steps, ovf = (int(x) for x in jax.device_get(
+                (self._steps_acc, self._ovf_acc)))
+            st = self._stats
+            st.sampling_steps = steps
+            st.n_rr_sampled = self.store.n_rr
+            st.overflow_fraction = (ovf / self._ovf_lanes
+                                    if self._ovf_lanes else 0.0)
+            self._stats_dirty = False
 
     # -- sampling ----------------------------------------------------------
     def _round(self):
-        self.key, sub = jax.random.split(self.key)
-        batch = self.engine.sample(sub)
+        self.key, sub = _split_key(self.key)
+        batch = self._sample(sub)
         self.store.append_batch(batch)
-        self.stats.rounds += 1
-        self.stats.n_rr_sampled += batch.n_sets
-        self.stats.sampling_steps += int(batch.steps)
-        overflow = np.asarray(batch.overflowed)
-        self.stats.overflow_fraction = (
-            (self.stats.overflow_fraction * (self.stats.rounds - 1)
-             + float(overflow.mean() if overflow.size else 0.0))
-            / self.stats.rounds)
+        self._steps_acc, self._ovf_acc = _accum_round_stats(
+            self._steps_acc, self._ovf_acc, batch.steps, batch.overflowed)
+        self._ovf_lanes += int(np.prod(batch.overflowed.shape))
+        self._stats.rounds += 1
+        self._stats_dirty = True
 
     def sample_until(self, theta: int):
-        while self.stats.n_rr_sampled < theta:
+        # the loop condition reads the store's exact host-mirrored row count
+        # (explicit scalar fetch per append — gIM's Alg. 6 N_RR readback);
+        # no pool data crosses to the host
+        while self.store.n_rr < theta:
             self._round()
+        self._materialize_stats()
 
     def _store(self) -> cov.RRStore:
         return self.store.snapshot()
@@ -115,29 +166,33 @@ class IMMSolver:
         n = self.n
         lam_p, lam_star, eps_p, _ = imm_theta_params(n, k, eps, ell)
         lb = 1.0
-        for i in range(1, max(int(math.log2(n)), 2)):           # Alg. 2
-            x = n / (2.0 ** i)
-            theta_i = int(math.ceil(lam_p / x))
+        with jax.transfer_guard(self._guard):
+            for i in range(1, max(int(math.log2(n)), 2)):       # Alg. 2
+                x = n / (2.0 ** i)
+                theta_i = int(math.ceil(lam_p / x))
+                if max_theta:
+                    theta_i = min(theta_i, max_theta)
+                self.sample_until(theta_i)
+                res = self.store.select(k)
+                # explicit scalar fetch: the Alg. 2 L7 break is host control
+                est = n * float(jax.device_get(res.frac))
+                self._stats.lb_iters = i
+                self._stats.history.append(("lb_iter", i, theta_i, est))
+                if est >= (1.0 + eps_p) * x:                     # Alg. 2 L7
+                    lb = est / (1.0 + eps_p)                     # Alg. 2 L8
+                    break
+            theta = int(math.ceil(lam_star / lb))
             if max_theta:
-                theta_i = min(theta_i, max_theta)
-            self.sample_until(theta_i)
-            res = cov.select_seeds(self._store(), k)
-            est = n * float(res.frac)
-            self.stats.lb_iters = i
-            self.stats.history.append(("lb_iter", i, theta_i, est))
-            if est >= (1.0 + eps_p) * x:                         # Alg. 2 L7
-                lb = est / (1.0 + eps_p)                         # Alg. 2 L8
-                break
-        theta = int(math.ceil(lam_star / lb))
-        if max_theta:
-            theta = min(theta, max_theta)
-        self.stats.theta = theta
-        self.stats.lb = lb
-        self.sample_until(theta)
-        res = cov.select_seeds(self._store(), k)
-        self.stats.frac_covered = float(res.frac)
-        spread_est = n * float(res.frac)                         # Eq. (3)
-        return np.asarray(res.seeds), spread_est, self.stats
+                theta = min(theta, max_theta)
+            self._stats.theta = theta
+            self._stats.lb = lb
+            self.sample_until(theta)
+            res = self.store.select(k)
+        # final result materialization — the loop's only bulk transfer
+        seeds, frac = jax.device_get((res.seeds, res.frac))
+        self._stats.frac_covered = float(frac)
+        spread_est = n * float(frac)                             # Eq. (3)
+        return np.asarray(seeds), spread_est, self.stats
 
 
 def imm(g: CSRGraph, k: int, eps: float, **kw):

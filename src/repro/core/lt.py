@@ -107,13 +107,25 @@ def _sample_lt(key, offsets, indices, rowcum, roots, *, batch, qcap, n, m):
     return walk, length, overflow, steps
 
 
-def sample_rrsets_lt(key, g_rev: CSRGraph, batch: int, qcap: int) -> LTSample:
-    n, m = g_rev.n_nodes, g_rev.n_edges
-    rowcum = row_cumweights(g_rev)
+@functools.partial(jax.jit, static_argnames=("batch", "qcap", "n", "m"))
+def _lt_round(key, offsets, indices, rowcum, *, batch, qcap, n, m):
+    """Root draw + LT walk as ONE jit — the device-resident engine path.
+    ``rowcum`` is the precomputed segmented cumsum (engine-owned, computed
+    once; the historical wrapper recomputed it on the host every round).
+    Key-split structure matches :func:`sample_rrsets_lt` exactly."""
     key, sub = jax.random.split(key)
     roots = jax.random.randint(sub, (batch,), 0, n, dtype=jnp.int32)
     nodes, lengths, overflowed, steps = _sample_lt(
-        key, g_rev.offsets, g_rev.indices, rowcum, roots,
+        key, offsets, indices, rowcum, roots,
+        batch=batch, qcap=qcap, n=n, m=m)
+    return nodes, lengths, roots, overflowed, steps
+
+
+def sample_rrsets_lt(key, g_rev: CSRGraph, batch: int, qcap: int) -> LTSample:
+    n, m = g_rev.n_nodes, g_rev.n_edges
+    rowcum = row_cumweights(g_rev)
+    nodes, lengths, roots, overflowed, steps = _lt_round(
+        key, g_rev.offsets, g_rev.indices, rowcum,
         batch=batch, qcap=qcap, n=n, m=m)
     return LTSample(nodes=nodes, lengths=lengths, roots=roots,
                     overflowed=overflowed, steps=steps)

@@ -25,7 +25,7 @@ import numpy as np
 from repro.graph.csr import CSRGraph, reverse
 from repro.core import rrset as rr_queue
 from repro.core import coverage as cov
-from repro.core.engine import MRIMEngine, make_engine
+from repro.core.engine import MRIMEngine, make_engine, split_key as _split_key
 
 
 def sample_mrim_round(key, g_rev: CSRGraph, batch: int, t_rounds: int,
@@ -87,10 +87,11 @@ def solve_mrim(g: CSRGraph, k: int, t_rounds: int, n_rr: int, *,
     n = g.n_nodes
     key = jax.random.key(seed)
     eng = make_engine("mrim", g_rev, batch=batch, t_rounds=t_rounds, qcap=qcap)
-    inc = cov.IncrementalRRStore(eng.item_space)
-    while inc.n_rr < n_rr:
-        key, sub = jax.random.split(key)
-        inc.append_batch(eng.sample(sub))
+    inc = cov.DeviceRRStore(eng.item_space)
+    with jax.transfer_guard("disallow"):     # device-resident sampling loop
+        while inc.n_rr < n_rr:
+            key, sub = _split_key(key)
+            inc.append_batch(eng.sample(sub))
     store = inc.snapshot()
     occur0 = cov.occur_histogram(store)
     seeds, gains = _greedy_mrim(store.rr_flat, store.rr_ids, store.valid,

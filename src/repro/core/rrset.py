@@ -13,15 +13,27 @@ Parallel decomposition (see DESIGN.md §2):
   lanes are reported so callers can resample at larger Qcap (0 on all
   benchmark workloads at the default Qcap).
 * Visited[n] byte array -> bit-packed (B, ceil(n/32)) uint32 (32x smaller).
-* atomic_enqueue -> in-chunk prefix-sum slot assignment + masked scatter.
+* atomic_enqueue -> in-chunk left-pack (prefix-sum rank + log-step binary
+  search gather) + one contiguous dynamic_update_slice per lane.  XLA:CPU
+  lowers scatter to a serial per-update loop, so the former (B, EC) masked
+  scatters dominated the micro-step; the packed append writes a contiguous
+  window into an EC-padded queue row instead, and the visited-bit update
+  scatters only the first ACCEPT_CAP packed columns (full-width fallback
+  via lax.cond when a chunk accepts more — e.g. p=1.0 stress graphs).
 * curand        -> threefry key folded per micro-step (replay-deterministic).
 
 Intra-chunk duplicate hazard (paper §3.1): within one EC chunk the same
 destination may appear on several edges (multi-edges).  Each *edge* must get an
 independent Bernoulli trial, but the node must be enqueued at most once.  We
-therefore accept only the first successful occurrence per node per chunk
-(O(EC^2) vectorized first-occurrence mask), which composes with the visited-bit
-test-and-set across chunks.
+accept only the first successful occurrence per node per chunk
+(:func:`_first_occurrence`, O(EC log EC) per lane): on the
+destination-sorted rows :func:`repro.graph.csr.reverse` produces, duplicates
+are adjacent and the check is a segmented prefix-OR in log-step shifts; on
+arbitrary row order it falls back to a stable sort + neighbour-difference
+scan.  The earlier implementation materialized a dense ``(B, EC, EC)``
+first-occurrence mask — O(EC^2) work *and* memory per micro-step; both new
+paths keep the accept set (and accepted positions) bit-identical.  This
+composes with the visited-bit test-and-set across chunks.
 """
 from __future__ import annotations
 
@@ -33,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.graph.csr import CSRGraph
+from repro.core.packing import rank_positions
 
 EC_DEFAULT = 128  # edge-chunk width (the paper's N_th=32, scaled to VPU lanes)
 
@@ -53,13 +66,172 @@ def _bit_test(words, nodes):
     return ((got >> b) & jnp.uint32(1)) != 0
 
 
+ACCEPT_CAP = 32  # fast-path width of the per-chunk enqueue (pack + scatter)
+
+
+def detect_dedup_mode(g_rev: CSRGraph) -> str:
+    """Host preprocessing (engines run it once at construction): which chunk
+    dedup the sampler needs for this graph.
+
+    * ``"none"`` — no duplicate (u, v) edges anywhere: within a chunk all
+      destinations are distinct, so accept == candidate and the dedup
+      disappears from the micro-step entirely (the common case).
+    * ``"segmented"`` — multi-edges exist but rows are destination-sorted
+      (the :func:`repro.graph.csr.reverse` layout): duplicates are adjacent
+      and first-occurrence is a segmented prefix-OR.
+    * ``"sort"`` — multi-edges on arbitrarily ordered rows: stable in-chunk
+      sort.
+    """
+    from repro.graph.csr import rows_dst_sorted
+    offs = np.asarray(g_rev.offsets, dtype=np.int64)
+    idx = np.asarray(g_rev.indices, dtype=np.int64)
+    if idx.size <= 1:
+        return "none"
+    if rows_dst_sorted(g_rev):
+        eq = np.diff(idx) == 0
+        inner = offs[1:-1]
+        inner = inner[(inner > 0) & (inner < idx.size)]
+        eq[inner - 1] = False                    # row boundaries don't count
+        return "segmented" if eq.any() else "none"
+    row_of = np.repeat(np.arange(len(offs) - 1), np.diff(offs))
+    order = np.lexsort((idx, row_of))
+    si, sr = idx[order], row_of[order]
+    dup = (np.diff(si) == 0) & (np.diff(sr) == 0)
+    return "sort" if dup.any() else "none"
+
+
+def _first_occurrence(nbr, cand, arange_ec, *, mode: str):
+    """accept[b, j]: is j the first chunk position among the lane's candidates
+    carrying destination ``nbr[b, j]``?  (paper §3.1 duplicate hazard.)
+
+    ``mode`` comes from :func:`detect_dedup_mode`.  ``"segmented"``:
+    duplicates are adjacent (destination-sorted rows), so first-occurrence
+    is a segmented prefix-OR over equal-value runs — O(EC log EC) per lane
+    in log-step shifts, no sort, no gather.  ``"sort"``: stable sort of
+    (destination, position) + neighbour-difference scan, also O(EC log EC).
+    Every path is bit-identical to the dense (EC, EC) first-occurrence mask
+    this replaces.
+    """
+    if mode == "none":
+        return cand
+    if mode == "segmented":
+        runhead = jnp.concatenate(
+            [jnp.ones_like(nbr[:, :1], dtype=bool),
+             nbr[:, 1:] != nbr[:, :-1]], axis=1)
+        # segmented inclusive prefix-OR of `cand` (Hillis-Steele)
+        val, seg = cand, runhead
+        d = 1
+        ec = nbr.shape[1]
+        while d < ec:
+            val = val | (jnp.pad(val[:, :-d], ((0, 0), (d, 0))) & ~seg)
+            seg = seg | jnp.pad(seg[:, :-d], ((0, 0), (d, 0)),
+                                constant_values=True)
+            d *= 2
+        prev = jnp.pad(val[:, :-1], ((0, 0), (1, 0)))   # OR up to j-1
+        return cand & (runhead | ~prev)
+    if mode != "sort":
+        raise ValueError(f"unknown dedup mode {mode!r}")
+    sentinel = jnp.iinfo(jnp.int32).max
+    key = jnp.where(cand, nbr, sentinel)
+    pos = jnp.broadcast_to(arange_ec[None, :], nbr.shape)
+    skey, spos = jax.lax.sort_key_val(key, pos, dimension=1, is_stable=True)
+    first = jnp.concatenate(
+        [jnp.ones_like(skey[:, :1], dtype=bool),
+         skey[:, 1:] != skey[:, :-1]], axis=1)
+    accept_sorted = first & (skey != sentinel)
+    rows = jnp.arange(nbr.shape[0], dtype=jnp.int32)[:, None]
+    return jnp.zeros_like(cand).at[rows, spos].set(accept_sorted)
+
+
+def _pack_accepted(accept, nbr, n, ec, width):
+    """Left-pack each lane's first ``width`` accepted destinations, order
+    preserved.
+
+    Returns packed (B, width) int32 — sentinel ``n`` beyond each lane's
+    count.  The j-th accepted position is found by a vectorized binary
+    search over the accept prefix sum (log EC gather steps), so the pack
+    needs no scatter — XLA:CPU lowers scatter to a serial per-update loop,
+    which made the old per-chunk scatters the dominant micro-step cost.
+    """
+    csum = jnp.cumsum(accept.astype(jnp.int32), axis=1)
+    cnt = csum[:, -1]
+    pos = jax.vmap(lambda c: rank_positions(c, width, ec))(csum)
+    packed = jnp.take_along_axis(nbr, pos, axis=1)
+    tgt = jnp.arange(1, width + 1, dtype=jnp.int32)[None, :]
+    return jnp.where(tgt <= cnt[:, None], packed, n)
+
+
+def _bits_write(visited, packed, n, n_words):
+    """Set the visited bits of packed destinations (sentinel ``n`` rows are
+    dropped).  Chunk-unique + previously-unseen nodes ⇒ all bits distinct ⇒
+    scatter-add == scatter-or."""
+    lane = jnp.arange(visited.shape[0], dtype=jnp.int32)
+    valid = packed < n
+    w = jnp.where(valid, packed >> 5, n_words)
+    bit = jnp.where(
+        valid,
+        jnp.left_shift(jnp.uint32(1), (packed & 31).astype(jnp.uint32)),
+        jnp.uint32(0))
+    return visited.at[lane[:, None], w].add(bit, mode="drop")
+
+
+def _rows_append(buf, packed, start):
+    """Contiguous per-lane append: one dynamic_update_slice per lane instead
+    of a scatter.  ``buf`` carries an EC-wide pad tail, so the slice window
+    beyond a lane's accept count lands in scratch space that the next append
+    (or the length mask) overwrites/ignores."""
+    return jax.vmap(
+        lambda row, upd, st: jax.lax.dynamic_update_slice(row, upd, (st,))
+    )(buf, packed, start)
+
+
+def _enqueue_chunk(buf, visited, accept, nbr, tail, cap, ec, n, n_words,
+                   arange_ec):
+    """The paper's atomic_enqueue (Alg. 3 L21) for one chunk: left-pack the
+    accepted destinations, append them contiguously into each lane's row at
+    ``tail``, and mark their visited bits.
+
+    Fast path works at ACCEPT_CAP width — it covers every chunk whose
+    accept count fits (the overwhelming case under sub-critical IC
+    weights); a full-EC pass runs only when some lane accepted more (e.g.
+    p=1.0 stress graphs), via ``lax.cond``.  Capacity: the first
+    ``cap - tail`` accepted fit, exactly the old per-slot rule; the rest
+    land in the pad tail and are dropped (overflow is flagged by the
+    caller from the returned ``cnt``).
+
+    Returns (buf, visited, cnt, take).
+    """
+    cnt = accept.sum(axis=1, dtype=jnp.int32)
+    take = jnp.minimum(cnt, jnp.maximum(cap - tail, 0))
+    kacc = min(ACCEPT_CAP, ec)
+    packed = _pack_accepted(accept, nbr, n, ec, ec)
+    # buffer append is a cheap contiguous write — always full width, and
+    # crucially NOT routed through lax.cond: conditionals break XLA's
+    # in-place buffer aliasing and would copy the whole row buffer per step
+    buf = _rows_append(buf, packed, tail)
+    vis_src = jnp.where(arange_ec[None, :] < take[:, None], packed, n)
+    if kacc == ec:
+        visited = _bits_write(visited, vis_src, n, n_words)
+    else:
+        # the visited scatter cost is per update entry, so cap its width;
+        # only `visited` (small) crosses the cond boundary
+        visited = jax.lax.cond(
+            (cnt > kacc).any(),
+            lambda v: _bits_write(v, vis_src, n, n_words),
+            lambda v: _bits_write(v, vis_src[:, :kacc], n, n_words),
+            visited)
+    return buf, visited, cnt, take
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("batch", "qcap", "ec", "n", "m"))
+                   static_argnames=("batch", "qcap", "ec", "n", "m",
+                                    "dedup"))
 def _sample_queue(key, offsets, indices, weights, roots, *,
-                  batch, qcap, ec, n, m):
+                  batch, qcap, ec, n, m, dedup="sort"):
     n_words = (n + 31) // 32
     lane = jnp.arange(batch, dtype=jnp.int32)
-    queue = jnp.zeros((batch, qcap), dtype=jnp.int32)
+    # EC-wide pad tail absorbs the contiguous-append slice windows
+    queue = jnp.zeros((batch, qcap + ec), dtype=jnp.int32)
     queue = queue.at[:, 0].set(roots)
     visited = jnp.zeros((batch, n_words), dtype=jnp.uint32)
     visited = visited.at[lane, roots >> 5].set(
@@ -92,26 +264,13 @@ def _sample_queue(key, offsets, indices, weights, roots, *,
         keep = (urand < pw) & valid                              # edge traversed
         unseen = ~_bit_test(visited, nbr)
         cand = keep & unseen
-        # first-occurrence-per-node mask within the chunk
-        same = nbr[:, :, None] == nbr[:, None, :]                # (B, EC, EC)
-        earlier = same & cand[:, None, :] & (
-            arange_ec[None, None, :] < arange_ec[None, :, None])
-        accept = cand & ~earlier.any(-1)
-        # slot assignment (the paper's atomic_enqueue, Alg. 3 L21)
-        slot = qtail[:, None] + jnp.cumsum(accept, axis=1) - 1
-        fits = slot < qcap
-        overflow = overflow | (accept & ~fits).any(axis=1)
-        acc = accept & fits
-        slot_m = jnp.where(acc, slot, qcap)                      # OOB -> dropped
-        queue = queue.at[lane[:, None], slot_m].set(nbr, mode="drop")
-        w_idx = jnp.where(acc, nbr >> 5, n_words)
-        bitval = jnp.where(
-            acc, jnp.left_shift(jnp.uint32(1), (nbr & 31).astype(jnp.uint32)),
-            jnp.uint32(0))
-        # accepted nodes are chunk-unique -> bits within a word are distinct,
-        # so scatter-add == scatter-or here
-        visited = visited.at[lane[:, None], w_idx].add(bitval, mode="drop")
-        qtail = qtail + acc.sum(axis=1, dtype=jnp.int32)
+        # first successful occurrence per destination within the chunk
+        accept = _first_occurrence(nbr, cand, arange_ec, mode=dedup)
+        queue, visited, cnt, take = _enqueue_chunk(
+            queue, visited, accept, nbr, qtail, qcap, ec, n, n_words,
+            arange_ec)
+        overflow = overflow | (cnt > take)
+        qtail = qtail + take
         # advance the edge cursor / pop the node (Alg. 3 L12)
         ecur2 = ecur + ec
         row_done = ecur2 >= deg
@@ -123,18 +282,39 @@ def _sample_queue(key, offsets, indices, weights, roots, *,
         jax.lax.while_loop(cond, body,
                            (queue, visited, qhead, qtail, ecur, overflow, key,
                             jnp.int32(0))))
-    return queue, qtail, overflow, steps
+    return queue[:, :qcap], qtail, overflow, steps
 
 
-def sample_rrsets_queue(key, g_rev: CSRGraph, batch: int, qcap: int,
-                        ec: int = EC_DEFAULT) -> QueueSample:
-    """Sample ``batch`` RR sets (one round) on the reverse CSR."""
-    n, m = g_rev.n_nodes, g_rev.n_edges
+@functools.partial(jax.jit,
+                   static_argnames=("batch", "qcap", "ec", "n", "m",
+                                    "dedup"))
+def _queue_round(key, offsets, indices, weights, *, batch, qcap, ec, n, m,
+                 dedup="sort"):
+    """Root draw + queue BFS as ONE jit: every operand is a device array, so
+    a round triggers no host↔device traffic (runs under
+    ``jax.transfer_guard("disallow")``).  The key-split structure matches the
+    historical host wrapper exactly, keeping sample streams bit-identical."""
     key, sub = jax.random.split(key)
     roots = jax.random.randint(sub, (batch,), 0, n, dtype=jnp.int32)
     nodes, lengths, overflowed, steps = _sample_queue(
-        key, g_rev.offsets, g_rev.indices, g_rev.weights, roots,
-        batch=batch, qcap=qcap, ec=ec, n=n, m=m)
+        key, offsets, indices, weights, roots,
+        batch=batch, qcap=qcap, ec=ec, n=n, m=m, dedup=dedup)
+    return nodes, lengths, roots, overflowed, steps
+
+
+def sample_rrsets_queue(key, g_rev: CSRGraph, batch: int, qcap: int,
+                        ec: int = EC_DEFAULT,
+                        dedup: str | None = None) -> QueueSample:
+    """Sample ``batch`` RR sets (one round) on the reverse CSR.
+
+    ``dedup=None`` runs :func:`detect_dedup_mode` on the host once per call
+    (engines cache the detection at construction)."""
+    n, m = g_rev.n_nodes, g_rev.n_edges
+    if dedup is None:
+        dedup = detect_dedup_mode(g_rev)
+    nodes, lengths, roots, overflowed, steps = _queue_round(
+        key, g_rev.offsets, g_rev.indices, g_rev.weights,
+        batch=batch, qcap=qcap, ec=ec, n=n, m=m, dedup=dedup)
     return QueueSample(nodes=nodes, lengths=lengths, roots=roots,
                        overflowed=overflowed, steps=steps)
 
@@ -166,15 +346,18 @@ class RefillSample(NamedTuple):
 
 @functools.partial(jax.jit,
                    static_argnames=("batch", "out_cap", "quota",
-                                    "max_sets_per_lane", "ec", "n", "m"))
+                                    "max_sets_per_lane", "ec", "n", "m",
+                                    "dedup"))
 def _sample_refill(key, offsets, indices, weights, roots0, *,
-                   batch, out_cap, quota, max_sets_per_lane, ec, n, m):
+                   batch, out_cap, quota, max_sets_per_lane, ec, n, m,
+                   dedup="sort"):
     n_words = (n + 31) // 32
     lane = jnp.arange(batch, dtype=jnp.int32)
     arange_ec = jnp.arange(ec, dtype=jnp.int32)
     sets_per_lane = max_sets_per_lane
 
-    out = jnp.zeros((batch, out_cap), jnp.int32)
+    # EC-wide pad tail absorbs the contiguous-append slice windows
+    out = jnp.zeros((batch, out_cap + ec), jnp.int32)
     out = out.at[:, 0].set(roots0)
     lengths = jnp.zeros((batch, sets_per_lane), jnp.int32)
     visited = jnp.zeros((batch, n_words), jnp.uint32)
@@ -205,27 +388,20 @@ def _sample_refill(key, offsets, indices, weights, roots0, *,
         eidx = jnp.clip(s[:, None] + pos, 0, m - 1)
         nbr = indices[eidx]
         pw = weights[eidx]
+        # ONE uniform draw per micro-step: EC edge trials + 1 refill-root
+        # column per lane (a second split+randint per step costs a whole
+        # extra threefry dispatch)
         key, sub = jax.random.split(key)
-        urand = jax.random.uniform(sub, (batch, ec))
-        keep = (urand < pw) & valid
+        urand = jax.random.uniform(sub, (batch, ec + 1))
+        keep = (urand[:, :ec] < pw) & valid
         unseen = ~_bit_test(visited, nbr)
         cand = keep & unseen
-        same = nbr[:, :, None] == nbr[:, None, :]
-        earlier = same & cand[:, None, :] & (
-            arange_ec[None, None, :] < arange_ec[None, :, None])
-        accept = cand & ~earlier.any(-1)
-        slot = tail[:, None] + jnp.cumsum(accept, axis=1) - 1
-        fits = slot < out_cap
-        overflow = overflow | (accept & ~fits).any(axis=1)
-        acc = accept & fits
-        slot_m = jnp.where(acc, slot, out_cap)
-        out = out.at[lane[:, None], slot_m].set(nbr, mode="drop")
-        w_idx = jnp.where(acc, nbr >> 5, n_words)
-        bitval = jnp.where(
-            acc, jnp.left_shift(jnp.uint32(1), (nbr & 31).astype(jnp.uint32)),
-            jnp.uint32(0))
-        visited = visited.at[lane[:, None], w_idx].add(bitval, mode="drop")
-        tail = tail + acc.sum(axis=1, dtype=jnp.int32)
+        accept = _first_occurrence(nbr, cand, arange_ec, mode=dedup)
+        out, visited, cnt, take = _enqueue_chunk(
+            out, visited, accept, nbr, tail, out_cap, ec, n, n_words,
+            arange_ec)
+        overflow = overflow | (cnt > take)
+        tail = tail + take
         ecur2 = ecur + ec
         row_done = ecur2 >= deg
         qhead = jnp.where(active & row_done, qhead + 1, qhead)
@@ -247,8 +423,7 @@ def _sample_refill(key, offsets, indices, weights, roots0, *,
         has_room = tail < out_cap
         overflow = overflow | (more & ~has_room)
         start_new = more & has_room
-        key, sub = jax.random.split(key)
-        new_roots = jax.random.randint(sub, (batch,), 0, n, dtype=jnp.int32)
+        new_roots = jnp.minimum((urand[:, ec] * n).astype(jnp.int32), n - 1)
         # clear this lane's visited set and seed the new root
         visited = jnp.where(start_new[:, None], jnp.uint32(0), visited)
         visited = visited.at[
@@ -257,7 +432,7 @@ def _sample_refill(key, offsets, indices, weights, roots0, *,
                       jnp.left_shift(jnp.uint32(1),
                                      (new_roots & 31).astype(jnp.uint32)),
                       jnp.uint32(0)), mode="drop")
-        out = out.at[lane, jnp.where(start_new, tail, out_cap)].set(
+        out = out.at[lane, jnp.where(start_new, tail, out_cap + ec)].set(
             new_roots, mode="drop")
         set_start = jnp.where(start_new, tail, set_start)
         qhead = jnp.where(start_new, 0, qhead)
@@ -271,25 +446,41 @@ def _sample_refill(key, offsets, indices, weights, roots0, *,
           overflow, in_set, key, jnp.int32(0))
     (out, lengths, visited, set_start, qhead, tail, ecur, n_done, overflow,
      in_set, key, steps) = jax.lax.while_loop(cond, body, st)
-    return out, lengths, n_done, overflow, steps
+    return out[:, :out_cap], lengths, n_done, overflow, steps
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("batch", "out_cap", "quota",
+                                    "max_sets_per_lane", "ec", "n", "m",
+                                    "dedup"))
+def _refill_round(key, offsets, indices, weights, *, batch, out_cap, quota,
+                  max_sets_per_lane, ec, n, m, dedup="sort"):
+    """Root draw + persistent-lane worker as ONE jit (see ``_queue_round``)."""
+    key, sub = jax.random.split(key)
+    roots = jax.random.randint(sub, (batch,), 0, n, dtype=jnp.int32)
+    return _sample_refill(
+        key, offsets, indices, weights, roots,
+        batch=batch, out_cap=out_cap, quota=quota,
+        max_sets_per_lane=max_sets_per_lane, ec=ec, n=n, m=m, dedup=dedup)
 
 
 def sample_rrsets_refill(key, g_rev: CSRGraph, batch: int,
                          quota: int, out_cap: int,
                          max_sets_per_lane: int | None = None,
-                         ec: int = EC_DEFAULT) -> RefillSample:
+                         ec: int = EC_DEFAULT,
+                         dedup: str | None = None) -> RefillSample:
     """Persistent-lane sampling with a global quota: lanes refill with new
     roots until >= ``quota`` RR sets are complete across all lanes (the
     paper's Alg. 6 worker loop); in-flight sets always finish (unbiased)."""
     n, m = g_rev.n_nodes, g_rev.n_edges
     if max_sets_per_lane is None:
         max_sets_per_lane = max(4 * quota // batch + 4, 4)
-    key, sub = jax.random.split(key)
-    roots = jax.random.randint(sub, (batch,), 0, n, dtype=jnp.int32)
-    flat, lengths, n_done, overflow, steps = _sample_refill(
-        key, g_rev.offsets, g_rev.indices, g_rev.weights, roots,
+    if dedup is None:
+        dedup = detect_dedup_mode(g_rev)
+    flat, lengths, n_done, overflow, steps = _refill_round(
+        key, g_rev.offsets, g_rev.indices, g_rev.weights,
         batch=batch, out_cap=out_cap, quota=quota,
-        max_sets_per_lane=max_sets_per_lane, ec=ec, n=n, m=m)
+        max_sets_per_lane=max_sets_per_lane, ec=ec, n=n, m=m, dedup=dedup)
     return RefillSample(flat=flat, lengths=lengths, n_done=n_done,
                         overflowed=overflow, steps=steps)
 
@@ -306,6 +497,33 @@ def refill_to_lists(sample: RefillSample) -> list[list[int]]:
             out.append(flat[b, off:off + ln].tolist())
             off += ln
     return out
+
+
+@jax.jit
+def refill_to_padded_device(flat, lengths, n_done):
+    """Device-resident unpack of a RefillSample into fixed-shape padded rows.
+
+    (B, OutCap), (B, S), (B,) -> rows (B*S, OutCap) + lengths (B*S,).  Unlike
+    :func:`refill_to_padded` the row count is *static* (every lane slot
+    becomes a row); slots beyond a lane's ``n_done`` come back with length 0
+    — padding rows carrying no RR set, dropped by the device store's
+    compaction.  This keeps the solver's per-round shapes stable and the
+    whole unpack on device (no host round-trip, no recompiles).
+    """
+    b, s = lengths.shape
+    out_cap = flat.shape[1]
+    set_valid = jnp.arange(s, dtype=n_done.dtype)[None, :] < n_done[:, None]
+    lens = jnp.where(set_valid, lengths, 0)
+    starts = jnp.concatenate(
+        [jnp.zeros((b, 1), lengths.dtype),
+         jnp.cumsum(lengths, axis=1)[:, :-1]], axis=1)
+    idx = starts[:, :, None] + jnp.arange(out_cap, dtype=starts.dtype)[
+        None, None, :]
+    rows = jnp.take_along_axis(flat[:, None, :],
+                               jnp.clip(idx, 0, out_cap - 1), axis=2)
+    col_valid = jnp.arange(out_cap)[None, None, :] < lens[:, :, None]
+    rows = jnp.where(col_valid, rows, 0)
+    return rows.reshape(b * s, out_cap), lens.reshape(b * s)
 
 
 def refill_to_padded(sample: RefillSample):

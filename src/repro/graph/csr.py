@@ -36,11 +36,18 @@ class CSRGraph(NamedTuple):
         return self.offsets[1:] - self.offsets[:-1]
 
 
-def from_edges(src, dst, n: int, weights=None, sort: bool = True) -> CSRGraph:
+def from_edges(src, dst, n: int, weights=None, sort: bool = True,
+               sort_rows: bool = False) -> CSRGraph:
     """Build CSR from an edge list (numpy, host-side).
 
     ``sort=True`` groups edges by source (stable, preserving relative input
     order within a row, matching the paper's no-reordering statement).
+    ``sort_rows=True`` additionally orders each row by destination —
+    multi-edge duplicates become adjacent, which lets the samplers' chunk
+    dedup run as a segmented scan instead of a sort (see core/rrset.py);
+    used for the *reverse* sampling graph, where edge order carries no
+    semantic weight (Bernoulli trials and LT categorical draws are
+    order-free).
     """
     src = np.asarray(src, dtype=np.int64)
     dst = np.asarray(dst, dtype=np.int64)
@@ -52,7 +59,10 @@ def from_edges(src, dst, n: int, weights=None, sort: bool = True) -> CSRGraph:
     weights = np.asarray(weights, dtype=np.float32)
     if m and (src.min() < 0 or src.max() >= n or dst.min() < 0 or dst.max() >= n):
         raise ValueError("edge endpoint out of range")
-    if sort and m:
+    if sort_rows and m:
+        order = np.lexsort((dst, src))
+        src, dst, weights = src[order], dst[order], weights[order]
+    elif sort and m:
         order = np.argsort(src, kind="stable")
         src, dst, weights = src[order], dst[order], weights[order]
     counts = np.bincount(src, minlength=n).astype(np.int64)
@@ -74,9 +84,68 @@ def to_edges(g: CSRGraph):
 
 
 def reverse(g: CSRGraph) -> CSRGraph:
-    """Transpose: edge (u,v,w) becomes (v,u,w).  RR sampling runs on this."""
+    """Transpose: edge (u,v,w) becomes (v,u,w).  RR sampling runs on this.
+
+    Rows come back destination-sorted (``sort_rows``): the samplers' chunk
+    dedup then reduces to a segmented neighbour scan (O(EC log EC), no
+    sort inside the hot loop).
+    """
     src, dst, w = to_edges(g)
-    return from_edges(dst, src, g.n_nodes, weights=w)
+    return from_edges(dst, src, g.n_nodes, weights=w, sort_rows=True)
+
+
+def coalesce_ic(g: CSRGraph) -> CSRGraph:
+    """Merge parallel edges under the IC equivalence p' = 1 - ∏(1 - p_i).
+
+    Under independent-cascade, k parallel (u, v) edges with probabilities
+    p_1..p_k activate exactly like one edge with p'; merging is therefore
+    *distribution-exact* for every IC sampler.  The IC engines coalesce
+    their reverse graph once at construction — afterwards rows are simple
+    (and destination-sorted), so the per-chunk duplicate dedup vanishes
+    from the sampling micro-step entirely (``detect_dedup_mode`` returns
+    ``"none"``).  Returns ``g`` unchanged when it is already simple and
+    destination-sorted.
+    """
+    offs = np.asarray(g.offsets, dtype=np.int64)
+    idx = np.asarray(g.indices, dtype=np.int64)
+    w = np.asarray(g.weights, dtype=np.float64)
+    n = len(offs) - 1
+    if idx.size == 0:
+        return g
+    row_of = np.repeat(np.arange(n, dtype=np.int64), np.diff(offs))
+    if rows_dst_sorted(g):
+        # already sorted: duplicates are adjacent, no O(m log m) sort needed
+        r, d, p = row_of, idx, w
+    else:
+        order = np.lexsort((idx, row_of))
+        r, d, p = row_of[order], idx[order], w[order]
+    head = np.ones(len(r), bool)
+    head[1:] = (r[1:] != r[:-1]) | (d[1:] != d[:-1])
+    if head.all() and r is row_of:
+        return g                                 # simple + sorted: unchanged
+    starts = np.nonzero(head)[0]
+    # p = 1 edges make log1p(-p) singular: clip for the product, then
+    # force those groups to exactly 1
+    has_one = np.maximum.reduceat(p, starts) >= 1.0
+    lg = np.log1p(-np.clip(p, 0.0, 1.0 - 1e-12))
+    merged_p = np.where(has_one, 1.0, -np.expm1(np.add.reduceat(lg, starts)))
+    return from_edges(r[starts], d[starts], n,
+                      weights=merged_p.astype(np.float32), sort_rows=True)
+
+
+def rows_dst_sorted(g: CSRGraph) -> bool:
+    """Host check: is every CSR row non-decreasing in destination?  Engines
+    run this once at construction to pick the fast segmented chunk dedup
+    (see core/rrset.py); graphs from :func:`reverse` always qualify."""
+    offs = np.asarray(g.offsets, dtype=np.int64)
+    idx = np.asarray(g.indices, dtype=np.int64)
+    if idx.size <= 1:
+        return True
+    nd = np.diff(idx) >= 0
+    row_starts = offs[1:-1]
+    inner = row_starts[(row_starts > 0) & (row_starts < idx.size)]
+    nd[inner - 1] = True                     # decreases across rows are fine
+    return bool(nd.all())
 
 
 def degrees(g: CSRGraph):

@@ -115,6 +115,42 @@ def popcount_words(words, *, block_b: int = 64, interpret: bool = True):
 
 # ------------------------------------------------------ occur histogram
 
+def _occur_masked_kernel(words_ref, rowmask_ref, occur_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        occur_ref[...] = jnp.zeros_like(occur_ref)
+
+    words = words_ref[...]                       # (BB, W)
+    keep = rowmask_ref[...]                      # (BB,) int32 0/1
+    words = words * keep[:, None].astype(jnp.uint32)
+    bb, w = words.shape
+    shift = jax.lax.broadcasted_iota(jnp.uint32, (bb, w, 32), 2)
+    bits = ((words[:, :, None] >> shift) & jnp.uint32(1)).astype(jnp.int32)
+    occur_ref[...] += bits.sum(axis=0).reshape(w * 32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def occur_from_bitset_masked(words, rowmask, *, block_b: int = 8,
+                             interpret: bool = True):
+    """Occur[v] = number of *selected* lanes with bit v set.
+
+    ``rowmask`` (B,) bool/int32 selects the lanes that contribute — this is
+    the popcount-arithmetic Occur *decrement* of the fused greedy selection
+    (dec over newly covered RR rows), replacing the per-seed flat scatter.
+    """
+    b, w = words.shape
+    bb = min(block_b, b)
+    return pl.pallas_call(
+        _occur_masked_kernel,
+        grid=(pl.cdiv(b, bb),),
+        in_specs=[pl.BlockSpec((bb, w), lambda i: (i, 0)),
+                  pl.BlockSpec((bb,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((w * 32,), lambda i: (0,)),  # accumulated
+        out_shape=jax.ShapeDtypeStruct((w * 32,), jnp.int32),
+        interpret=interpret,
+    )(words, rowmask.astype(jnp.int32))
+
+
 def _occur_kernel(words_ref, occur_ref):
     @pl.when(pl.program_id(0) == 0)
     def _init():

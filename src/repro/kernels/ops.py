@@ -1,57 +1,76 @@
 """Jit'd public wrappers for the Pallas kernels.
 
-``interpret`` defaults to True everywhere in this repo (CPU container); on a
-real TPU deployment set ``repro.kernels.ops.INTERPRET = False`` (or pass
-explicitly) and the same BlockSpecs compile to Mosaic.
+``interpret`` defaults to backend-aware dispatch: interpret mode on CPU
+(this container), compiled Mosaic on an accelerator backend.  The backend
+is consulted lazily at call time — resolving it at import would initialize
+JAX's platform as a side effect and freeze a stale choice.  The module
+level ``INTERPRET`` override is kept for tests and debugging — set
+``repro.kernels.ops.INTERPRET = True/False`` to force either mode for every
+kernel at once (per-call ``interpret=`` still wins); ``None`` means auto.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.kernels import membership as _membership
 from repro.kernels import bernoulli as _bernoulli
 from repro.kernels import bitset as _bitset
 
-INTERPRET = True
+INTERPRET: bool | None = None    # None = auto: cpu -> interpret
+
+
+def resolve_interpret(interpret: bool | None = None) -> bool:
+    """Per-call flag > module override > backend-aware default."""
+    if interpret is not None:
+        return interpret
+    if INTERPRET is not None:
+        return INTERPRET
+    return jax.default_backend() == "cpu"
 
 
 def membership_rows(rows, lengths, u, *, block_rows: int = 256,
                     interpret: bool | None = None):
     return _membership.membership_rows(
         rows, lengths, u, block_rows=block_rows,
-        interpret=INTERPRET if interpret is None else interpret)
+        interpret=resolve_interpret(interpret))
 
 
 def bernoulli_edges(weights, seed, *, block: int = 1024,
                     interpret: bool | None = None):
     return _bernoulli.bernoulli_edges(
         weights, seed, block=block,
-        interpret=INTERPRET if interpret is None else interpret)
+        interpret=resolve_interpret(interpret))
 
 
 def pack_bits(bits, *, interpret: bool | None = None):
     return _bitset.pack_bits(
-        bits, interpret=INTERPRET if interpret is None else interpret)
+        bits, interpret=resolve_interpret(interpret))
 
 
 def bitset_or(a, b, *, interpret: bool | None = None):
     return _bitset.bitset_or(
-        a, b, interpret=INTERPRET if interpret is None else interpret)
+        a, b, interpret=resolve_interpret(interpret))
 
 
 def bitset_andnot(a, b, *, interpret: bool | None = None):
     return _bitset.bitset_andnot(
-        a, b, interpret=INTERPRET if interpret is None else interpret)
+        a, b, interpret=resolve_interpret(interpret))
 
 
 def popcount_words(words, *, interpret: bool | None = None):
     return _bitset.popcount_words(
-        words, interpret=INTERPRET if interpret is None else interpret)
+        words, interpret=resolve_interpret(interpret))
 
 
 def occur_from_bitset(words, *, interpret: bool | None = None):
     return _bitset.occur_from_bitset(
-        words, interpret=INTERPRET if interpret is None else interpret)
+        words, interpret=resolve_interpret(interpret))
+
+
+def occur_from_bitset_masked(words, rowmask, *, interpret: bool | None = None):
+    return _bitset.occur_from_bitset_masked(
+        words, rowmask, interpret=resolve_interpret(interpret))
 
 
 def flash_attention(q, k, v, *, causal=True, bq=128, bk=128,
@@ -59,4 +78,4 @@ def flash_attention(q, k, v, *, causal=True, bq=128, bk=128,
     from repro.kernels import flashattn as _fa
     return _fa.flash_attention(
         q, k, v, causal=causal, bq=bq, bk=bk,
-        interpret=INTERPRET if interpret is None else interpret)
+        interpret=resolve_interpret(interpret))

@@ -20,7 +20,7 @@ from typing import Optional
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map_unchecked
 from repro.graph import csr, generators, weights
@@ -38,6 +38,8 @@ class ShardedQueueEngine:
     key, mirroring gIM's per-block curand streams.
     """
 
+    device_resident = True           # sample() is one jitted shard_map call
+
     @dataclass(frozen=True)
     class Config:
         batch: int = 128             # RR sets per device per round
@@ -46,9 +48,10 @@ class ShardedQueueEngine:
 
     def __init__(self, g_rev, config: Optional[Config] = None,
                  mesh: Optional[Mesh] = None):
-        self.g_rev = g_rev
+        self.g_rev = csr.coalesce_ic(g_rev)
         self.config = config if config is not None else self.Config()
-        self.qcap = resolve_qcap(self.config.qcap, g_rev)
+        self.qcap = resolve_qcap(self.config.qcap, self.g_rev)
+        self._dedup = rrset.detect_dedup_mode(self.g_rev)
         self.mesh = mesh if mesh is not None else Mesh(
             np.asarray(jax.devices()), ("dev",))
         self._fn = None
@@ -62,6 +65,7 @@ class ShardedQueueEngine:
         n, m = g_rev.n_nodes, g_rev.n_edges
         axis = mesh.axis_names[0]
         bpd, qcap, ec = self.config.batch, self.qcap, self.config.ec
+        dedup = self._dedup
 
         def local(offsets, indices, w, keydata):
             # full 128-bit key state travels as raw uint32 data (typed keys
@@ -74,22 +78,38 @@ class ShardedQueueEngine:
             roots = jax.random.randint(sub, (bpd,), 0, n, dtype=jnp.int32)
             nodes, lengths, overflow, steps = rrset._sample_queue(
                 key, offsets, indices, w, roots,
-                batch=bpd, qcap=qcap, ec=ec, n=n, m=m)
+                batch=bpd, qcap=qcap, ec=ec, n=n, m=m, dedup=dedup)
             return nodes[None], lengths[None], overflow[None], steps[None]
 
-        return shard_map_unchecked(
+        # jit the shard_map so rounds hit a compiled executable (no
+        # per-round retrace); graph operands are pre-placed replicated so
+        # the per-round call does no *implicit* cross-device transfer (the
+        # IMM driver holds transfer_guard("disallow") over the hot loop)
+        rep = NamedSharding(mesh, P())
+        self._replicated = tuple(
+            jax.device_put(x, rep)
+            for x in (g_rev.offsets, g_rev.indices, g_rev.weights))
+        self._rep_sharding = rep
+        return jax.jit(shard_map_unchecked(
             local, mesh=mesh,
             in_specs=(P(), P(), P(), P()),
-            out_specs=(P(axis), P(axis), P(axis), P(axis)))
+            out_specs=(P(axis), P(axis), P(axis), P(axis))))
 
     def sample(self, key) -> RRBatch:
         if self._fn is None:
             self._fn = self._build()
-        g_rev = self.g_rev
-        nodes, lengths, overflow, steps = self._fn(
-            g_rev.offsets, g_rev.indices, g_rev.weights,
-            jax.random.key_data(key))
+        # the key broadcast and the per-round result gather onto the
+        # store's device are the fan-out's inherent data movement — done
+        # as *explicit* device_puts (permitted under the transfer guard)
+        keydata = jax.device_put(jax.random.key_data(key),
+                                 self._rep_sharding)
+        nodes, lengths, overflow, steps = self._fn(*self._replicated,
+                                                   keydata)
         n_dev = self.mesh.devices.size
+        dev0 = self.mesh.devices.reshape(-1)[0]
+        nodes, lengths, overflow, steps = (
+            jax.device_put(x, dev0)
+            for x in (nodes, lengths, overflow, steps))
         # devices run concurrently: the batch's parallel-time cost is the
         # slowest device's lockstep count, not the sum
         return RRBatch.make(nodes.reshape(n_dev * self.config.batch, -1),
