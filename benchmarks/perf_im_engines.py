@@ -34,11 +34,79 @@ import jax
 
 from benchmarks.common import OUT_DIR, ba_graph, write_csv, report
 from repro.graph import csr as csr_mod
+from repro.core import coverage as cov
 from repro.core.engine import make_engine
 from repro.core.imm import imm
 
 N, R, QUOTA, B = 20000, 8, 2048, 512
 PIPELINE_ENGINES = ("queue", "refill", "dense", "lt")
+SELECTION_PATHS = ("fused", "bitset", "celf-sketch")
+
+
+def bench_selection(n=2000, r=4, k=10, pool_rows=2048, batch=256,
+                    sketch_k=512, reps=3, seed=0):
+    """Time the three selection backends on one shared RR pool.
+
+    The pool is sampled once (queue engine) into a ``DeviceRRStore`` with an
+    incremental coverage sketch; each path then selects the same k seeds.
+    First call per path is reported separately as compile+run; steady-state
+    is the min over ``reps`` repeats.  Writes BENCH_selection.json.
+    """
+    g = ba_graph(n, r)
+    g_rev = csr_mod.reverse(g)
+    eng = make_engine("queue", g_rev, batch=batch)
+    store = cov.DeviceRRStore(n, sketch_k=sketch_k)
+    i = 0
+    while store.n_rr < pool_rows:
+        store.append_batch(eng.sample(jax.random.key(seed * 100003 + i)))
+        i += 1
+    out = {"graph": {"kind": "barabasi_albert", "n": n, "r": r,
+                     "weights": "wc"},
+           "pool": {"rows": store.n_rr, "elements": store.n_elems,
+                    "sketch_k": store.sketch_k, "batch": batch},
+           "params": {"k": k, "reps": reps, "seed": seed},
+           "paths": {}}
+    seeds_by_path = {}
+    for path in SELECTION_PATHS:
+        method = {"fused": "flat", "bitset": "bitset",
+                  "celf-sketch": "celf"}[path]
+        t0 = time.perf_counter()
+        if method == "celf":
+            stats = {}
+            res = cov.select_seeds_celf(store, k, stats_out=stats)
+        else:
+            res = store.select(k, method=method)
+        jax.block_until_ready(res.seeds)
+        first = time.perf_counter() - t0
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            if method == "celf":
+                res = cov.select_seeds_celf(store, k)
+            else:
+                res = store.select(k, method=method)
+            jax.block_until_ready(res.seeds)
+            best = min(best, time.perf_counter() - t0)
+        seeds = np.asarray(res.seeds).tolist()
+        seeds_by_path[path] = seeds
+        out["paths"][path] = {
+            "first_call_s": round(first, 4),
+            "steady_s": round(best, 4),
+            "seeds": seeds,
+            "frac": round(float(res.frac), 6),
+        }
+        if method == "celf":
+            out["paths"][path]["exact_evals"] = stats["n_exact_evals"]
+            out["paths"][path]["eval_calls"] = stats["n_eval_calls"]
+        report(f"perf_im/selection/{path}", best * 1e6,
+               f"steady={best * 1e3:.1f}ms;first={first:.2f}s")
+    out["seeds_identical"] = all(
+        s == seeds_by_path[SELECTION_PATHS[0]] for s in seeds_by_path.values())
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, "BENCH_selection.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    return out
 
 
 def bench_pipeline(n=N, r=R, k=10, eps=0.4, max_theta=4096, batch=512,
@@ -82,7 +150,7 @@ def bench_pipeline(n=N, r=R, k=10, eps=0.4, max_theta=4096, batch=512,
     return out
 
 
-def main(n=N, r=R, quota=QUOTA, b=B, pipeline_kw=None):
+def main(n=N, r=R, quota=QUOTA, b=B, pipeline_kw=None, selection_kw=None):
     g = ba_graph(n, r)
     g_rev = csr_mod.reverse(g)
     deg = np.diff(np.asarray(g_rev.offsets))
@@ -124,6 +192,7 @@ def main(n=N, r=R, quota=QUOTA, b=B, pipeline_kw=None):
            f"par_speedup={speedup_refill:.0f}x;"
            f"step_win={steps_round / max(steps_refill, 1):.2f}x")
     bench_pipeline(n=n, r=r, **(pipeline_kw or {}))
+    bench_selection(**(selection_kw or {}))
 
 
 if __name__ == "__main__":
@@ -139,10 +208,20 @@ if __name__ == "__main__":
     ap.add_argument("--engines", default=",".join(PIPELINE_ENGINES))
     ap.add_argument("--pipeline-only", action="store_true",
                     help="skip the micro-step section (CI smoke)")
+    ap.add_argument("--selection-only", action="store_true",
+                    help="run only the selection-backend comparison")
+    ap.add_argument("--pool-rows", type=int, default=2048,
+                    help="RR pool size for --selection-only")
+    ap.add_argument("--sketch-k", type=int, default=512)
     args = ap.parse_args()
     pkw = dict(k=args.k, eps=args.eps, max_theta=args.max_theta,
                batch=args.batch, engines=tuple(args.engines.split(",")))
-    if args.pipeline_only:
+    skw = dict(n=args.n, r=args.r, k=args.k, pool_rows=args.pool_rows,
+               batch=args.batch, sketch_k=args.sketch_k)
+    if args.selection_only:
+        bench_selection(**skw)
+    elif args.pipeline_only:
         bench_pipeline(n=args.n, r=args.r, **pkw)
     else:
-        main(n=args.n, r=args.r, quota=args.quota, b=args.b, pipeline_kw=pkw)
+        main(n=args.n, r=args.r, quota=args.quota, b=args.b, pipeline_kw=pkw,
+             selection_kw=skw)

@@ -4,7 +4,8 @@ from repro.core.engine import (SamplerEngine, RRBatch, register_engine,
                                resolve_engine_name)
 from repro.core.coverage import (RRStore, IncrementalRRStore, DeviceRRStore,
                                  build_store, merge_stores, occur_histogram,
-                                 select_seeds, select_seeds_device)
+                                 select_seeds, select_seeds_device,
+                                 select_seeds_celf)
 from repro.core.rrset import sample_rrsets_queue, to_lists
 from repro.core.dense import (sample_rrsets_dense, membership_to_lists,
                               membership_to_padded)
@@ -18,6 +19,7 @@ __all__ = [
     "make_engine", "list_engines", "resolve_engine_name",
     "RRStore", "IncrementalRRStore", "DeviceRRStore", "build_store",
     "merge_stores", "occur_histogram", "select_seeds", "select_seeds_device",
+    "select_seeds_celf",
     "sample_rrsets_queue", "to_lists",
     "sample_rrsets_dense", "membership_to_lists", "membership_to_padded",
     "sample_rrsets_lt", "ic_spread", "lt_spread", "solve_mrim",

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import sketch as sketch_mod
 from repro.core.packing import rank_positions
 from repro.kernels.bitset import _popcount
 
@@ -47,9 +48,17 @@ class RRStore(NamedTuple):
 def _compact_padded(nodes, lens, base: int = 0):
     """(B, W) padded rows + lengths -> (flat elements, row ids + base), the
     CSR-of-RR compaction shared by ``build_store`` and the incremental
-    store (paper Alg. 6 lines 4-11, vectorized)."""
+    store (paper Alg. 6 lines 4-11, vectorized).
+
+    Lengths are clamped to ``[0, W]`` exactly like the device append path
+    (:func:`_append_scatter`): an overflowed lane may report its true
+    pre-truncation length while ``nodes`` only materializes ``W`` columns —
+    without the clamp the element count (masked by width) and the row-id
+    count (repeated by raw length) drift apart and the host mirror
+    diverges from the device store.
+    """
     nodes = np.asarray(nodes)
-    lens = np.asarray(lens, dtype=np.int64)
+    lens = np.clip(np.asarray(lens, dtype=np.int64), 0, nodes.shape[1])
     mask = np.arange(nodes.shape[1])[None, :] < lens[:, None]
     flat = nodes[mask].astype(np.int64)
     ids = np.repeat(np.arange(len(lens), dtype=np.int64) + base, lens)
@@ -271,7 +280,10 @@ class DeviceRRStore:
     ``append_batch`` (donation retires the previous buffers).
     """
 
-    def __init__(self, n_nodes: int, capacity: int = 4096):
+    DEFAULT_SKETCH_K = 1024
+
+    def __init__(self, n_nodes: int, capacity: int = 4096,
+                 sketch_k: int | None = None, sketch_mode: str = "mod"):
         if n_nodes >= np.iinfo(np.int32).max:
             raise ValueError("item space must fit int32")
         self.n_nodes = n_nodes
@@ -285,6 +297,14 @@ class DeviceRRStore:
         self._n_rr = 0
         self._cache: RRStore | None = None
         self._bitset = None              # (num_rows, n_words) cache
+        # optional incremental coverage sketch (core/sketch.py): per-node
+        # k-bucket hashed row-occupancy, folded in batch by batch
+        self.sketch_mode = sketch_mode
+        self.sketch_k = (sketch_mod.resolve_sketch_k(sketch_k)
+                         if sketch_k is not None else None)
+        self._occ = (jnp.zeros((n_nodes + 1, self.sketch_k), bool)
+                     if self.sketch_k is not None else None)
+        self._sk_words = None            # packed (n+1, k/32) cache
 
     @property
     def n_rr(self) -> int:
@@ -317,6 +337,13 @@ class DeviceRRStore:
         elems, rows = (int(x) for x in jax.device_get(
             _batch_counts(lens, width=nodes.shape[1])))
         r, w = nodes.shape
+        if self._occ is not None:
+            # fold the batch into the coverage sketch *before* the append
+            # advances the device row counter (global row ids must match
+            # the compaction's)
+            self._occ = sketch_mod.sketch_append(
+                self._occ, nodes, lens, self._nrr_dev,
+                k=self.sketch_k, mode=self.sketch_mode)
         # wide batches (device engine padding ≫ payload) go through the
         # packed append: gather-pack + contiguous writes beat a serial
         # R·W-update scatter by orders of magnitude on CPU
@@ -343,6 +370,7 @@ class DeviceRRStore:
         self._n_rr += rows
         self._cache = None
         self._bitset = None
+        self._sk_words = None
 
     def snapshot(self) -> RRStore:
         """Back-compat :class:`RRStore` view of the live extent (valid until
@@ -370,7 +398,35 @@ class DeviceRRStore:
                 num_rows=num_rows, n_words=n_words)
         return self._bitset
 
+    def sketch_words(self, k: int | None = None):
+        """Packed (n+1, k/32) uint32 per-node coverage sketch (cached).
+
+        Stores constructed with ``sketch_k`` return the incrementally-built
+        sketch; otherwise the sketch is built from the live flat pool on
+        demand (one jit'd scatter over the elements).
+        """
+        if self._occ is not None:
+            if k is not None and sketch_mod.resolve_sketch_k(k) != \
+                    self.sketch_k:
+                raise ValueError(
+                    f"store maintains an incremental sketch of k="
+                    f"{self.sketch_k}; requested k={k} cannot be honored")
+            if self._sk_words is None:
+                self._sk_words = sketch_mod.pack_sketch(
+                    self._occ, words=self.sketch_k // 32)
+            return self._sk_words
+        kk = sketch_mod.resolve_sketch_k(k if k is not None
+                                         else self.DEFAULT_SKETCH_K)
+        if self._sk_words is None or self._sk_words.shape[1] != kk // 32:
+            occ = sketch_mod.sketch_from_flat(
+                self._flat, self._ids, self._valid,
+                n=self.n_nodes, k=kk, mode=self.sketch_mode)
+            self._sk_words = sketch_mod.pack_sketch(occ, words=kk // 32)
+        return self._sk_words
+
     def select(self, k: int, method: str = "auto") -> "CoverageResult":
+        if method in ("celf", "celf-sketch"):
+            return select_seeds_celf(self, k)
         return select_seeds_device(self, k, method=method)
 
 
@@ -440,6 +496,40 @@ def select_seeds(store: RRStore, k: int) -> CoverageResult:
 # Fused selection on the device-resident pool (capacity-stable shapes).
 # ---------------------------------------------------------------------------
 
+@functools.partial(jax.jit, static_argnames=("n",))
+def _occur_flat(flat, valid, *, n):
+    """Exact Occur histogram over the capacity-padded flat pool."""
+    return jnp.zeros(n + 1, jnp.int32).at[flat].add(
+        valid.astype(jnp.int32), mode="drop")[:n]
+
+
+def _unpack_covered(cov_words):
+    """(nw,) packed uint32 Covered bitset -> (nw*32,) bool rows."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return (((cov_words[:, None] >> shifts[None, :])
+             & jnp.uint32(1)) != 0).reshape(cov_words.shape[0] * 32)
+
+
+def _pack_covered(rows):
+    """(nw*32,) bool rows -> (nw,) packed uint32 words."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return (rows.reshape(-1, 32).astype(jnp.uint32)
+            << shifts[None, :]).sum(axis=1)
+
+
+def _newly_rows(flat, ids, valid, covered, u):
+    """Rows containing ``u`` that are not yet covered — THE membership pass.
+
+    Single shared body for the fused scan step, the CELF exact-eval batch
+    (vmapped over candidates) and the CELF commit: the celf==fused parity
+    contract hangs on every path computing newly-covered rows identically.
+    """
+    match = (flat == u) & valid
+    row_has = jax.ops.segment_max(match.astype(jnp.int32), ids,
+                                  num_segments=covered.shape[0]) > 0
+    return row_has & ~covered
+
+
 @functools.partial(jax.jit, static_argnames=("num_rows", "n", "k"))
 def _greedy_fused(flat, ids, valid, n_rr, *, num_rows, n, k):
     """Alg. 7 as ONE scan over the capacity-padded buffers.
@@ -454,29 +544,20 @@ def _greedy_fused(flat, ids, valid, n_rr, *, num_rows, n, k):
     O(elements), strictly less work than any dense per-node pass (the
     bit-matrix decrement variant lives in :func:`_greedy_bitset`).
     """
-    nw = num_rows // 32                              # num_rows is a mult of 32
-    shifts = jnp.arange(32, dtype=jnp.uint32)
-    occur0 = jnp.zeros(n + 1, jnp.int32).at[flat].add(
-        valid.astype(jnp.int32), mode="drop")[:n]
+    occur0 = _occur_flat(flat, valid, n=n)
 
     def step(carry, _):
         occur, cov_words = carry
         u = jnp.argmax(occur).astype(jnp.int32)
-        match = (flat == u) & valid                  # membership scan
-        row_has = jax.ops.segment_max(match.astype(jnp.int32), ids,
-                                      num_segments=num_rows) > 0
-        covered = (((cov_words[:, None] >> shifts[None, :])
-                    & jnp.uint32(1)) != 0).reshape(num_rows)
-        newly = row_has & ~covered
-        new_words = (newly.reshape(nw, 32).astype(jnp.uint32)
-                     << shifts[None, :]).sum(axis=1)
+        newly = _newly_rows(flat, ids, valid, _unpack_covered(cov_words), u)
+        new_words = _pack_covered(newly)
         gain = _popcount(new_words).sum(dtype=jnp.int32)
         elem_newly = newly[jnp.clip(ids, 0, num_rows - 1)] & valid
         dec = jnp.zeros(n + 1, jnp.int32).at[flat].add(
             elem_newly.astype(jnp.int32), mode="drop")[:n]
         return (occur - dec, cov_words | new_words), (u, gain)
 
-    cov0 = jnp.zeros(nw, jnp.uint32)
+    cov0 = jnp.zeros(num_rows // 32, jnp.uint32)
     _, (seeds, gains) = jax.lax.scan(step, (occur0, cov0), None, length=k)
     frac = gains.sum(dtype=jnp.int32) / jnp.maximum(n_rr, 1)
     return seeds, gains, frac.astype(jnp.float32)
@@ -539,6 +620,159 @@ def select_seeds_device(store: "DeviceRRStore", k: int,
     else:
         raise ValueError(f"unknown selection method {method!r}")
     return CoverageResult(seeds=seeds, gains=gains, frac=frac)
+
+
+# ---------------------------------------------------------------------------
+# CELF lazy greedy over sketch estimates (third selection backend).
+# ---------------------------------------------------------------------------
+
+_EVAL_CHUNK = 8   # broadcast width of one exact-eval pass
+
+
+@jax.jit
+def _celf_eval_batch(flat, ids, valid, cov_words, cands):
+    """Exact marginal coverage of C candidates against the covered bitset.
+
+    One jit call evaluates the whole batch: the membership pass (equality
+    scan + segment-max, the fused path's inner step) is broadcast over
+    ``_EVAL_CHUNK`` candidates at a time under ``lax.map``, so peak memory
+    is O(elements · _EVAL_CHUNK) — a *fixed* multiple of the pool,
+    independent of ``eval_batch`` (a full (T, C) broadcast would scale the
+    pool's footprint with the batch width, fatal exactly in the huge-pool
+    regime this backend exists for).  ``cands`` may be padded with -1
+    (matches nothing, gain 0).  Shapes are the pool's capacity buffers, so
+    the call is capacity-stable like the fused scan.
+    """
+    covered = _unpack_covered(cov_words)
+    c = cands.shape[0]
+    pad = (-c) % _EVAL_CHUNK
+    cands = jnp.concatenate(
+        [cands, jnp.full((pad,), -1, cands.dtype)]) if pad else cands
+
+    def chunk(cs):
+        newly = jax.vmap(
+            lambda u: _newly_rows(flat, ids, valid, covered, u))(cs)
+        return newly.sum(axis=1, dtype=jnp.int32)
+
+    gains = jax.lax.map(chunk, cands.reshape(-1, _EVAL_CHUNK))
+    return gains.reshape(-1)[:c]
+
+
+@jax.jit
+def _celf_apply(flat, ids, valid, cov_words, u):
+    """Commit seed ``u``: OR its rows into the packed Covered bitset and
+    return (new cov_words, exact gain)."""
+    newly = _newly_rows(flat, ids, valid, _unpack_covered(cov_words), u)
+    new_words = _pack_covered(newly)
+    gain = _popcount(new_words).sum(dtype=jnp.int32)
+    return cov_words | new_words, gain
+
+
+def select_seeds_celf(store: "DeviceRRStore", k: int, *,
+                      eval_batch: int = 32, use_sketch: bool = True,
+                      stats_out: dict | None = None) -> CoverageResult:
+    """CELF lazy greedy selection with sketch-first candidate ordering.
+
+    The fused scan pays one full O(elements) pool pass per argmax round.
+    Here marginal gains are *lazily* verified: a host priority array holds
+    each node's last exact marginal gain (initialized from the exact Occur
+    histogram) — a valid upper bound under submodularity — and per seed only
+    the candidates that could still win are re-evaluated exactly, in batches
+    of ``eval_batch`` via :func:`_celf_eval_batch`.  The per-node coverage
+    sketch (``core/sketch.py``) orders that verification: its union-estimate
+    Δocc (one Pallas popcount sweep over all nodes) is a certified *lower*
+    bound on the marginal gain, so the likeliest winners are verified first
+    and acceptance usually triggers on the first pop.
+
+    Correctness is structural, not statistical: a candidate is accepted only
+    when its freshly-computed exact gain is ≥ every remaining upper bound
+    (ties resolved to the lowest node id, matching ``jnp.argmax``), so the
+    returned seeds are *identical* to the fused-scan path for any sketch
+    size — the sketch only changes how many exact evaluations happen.  With
+    ``sketch_k >= n_rr`` (mod bucketing) the estimates are themselves exact
+    and one verification batch per seed suffices.  The (1−1/e−ε) guarantee
+    of Alg. 2 is therefore preserved verbatim.
+
+    All device interaction is explicit (``device_put``/``device_get``), so
+    the call is legal under ``jax.transfer_guard("disallow")``; shapes are
+    the pool's capacity buffers (compiles only at doublings, like the fused
+    path) plus the fixed-size sketch.
+    """
+    n = store.n_nodes
+    num_rows = store.row_capacity()
+    nw = num_rows // 32
+    flat, ids, valid = store._flat, store._ids, store._valid
+    c = max(1, min(eval_batch, n))
+
+    ub = np.asarray(jax.device_get(
+        _occur_flat(flat, valid, n=n)), dtype=np.int64).copy()
+    fresh = np.zeros(n, bool)
+    # explicit placement: plain jnp.zeros is an implicit h2d transfer and
+    # would trip the solver's transfer_guard("disallow")
+    cov_words = jax.device_put(np.zeros(nw, np.uint32))
+    if use_sketch:
+        sk_words = store.sketch_words()
+        cov_sk = jax.device_put(np.zeros(sk_words.shape[1], np.uint32))
+    n_evals = 0
+    n_eval_calls = 0
+    node_ids = np.arange(n)
+
+    def eval_exact(cands):
+        nonlocal n_evals, n_eval_calls
+        cands = np.asarray(cands, np.int32)
+        pad = np.full(c, -1, np.int32)
+        pad[:len(cands)] = cands
+        g = np.asarray(jax.device_get(_celf_eval_batch(
+            flat, ids, valid, cov_words, jax.device_put(pad))))
+        ub[cands] = g[:len(cands)]
+        fresh[cands] = True
+        n_evals += len(cands)
+        n_eval_calls += 1
+
+    seeds, gains = [], []
+    for _ in range(k):
+        fresh[:] = False
+        if use_sketch:
+            # sketch sweep: Δocc lower bounds for every node in one kernel
+            # call; verify the likeliest winners exactly before entering
+            # the lazy loop (O(n) top-c selection — eval-batch composition
+            # affects only the eval count, never the accepted seed)
+            deltas = np.asarray(jax.device_get(
+                sketch_mod.union_gains(sk_words, cov_sk)))[:n]
+            key = deltas.astype(np.int64) * (n + 1) - node_ids
+            eval_exact(np.argpartition(-key, c - 1)[:c])
+        while True:
+            u = int(np.argmax(ub))       # first max == lowest id on ties
+            if fresh[u]:
+                break
+            # verify the c highest-bound stale candidates, lowest id first
+            # on ties (they are the ones that block acceptance).  Composite
+            # int64 key keeps this O(n) — ub <= n_rr and id < n both fit
+            # int32, so ub*(n+1) - id cannot overflow.  The set always
+            # contains the stale argmax, so the loop makes progress.
+            stale_idx = node_ids[~fresh]
+            cc = min(c, len(stale_idx))
+            key = ub[stale_idx] * (n + 1) - stale_idx
+            eval_exact(stale_idx[np.argpartition(-key, cc - 1)[:cc]])
+        u_dev = jax.device_put(np.int32(u))
+        cov_words, gain_dev = _celf_apply(flat, ids, valid, cov_words, u_dev)
+        if use_sketch:
+            cov_sk = sketch_mod.union_row(cov_sk, sk_words, u_dev)
+        gain = int(jax.device_get(gain_dev))
+        ub[u] = 0                        # exact: u's rows are now covered
+        seeds.append(u)
+        gains.append(gain)
+
+    if stats_out is not None:
+        stats_out.update(n_exact_evals=n_evals, n_eval_calls=n_eval_calls,
+                         sketch_k=(int(store.sketch_words().shape[1]) * 32
+                                   if use_sketch else 0),
+                         n_rr=store.n_rr)
+    frac = sum(gains) / max(store.n_rr, 1)
+    return CoverageResult(
+        seeds=jax.device_put(np.asarray(seeds, np.int32)),
+        gains=jax.device_put(np.asarray(gains, np.int32)),
+        frac=jax.device_put(np.float32(frac)))
 
 
 class PaddedStore(NamedTuple):

@@ -58,7 +58,17 @@ class IMMStats:
     overflow_fraction: float = 0.0
     frac_covered: float = 0.0
     sampling_steps: int = 0
+    selection: str = "auto"
     history: list = field(default_factory=list)
+
+
+# user-facing selection knob -> DeviceRRStore.select method.  "fused" is the
+# single-scan flat path (the historical default), "bitset" the Pallas
+# bit-matrix path, "celf-sketch" the lazy greedy over coverage sketches.
+_SELECTION_METHODS = {
+    "auto": "auto", "fused": "flat", "flat": "flat", "bitset": "bitset",
+    "celf-sketch": "celf", "celf": "celf",
+}
 
 
 class IMMSolver:
@@ -74,6 +84,7 @@ class IMMSolver:
                  engine: Union[str, SamplerEngine] = "queue",
                  batch: Optional[int] = None, qcap: Optional[int] = None,
                  ec: Optional[int] = None, model: Optional[str] = None,
+                 selection: str = "auto", sketch_k: Optional[int] = None,
                  seed: int = 0):
         self.g = g
         self.n = g.n_nodes
@@ -103,9 +114,19 @@ class IMMSolver:
                 "(tagged engines like 'mrim' have dedicated solvers)")
         self.engine_name = getattr(self.engine, "name",
                                    type(self.engine).__name__)
+        if selection not in _SELECTION_METHODS:
+            raise ValueError(f"unknown selection {selection!r}; one of "
+                             f"{sorted(_SELECTION_METHODS)}")
+        self.selection = selection
+        self._sel_method = _SELECTION_METHODS[selection]
+        # the celf path estimates from the incremental coverage sketch, so
+        # the store maintains one from the first append on
+        if self._sel_method == "celf" and sketch_k is None:
+            sketch_k = cov.DeviceRRStore.DEFAULT_SKETCH_K
         self.key = jax.random.key(seed)
-        self.store = cov.DeviceRRStore(self.engine.item_space)
-        self._stats = IMMStats()
+        self.store = cov.DeviceRRStore(self.engine.item_space,
+                                       sketch_k=sketch_k)
+        self._stats = IMMStats(selection=selection)
         self._stats_dirty = False
         # stats accumulate as device scalars; materialized once per
         # sample_until / on `stats` access, not per round
@@ -173,7 +194,7 @@ class IMMSolver:
                 if max_theta:
                     theta_i = min(theta_i, max_theta)
                 self.sample_until(theta_i)
-                res = self.store.select(k)
+                res = self.store.select(k, method=self._sel_method)
                 # explicit scalar fetch: the Alg. 2 L7 break is host control
                 est = n * float(jax.device_get(res.frac))
                 self._stats.lb_iters = i
@@ -187,7 +208,7 @@ class IMMSolver:
             self._stats.theta = theta
             self._stats.lb = lb
             self.sample_until(theta)
-            res = self.store.select(k)
+            res = self.store.select(k, method=self._sel_method)
         # final result materialization — the loop's only bulk transfer
         seeds, frac = jax.device_get((res.seeds, res.frac))
         self._stats.frac_covered = float(frac)
@@ -198,7 +219,8 @@ class IMMSolver:
 def imm(g: CSRGraph, k: int, eps: float, **kw):
     """One-shot convenience wrapper; returns (seeds, spread_estimate, stats)."""
     solver_kw = {k_: v for k_, v in kw.items()
-                 if k_ in ("engine", "batch", "qcap", "ec", "model", "seed")}
+                 if k_ in ("engine", "batch", "qcap", "ec", "model", "seed",
+                           "selection", "sketch_k")}
     solve_kw = {k_: v for k_, v in kw.items() if k_ in ("ell", "max_theta")}
     solver = IMMSolver(g, **solver_kw)
     return solver.solve(k, eps, **solve_kw)

@@ -1,0 +1,144 @@
+"""Sketch-based coverage estimation (Cohen et al., sketch-based IM).
+
+The fused Alg. 7 greedy recomputes marginal coverage over the *full* RR pool
+every round — O(elements) per seed.  A bottom-k-style sketch answers the
+same "how many uncovered RR rows does candidate v hit?" question from a
+fixed-size summary:
+
+For every node v we keep a **hashed one-permutation occupancy sketch**: a
+k-bucket bitmap where bucket ``h(row_id) mod k`` is set iff some RR row
+containing v hashed there.  Unions are bitwise OR, cardinality proxies are
+popcounts — exactly the packed-bitset plumbing of ``kernels/bitset.py``, so
+the per-candidate union estimate over all n nodes is one Pallas popcount
+sweep (``kernels/sketch.py``).
+
+Properties the CELF selection path (``coverage.select_seeds_celf``) relies
+on:
+
+* **Lower bound** — new occupied buckets require new rows, so
+  ``Δocc(v | S) = occ(sketch_v | sketch_S) − occ(sketch_S)`` never exceeds
+  the exact marginal coverage of v.  CELF therefore uses Δocc only to
+  *order* candidates for exact verification; correctness never depends on
+  sketch accuracy.
+* **Exact-safe regime** — with the default ``"mod"`` bucketing
+  (``bucket = row_id % k``) the map is injective while ``n_rr <= k``, so
+  Δocc *equals* the exact marginal gain and one verification per seed
+  suffices.  Past k rows the sketch degrades gracefully into a uniform
+  hash (sequential row ids stride the buckets perfectly).
+* **Incremental** — ``DeviceRRStore.append_batch`` folds each batch into
+  the sketch with one jit'd scatter (O(batch elements), no rebuild); the
+  packed word matrix is cached per live extent like the bitset matrix.
+
+Cardinality estimation for consumers that want absolute counts (benchmarks,
+tests) is classic linear counting: ``n̂ = k · ln(k / (k − occ))``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.bitset import _popcount
+
+
+def resolve_sketch_k(k: int) -> int:
+    """Round the bucket count up to a whole number of uint32 words."""
+    if k <= 0:
+        raise ValueError("sketch_k must be positive")
+    return ((k + 31) // 32) * 32
+
+
+def bucket_of(row_ids, k: int, mode: str = "mod"):
+    """Bucket index of each RR row id (jit-traceable).
+
+    ``"mod"`` — identity modulo k: injective (exact) while ids < k, a
+    perfect stride afterwards.  ``"mix"`` — Knuth multiplicative hash then
+    modulo, for adversarial id patterns.
+    """
+    rid = row_ids.astype(jnp.uint32)
+    if mode == "mix":
+        rid = rid * jnp.uint32(2654435761)
+    elif mode != "mod":
+        raise ValueError(f"unknown sketch hash mode {mode!r}")
+    return (rid % jnp.uint32(k)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "mode"),
+                   donate_argnums=(0,))
+def sketch_append(occ, nodes, lens, row_base, *, k, mode):
+    """Fold one padded batch into the (n+1, k) bool occupancy sketch.
+
+    ``row_base`` is the pool's row count *before* this batch (device
+    scalar), so global row ids match the store's compaction exactly.
+    Rows with length 0 are padding and contribute nothing.  Duplicate
+    scatter targets all write ``True`` — deterministic, so a plain
+    ``.at[].set`` is safe (no scatter-or needed).
+    """
+    r, w = nodes.shape
+    n_rows = occ.shape[0]                        # n + 1 (row n = sentinel bin)
+    lens = jnp.minimum(jnp.maximum(lens.astype(jnp.int32), 0), w)
+    mask = jnp.arange(w, dtype=jnp.int32)[None, :] < lens[:, None]
+    row_valid = lens > 0
+    rid = row_base + jnp.cumsum(row_valid, dtype=jnp.int32) - 1
+    b = bucket_of(rid, k, mode)                  # (r,)
+    v = jnp.where(mask, nodes.astype(jnp.int32), n_rows)   # OOB -> dropped
+    return occ.at[v, jnp.broadcast_to(b[:, None], (r, w))].set(
+        True, mode="drop")
+
+
+@functools.partial(jax.jit, static_argnames=("n", "k", "mode"))
+def sketch_from_flat(flat, ids, valid, *, n, k, mode):
+    """Build the (n+1, k) occupancy sketch from an existing flat pool (for
+    stores created without an incremental sketch)."""
+    b = bucket_of(ids, k, mode)
+    v = jnp.where(valid, flat, n + 1)            # OOB -> dropped
+    return jnp.zeros((n + 1, k), bool).at[v, b].set(True, mode="drop")
+
+
+def pack_sketch(occ, *, words):
+    """(R, k) bool occupancy -> (R, k/32) uint32 packed words, via the
+    Pallas ``pack_bits`` kernel (same LSB-first bit order as the Covered
+    bitset and the Visited structures)."""
+    from repro.kernels import ops as kops
+    if occ.shape[1] != words * 32:
+        raise ValueError("occupancy width must be words * 32")
+    return kops.pack_bits(occ)
+
+
+@jax.jit
+def union_row(cov_words, sk_words, u):
+    """``cov | sketch[u]`` — fold one selected seed into the union sketch."""
+    return cov_words | sk_words[u]
+
+
+@jax.jit
+def _minus_base(union_occ, cov_words):
+    return union_occ - _popcount(cov_words).sum(dtype=jnp.int32)
+
+
+def union_gains(sk_words, cov_words):
+    """Estimated marginal occupancy Δocc(v | S) for every node, in one
+    kernel sweep: ``popcount(sketch[v] | cov) − popcount(cov)``.
+
+    Returns a device (R,) int32 vector (R = sketch rows; callers slice off
+    the sentinel row).  Δocc is a certified lower bound on the exact
+    marginal coverage (see module docstring).
+    """
+    from repro.kernels import ops as kops
+    return _minus_base(kops.sketch_union_popcount(sk_words, cov_words),
+                       cov_words)
+
+
+def linear_count(occupied, k: int):
+    """Linear-counting cardinality estimate from bucket occupancy.
+
+    Exact while the bucketing is injective (``occupied`` distinct rows all
+    landed in distinct buckets); otherwise ``k·ln(k/(k−occ))`` corrects for
+    collisions (capped at full occupancy).
+    """
+    occ = np.asarray(occupied, dtype=np.float64)
+    occ = np.clip(occ, 0.0, k - 1.0)
+    est = k * np.log(k / (k - occ))
+    return np.where(np.asarray(occupied) >= k, k * np.log(k), est)

@@ -10,6 +10,8 @@ kernel at once (per-call ``interpret=`` still wins); ``None`` means auto.
 """
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 
@@ -19,13 +21,27 @@ from repro.kernels import bitset as _bitset
 
 INTERPRET: bool | None = None    # None = auto: cpu -> interpret
 
+_ENV_FLAG = "REPRO_KERNELS_INTERPRET"   # CI interpret-mode job sets this
+
+
+def _env_interpret() -> bool | None:
+    v = os.environ.get(_ENV_FLAG, "").strip().lower()
+    if v in ("1", "true", "yes", "on"):
+        return True
+    if v in ("0", "false", "no", "off"):
+        return False
+    return None
+
 
 def resolve_interpret(interpret: bool | None = None) -> bool:
-    """Per-call flag > module override > backend-aware default."""
+    """Per-call flag > module override > env override > backend default."""
     if interpret is not None:
         return interpret
     if INTERPRET is not None:
         return INTERPRET
+    env = _env_interpret()
+    if env is not None:
+        return env
     return jax.default_backend() == "cpu"
 
 
@@ -71,6 +87,12 @@ def occur_from_bitset(words, *, interpret: bool | None = None):
 def occur_from_bitset_masked(words, rowmask, *, interpret: bool | None = None):
     return _bitset.occur_from_bitset_masked(
         words, rowmask, interpret=resolve_interpret(interpret))
+
+
+def sketch_union_popcount(words, cov, *, interpret: bool | None = None):
+    from repro.kernels import sketch as _sketch
+    return _sketch.sketch_union_popcount(
+        words, cov, interpret=resolve_interpret(interpret))
 
 
 def flash_attention(q, k, v, *, causal=True, bq=128, bk=128,

@@ -1,0 +1,58 @@
+"""Pallas kernels for the bottom-k / one-permutation coverage sketches.
+
+The sketch subsystem (``core/sketch.py``) summarises, for every node v, the
+set of RR rows containing v as a k-bit hashed occupancy bitmap packed into
+``k/32`` uint32 words — the same packed-bitset layout the Visited structures
+use (``kernels/bitset.py``), so these kernels are thin recombinations of
+that plumbing:
+
+* :func:`sketch_union_popcount` — per-node ``popcount(sketch[v] | covered)``,
+  the inner product of the CELF sketch estimate: the union-cardinality proxy
+  for ``|rows(v) ∪ rows(S)|`` evaluated for *all* nodes in one cross-row
+  popcount sweep (grid over node blocks, SWAR popcount per word).
+
+The matching ``popcount(covered)`` baseline is one :func:`_popcount` call on
+a (W,) vector — not worth a kernel.  Estimation (linear counting) happens in
+``core/sketch.py``; the kernels only produce occupancy counts.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.bitset import _popcount
+
+
+def _union_popcount_kernel(words_ref, cov_ref, out_ref):
+    words = words_ref[...]                        # (BB, W) uint32
+    cov = cov_ref[...]                            # (1, W) uint32, replicated
+    out_ref[...] = _popcount(words | cov).sum(axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def sketch_union_popcount(words, cov, *, block_b: int = 256,
+                          interpret: bool = True):
+    """``out[v] = popcount(words[v] | cov)`` for every sketch row.
+
+    ``words``: (R, W) uint32 packed per-node sketches; ``cov``: (W,) uint32
+    packed union sketch of the selected seed set.  Returns (R,) int32 —
+    the occupancy of each candidate union, from which the CELF path derives
+    estimated marginal coverage (see ``core/sketch.py``).
+    """
+    r, w = words.shape
+    if cov.shape != (w,):
+        raise ValueError("cov must be a (W,) vector matching the sketch "
+                         "word width")
+    bb = min(block_b, r)
+    return pl.pallas_call(
+        _union_popcount_kernel,
+        grid=(pl.cdiv(r, bb),),
+        in_specs=[pl.BlockSpec((bb, w), lambda i: (i, 0)),
+                  pl.BlockSpec((1, w), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((bb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((r,), jnp.int32),
+        interpret=interpret,
+    )(words, cov.reshape(1, w))

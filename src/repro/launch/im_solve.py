@@ -117,13 +117,15 @@ class ShardedQueueEngine:
                             steps.max())
 
 
-def solve(g, k: int, eps: float, *, batch_per_dev: int = 128, seed: int = 0):
+def solve(g, k: int, eps: float, *, batch_per_dev: int = 128, seed: int = 0,
+          selection: str = "auto"):
     g_rev = csr.reverse(g)
     engine = ShardedQueueEngine(
         g_rev, ShardedQueueEngine.Config(batch=batch_per_dev))
-    solver = IMMSolver(g, engine=engine, seed=seed)
+    solver = IMMSolver(g, engine=engine, seed=seed, selection=selection)
     seeds, est, stats = solver.solve(k, eps)
     return seeds, est, dict(theta=stats.theta, sampled=stats.n_rr_sampled,
+                            selection=stats.selection,
                             devices=engine.mesh.devices.size)
 
 
@@ -133,13 +135,17 @@ def main():
     ap.add_argument("--r", type=int, default=4)
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--eps", type=float, default=0.4)
+    ap.add_argument("--selection", default="auto",
+                    choices=("auto", "fused", "bitset", "celf-sketch"),
+                    help="seed-selection backend (DESIGN.md §3)")
     args = ap.parse_args()
     src, dst = generators.barabasi_albert(args.n, args.r, seed=0)
     g = weights.wc_weights(csr.from_edges(src, dst, args.n))
     t0 = time.time()
-    seeds, est, stats = solve(g, args.k, args.eps)
+    seeds, est, stats = solve(g, args.k, args.eps, selection=args.selection)
     print(f"devices={stats['devices']} theta={stats['theta']} "
-          f"sampled={stats['sampled']} time={time.time() - t0:.2f}s")
+          f"sampled={stats['sampled']} selection={stats['selection']} "
+          f"time={time.time() - t0:.2f}s")
     print(f"seeds={sorted(seeds.tolist())} estimate={est:.1f}")
 
 

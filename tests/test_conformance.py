@@ -1,0 +1,222 @@
+"""Statistical conformance suite: do the engines sample the right law?
+
+Structural tests (root-first, uniqueness, reachability) cannot see a biased
+sampler that emits *valid but wrongly distributed* RR sets — e.g. a dedup
+micro-step that double-counts a multi-edge, or a refill lane that discards
+in-flight sets (size-biased).  Here every registered engine's RR-set *size
+distribution* is compared against the serial numpy oracle with a two-sample
+Kolmogorov-Smirnov test on small fixed-RNG graphs.
+
+KS on integer sizes is conservative (ties can only shrink the statistic),
+so ``p > 0.01`` is a sound acceptance bar; a deliberately mismatched pair
+(IC sizes vs LT sizes) is kept as a power control so the suite cannot pass
+vacuously.  Engines and oracle use independent RNGs — this is a two-sample
+test of laws, not a replay test.
+
+Also here: deterministic conformance of the sampler micro-step rebuild —
+segmented chunk dedup vs the sort fallback vs a dense reference on
+adversarial duplicate patterns, and ``coalesce_ic`` probability equivalence
+(the hypothesis-based twins live in test_properties.py).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from scipy import stats as sps
+
+from repro.graph import csr as csr_mod
+from repro.graph import generators, weights
+from repro.core import oracle, rrset
+from repro.core.engine import make_engine
+
+P_MIN = 0.01
+N_SIZES = 320
+
+
+def _graph(n=30, m=150, seed=2):
+    src, dst = generators.erdos_renyi(n, m, seed=seed)
+    return weights.wc_weights(csr_mod.from_edges(src, dst, n))
+
+
+def _engine_sizes(name, g_rev, count, *, key_seed=0, **opts):
+    eng = make_engine(name, g_rev, **opts)
+    sizes = []
+    i = 0
+    while len(sizes) < count:
+        b = eng.sample(jax.random.key(key_seed + i))
+        lens = np.asarray(b.lengths)
+        sizes += lens[lens > 0].tolist()
+        i += 1
+    return np.asarray(sizes[:count])
+
+
+def _oracle_sizes_ic(g_rev, count, seed=1):
+    rng = np.random.default_rng(seed)
+    offs = np.asarray(g_rev.offsets)
+    idx = np.asarray(g_rev.indices)
+    w = np.asarray(g_rev.weights)
+    n = g_rev.n_nodes
+    return np.asarray([
+        len(oracle.rr_set_ic(offs, idx, w, int(rng.integers(n)), rng))
+        for _ in range(count)])
+
+
+def _oracle_sizes_lt(g_rev, count, seed=1):
+    rng = np.random.default_rng(seed)
+    offs = np.asarray(g_rev.offsets)
+    idx = np.asarray(g_rev.indices)
+    w = np.asarray(g_rev.weights)
+    n = g_rev.n_nodes
+    return np.asarray([
+        len(oracle.rr_set_lt(offs, idx, w, int(rng.integers(n)), rng))
+        for _ in range(count)])
+
+
+def _oracle_sizes_mrim(g_rev, count, t_rounds, seed=1):
+    """MRIM law: one shared root, T independent IC BFS, tagged union size ==
+    sum of the per-round sizes (tags make all elements distinct)."""
+    rng = np.random.default_rng(seed)
+    offs = np.asarray(g_rev.offsets)
+    idx = np.asarray(g_rev.indices)
+    w = np.asarray(g_rev.weights)
+    n = g_rev.n_nodes
+    out = []
+    for _ in range(count):
+        root = int(rng.integers(n))
+        out.append(sum(len(oracle.rr_set_ic(offs, idx, w, root, rng))
+                       for _ in range(t_rounds)))
+    return np.asarray(out)
+
+
+# ----------------------------------------------- KS suite: all six engines
+
+@pytest.mark.parametrize("engine", ("queue", "dense", "refill",
+                                    "queue_sharded"))
+def test_ks_ic_engines_match_oracle(engine):
+    g_rev = csr_mod.reverse(_graph())
+    sizes = _engine_sizes(engine, g_rev, N_SIZES, batch=64)
+    ref = _oracle_sizes_ic(g_rev, N_SIZES)
+    res = sps.ks_2samp(sizes, ref)
+    assert res.pvalue > P_MIN, (engine, res, sizes.mean(), ref.mean())
+
+
+def test_ks_lt_engine_matches_oracle():
+    g_rev = csr_mod.reverse(_graph())
+    sizes = _engine_sizes("lt", g_rev, N_SIZES, batch=64)
+    ref = _oracle_sizes_lt(g_rev, N_SIZES)
+    res = sps.ks_2samp(sizes, ref)
+    assert res.pvalue > P_MIN, (res, sizes.mean(), ref.mean())
+
+
+def test_ks_mrim_engine_matches_oracle():
+    g_rev = csr_mod.reverse(_graph())
+    sizes = _engine_sizes("mrim", g_rev, N_SIZES, batch=32, t_rounds=2)
+    ref = _oracle_sizes_mrim(g_rev, N_SIZES, t_rounds=2)
+    res = sps.ks_2samp(sizes, ref)
+    assert res.pvalue > P_MIN, (res, sizes.mean(), ref.mean())
+
+
+@pytest.mark.parametrize("engine,model", (("queue", "ic"), ("lt", "lt")))
+def test_ks_second_graph(engine, model):
+    """Same laws on a denser second topology (BA attachment)."""
+    src, dst = generators.barabasi_albert(40, 3, seed=7)
+    g_rev = csr_mod.reverse(
+        weights.wc_weights(csr_mod.from_edges(src, dst, 40)))
+    sizes = _engine_sizes(engine, g_rev, N_SIZES, batch=64)
+    ref = (_oracle_sizes_ic if model == "ic" else _oracle_sizes_lt)(
+        g_rev, N_SIZES)
+    res = sps.ks_2samp(sizes, ref)
+    assert res.pvalue > P_MIN, (engine, res, sizes.mean(), ref.mean())
+
+
+def test_ks_power_control_rejects_wrong_law():
+    """The suite must be able to fail: IC BFS sizes vs LT walk sizes on the
+    same graph are different laws and KS must reject them."""
+    g_rev = csr_mod.reverse(_graph())
+    ic = _oracle_sizes_ic(g_rev, N_SIZES, seed=3)
+    lt = _oracle_sizes_lt(g_rev, N_SIZES, seed=4)
+    res = sps.ks_2samp(ic, lt)
+    assert res.pvalue < P_MIN, res
+
+
+# ------------------------------- micro-step conformance (deterministic)
+
+def _dense_first_occurrence(nbr, cand):
+    """O(EC^2) reference: j accepted iff it is the first candidate position
+    in its lane carrying nbr[b, j] (the historical dense mask)."""
+    b, ec = nbr.shape
+    out = np.zeros_like(cand)
+    for i in range(b):
+        seen = set()
+        for j in range(ec):
+            if cand[i, j] and nbr[i, j] not in seen:
+                out[i, j] = True
+                seen.add(nbr[i, j])
+    return out
+
+
+def _adversarial_chunks(rng, b=8, ec=32, n=16):
+    """Duplicate-heavy chunk: long runs of repeated destinations."""
+    reps = []
+    for _ in range(b):
+        row, v = [], 0
+        while len(row) < ec:
+            run = int(rng.integers(1, 6))
+            row += [v] * run
+            v += int(rng.integers(0, 2))     # sometimes repeat across runs
+        reps.append(row[:ec])
+    nbr = np.asarray(reps, np.int32) % n
+    cand = rng.random((b, ec)) < 0.6
+    return nbr, cand
+
+
+@pytest.mark.parametrize("seed", (0, 1, 2))
+def test_dedup_segmented_matches_sort_and_dense_reference(seed):
+    rng = np.random.default_rng(seed)
+    nbr_np, cand_np = _adversarial_chunks(rng)
+    # segmented mode requires duplicates adjacent: runs are sorted per row
+    order = np.argsort(nbr_np, axis=1, kind="stable")
+    nbr_np = np.take_along_axis(nbr_np, order, axis=1)
+    cand_np = np.take_along_axis(cand_np, order, axis=1)
+    nbr, cand = jnp.asarray(nbr_np), jnp.asarray(cand_np)
+    ar = jnp.arange(nbr.shape[1], dtype=jnp.int32)
+    ref = _dense_first_occurrence(nbr_np, cand_np)
+    seg = np.asarray(rrset._first_occurrence(nbr, cand, ar, mode="segmented"))
+    srt = np.asarray(rrset._first_occurrence(nbr, cand, ar, mode="sort"))
+    np.testing.assert_array_equal(seg, ref)
+    np.testing.assert_array_equal(srt, ref)
+
+
+def test_dedup_sort_handles_unsorted_chunks():
+    rng = np.random.default_rng(3)
+    nbr_np, cand_np = _adversarial_chunks(rng)    # NOT sorted: runs shuffled
+    perm = rng.permutation(nbr_np.shape[1])
+    nbr_np, cand_np = nbr_np[:, perm], cand_np[:, perm]
+    nbr, cand = jnp.asarray(nbr_np), jnp.asarray(cand_np)
+    ar = jnp.arange(nbr.shape[1], dtype=jnp.int32)
+    srt = np.asarray(rrset._first_occurrence(nbr, cand, ar, mode="sort"))
+    np.testing.assert_array_equal(srt, _dense_first_occurrence(nbr_np,
+                                                               cand_np))
+
+
+def test_coalesce_probability_equivalence_random_multigraph():
+    """p' = 1 - prod(1 - p_i) for every parallel-edge group, and coalescing
+    is idempotent (deterministic twin of the hypothesis property)."""
+    rng = np.random.default_rng(6)
+    n, m = 12, 160
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    w = rng.random(m).astype(np.float32) * 0.9
+    g = csr_mod.from_edges(src, dst, n, weights=w)
+    gc = csr_mod.coalesce_ic(g)
+    s2, d2, w2 = csr_mod.to_edges(gc)
+    got = dict(zip(zip(s2.tolist(), d2.tolist()), w2.tolist()))
+    expect = {}
+    for u, v, p in zip(src.tolist(), dst.tolist(), w.tolist()):
+        expect[(u, v)] = 1.0 - (1.0 - expect.get((u, v), 0.0)) * (1.0 - p)
+    assert set(got) == set(expect)
+    for key in expect:
+        assert got[key] == pytest.approx(expect[key], abs=1e-6), key
+    assert csr_mod.coalesce_ic(gc) is gc            # idempotent, same object
+    assert rrset.detect_dedup_mode(gc) == "none"

@@ -71,6 +71,33 @@ def test_device_store_matches_build_store_single_batch():
                                   np.asarray(ref.rr_ids))
 
 
+def test_store_no_mirror_drift_when_every_row_overflowed():
+    """Regression: a batch whose *every* row overflowed may report lengths
+    beyond the materialized width (truncated nodes, true pre-truncation
+    length).  The device store clamps to the width; the host compaction
+    previously repeated row ids by the raw length while masking elements by
+    width — the counts drifted apart and ``IncrementalRRStore.append_batch``
+    crashed with a broadcast error.  Both stores must clamp identically."""
+    rng = np.random.default_rng(11)
+    n = 40
+    nodes = rng.integers(0, n, (6, 4))
+    lens = np.full(6, 9)                    # every row overflowed: 9 > width 4
+    dev = cov.DeviceRRStore(n, capacity=4)
+    dev.append_batch((nodes, lens))
+    host = cov.IncrementalRRStore(n, capacity=4)
+    host.append_batch((nodes, lens))        # used to raise ValueError
+    td, nd = (int(x) for x in jax.device_get((dev._t_dev, dev._nrr_dev)))
+    assert (dev.n_elems, dev.n_rr) == (td, nd) == (24, 6)
+    assert (host._t, host.n_rr) == (24, 6)
+    np.testing.assert_array_equal(np.asarray(dev.snapshot().rr_flat),
+                                  np.asarray(host.snapshot().rr_flat))
+    np.testing.assert_array_equal(np.asarray(dev.snapshot().rr_ids),
+                                  np.asarray(host.snapshot().rr_ids))
+    # build_store shares the compaction; its counts must agree too
+    ref = cov.build_store((nodes, lens), n)
+    assert ref.n_rr == 6 and int(ref.rr_flat.shape[0]) == 24
+
+
 def test_device_store_accepts_overflowed_truncated_rows():
     """Overflowed lanes deliver truncated rows (length == qcap); the store
     must take them verbatim like the host path does."""
@@ -175,8 +202,9 @@ def test_refill_sample_device_padding_rows():
 
 # ------------------------------------------------------ satellite bits
 
-def test_interpret_defaults_to_backend():
+def test_interpret_defaults_to_backend(monkeypatch):
     from repro.kernels import ops
+    monkeypatch.delenv(ops._ENV_FLAG, raising=False)
     assert ops.INTERPRET is None                 # auto, no import side effect
     assert ops.resolve_interpret() == (jax.default_backend() == "cpu")
     assert ops.resolve_interpret(True) is True   # per-call wins
@@ -184,6 +212,19 @@ def test_interpret_defaults_to_backend():
         ops.INTERPRET = False                    # module override for tests
         assert ops.resolve_interpret() is False
         assert ops.resolve_interpret(True) is True
+    finally:
+        ops.INTERPRET = None
+    # env override (the CI interpret-mode job): below the module override,
+    # above the backend default
+    monkeypatch.setenv(ops._ENV_FLAG, "1")
+    assert ops.resolve_interpret() is True
+    monkeypatch.setenv(ops._ENV_FLAG, "false")
+    assert ops.resolve_interpret() is False
+    assert ops.resolve_interpret(True) is True
+    try:
+        ops.INTERPRET = True
+        monkeypatch.setenv(ops._ENV_FLAG, "0")
+        assert ops.resolve_interpret() is True   # module override wins
     finally:
         ops.INTERPRET = None
 

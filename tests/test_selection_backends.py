@@ -1,0 +1,218 @@
+"""Selection backends: CELF-sketch identity with the fused scan, sketch
+estimator guarantees, the solver's ``selection=`` knob end-to-end, and the
+per-path seed-quality regression against the numpy IMM oracle."""
+import numpy as np
+import jax
+import pytest
+
+from repro.graph import csr as csr_mod
+from repro.graph import generators, weights
+from repro.core import coverage as cov, forward, oracle, sketch as sk
+from repro.core.engine import make_engine
+from repro.core.imm import IMMSolver, imm
+
+
+def _wc_graph(n=40, m=200, seed=0):
+    src, dst = generators.erdos_renyi(n, m, seed=seed)
+    return weights.wc_weights(csr_mod.from_edges(src, dst, n))
+
+
+def _random_pool(rng, n, batches=4, count=60, max_len=8, sketch_k=None):
+    dev = cov.DeviceRRStore(n, capacity=8, sketch_k=sketch_k)
+    rr_all = []
+    for _ in range(batches):
+        lens = rng.integers(1, max_len, count)
+        nodes = np.zeros((count, int(lens.max())), np.int64)
+        for i, ln in enumerate(lens):
+            nodes[i, :ln] = rng.choice(n, size=ln, replace=False)
+        dev.append_batch((nodes, lens))
+        rr_all += [nodes[j, :lens[j]].tolist() for j in range(count)]
+    return dev, rr_all
+
+
+# ----------------------------------------------------- celf == fused scan
+
+def test_celf_identical_to_fused_with_exact_sketch():
+    """Acceptance bar: sketch size >= n_rr (mod bucketing is injective) =>
+    estimates are exact and the CELF path returns the fused-scan seed set,
+    gains and covered fraction, bit for bit."""
+    rng = np.random.default_rng(3)
+    n, k = 50, 6
+    dev, rr_all = _random_pool(rng, n, sketch_k=256)   # 240 rows < 256 buckets
+    assert dev.n_rr <= dev.sketch_k
+    res_c = cov.select_seeds_celf(dev, k)
+    res_f = dev.select(k, method="flat")
+    seeds_o, frac_o = oracle.greedy_max_coverage(rr_all, n, k)
+    assert np.asarray(res_c.seeds).tolist() == \
+        np.asarray(res_f.seeds).tolist() == seeds_o
+    np.testing.assert_array_equal(np.asarray(res_c.gains),
+                                  np.asarray(res_f.gains))
+    assert float(res_c.frac) == pytest.approx(frac_o, abs=1e-6)
+
+
+@pytest.mark.parametrize("sketch_k", (32, 64, None))
+def test_celf_identical_for_any_sketch_size(sketch_k):
+    """Correctness is structural: lossy sketches only change how many exact
+    evaluations happen, never the selected seeds (submodular upper bounds +
+    exact top-candidate re-evaluation)."""
+    rng = np.random.default_rng(7)
+    n, k = 45, 5
+    dev, rr_all = _random_pool(rng, n, sketch_k=sketch_k)
+    stats = {}
+    res_c = cov.select_seeds_celf(dev, k, stats_out=stats, eval_batch=4)
+    res_f = dev.select(k, method="flat")
+    assert np.asarray(res_c.seeds).tolist() == np.asarray(res_f.seeds).tolist()
+    np.testing.assert_array_equal(np.asarray(res_c.gains),
+                                  np.asarray(res_f.gains))
+    # lazy: strictly fewer exact evals than full greedy's k * n
+    assert 0 < stats["n_exact_evals"] < k * n
+
+
+def test_celf_on_engine_batches_matches_oracle():
+    g = _wc_graph(n=45, m=220, seed=4)
+    g_rev = csr_mod.reverse(g)
+    eng = make_engine("queue", g_rev, batch=48)
+    dev = cov.DeviceRRStore(45, sketch_k=256)
+    rr_all = []
+    for i in range(3):
+        b = eng.sample(jax.random.key(i))
+        dev.append_batch(b)
+        nodes, lens = np.asarray(b.nodes), np.asarray(b.lengths)
+        rr_all += [nodes[j, :lens[j]].tolist() for j in range(b.n_sets)]
+    res = dev.select(5, method="celf")
+    seeds_o, frac_o = oracle.greedy_max_coverage(rr_all, 45, 5)
+    assert np.asarray(res.seeds).tolist() == seeds_o
+    assert float(res.frac) == pytest.approx(frac_o, abs=1e-6)
+
+
+# ------------------------------------------------ sketch estimator bounds
+
+def test_sketch_gains_are_lower_bounds_and_exact_when_wide():
+    """Δocc(v | ∅) <= exact Occur[v] always; equality when the bucketing is
+    injective (sketch_k >= n_rr, mod hashing)."""
+    rng = np.random.default_rng(5)
+    n = 30
+    for sketch_k, exact in ((256, True), (32, False)):
+        dev, rr_all = _random_pool(rng, n, batches=2, count=50,
+                                   sketch_k=sketch_k)
+        occur = np.zeros(n, np.int64)
+        for rr in rr_all:
+            for v in rr:
+                occur[v] += 1
+        cov_sk = jax.device_put(np.zeros(dev.sketch_k // 32, np.uint32))
+        deltas = np.asarray(jax.device_get(
+            sk.union_gains(dev.sketch_words(), cov_sk)))[:n]
+        assert (deltas <= occur).all()
+        if exact:
+            np.testing.assert_array_equal(deltas, occur)
+
+
+def test_sketch_from_flat_matches_incremental():
+    """A sketch rebuilt from the live flat pool equals the incrementally
+    maintained one (same bucketing, same row ids)."""
+    rng = np.random.default_rng(9)
+    n, k = 35, 64
+    dev, _ = _random_pool(rng, n, batches=3, count=20, sketch_k=k)
+    occ = sk.sketch_from_flat(dev._flat, dev._ids, dev._valid,
+                              n=n, k=dev.sketch_k, mode="mod")
+    rebuilt = sk.pack_sketch(occ, words=dev.sketch_k // 32)
+    np.testing.assert_array_equal(np.asarray(rebuilt),
+                                  np.asarray(dev.sketch_words()))
+
+
+def test_celf_identical_with_mix_hash_mode():
+    """The Knuth-multiplicative bucketing is just another lossy sketch:
+    seeds stay identical to the fused scan, and the incremental mix-mode
+    sketch matches its flat rebuild."""
+    rng = np.random.default_rng(21)
+    n, k = 40, 4
+    dev = cov.DeviceRRStore(n, capacity=8, sketch_k=64, sketch_mode="mix")
+    for _ in range(3):
+        lens = rng.integers(1, 7, 40)
+        nodes = np.zeros((40, int(lens.max())), np.int64)
+        for i, ln in enumerate(lens):
+            nodes[i, :ln] = rng.choice(n, size=ln, replace=False)
+        dev.append_batch((nodes, lens))
+    res_c = cov.select_seeds_celf(dev, k)
+    res_f = dev.select(k, method="flat")
+    assert np.asarray(res_c.seeds).tolist() == np.asarray(res_f.seeds).tolist()
+    occ = sk.sketch_from_flat(dev._flat, dev._ids, dev._valid,
+                              n=n, k=dev.sketch_k, mode="mix")
+    np.testing.assert_array_equal(
+        np.asarray(sk.pack_sketch(occ, words=dev.sketch_k // 32)),
+        np.asarray(dev.sketch_words()))
+
+
+def test_linear_count_estimator():
+    assert sk.linear_count(0, 64) == pytest.approx(0.0)
+    # small occupancy ~ cardinality; high occupancy corrects upward
+    assert sk.linear_count(4, 256) == pytest.approx(4.0, rel=0.02)
+    assert sk.linear_count(60, 64) > 60
+    assert np.isfinite(sk.linear_count(64, 64))
+
+
+def test_union_popcount_kernel_matches_numpy():
+    from repro.kernels import ops as kops
+    rng = np.random.default_rng(13)
+    rows, w = 37, 4
+    words = rng.integers(0, 2**32, (rows, w), dtype=np.uint64).astype(np.uint32)
+    covw = rng.integers(0, 2**32, (w,), dtype=np.uint64).astype(np.uint32)
+    got = np.asarray(kops.sketch_union_popcount(words, covw))
+    expect = np.array([
+        bin(int.from_bytes((words[i] | covw).tobytes(), "little")).count("1")
+        for i in range(rows)])
+    np.testing.assert_array_equal(got, expect)
+
+
+# ------------------------------------------- solver knob + transfer guard
+
+@pytest.mark.parametrize("selection", ("fused", "bitset", "celf-sketch"))
+def test_solver_selection_knob_under_transfer_guard(selection):
+    """Every selection backend must run device-resident end-to-end: the
+    outer guard raises on any implicit host<->device transfer."""
+    g = _wc_graph(n=50, m=250, seed=5)
+    solver = IMMSolver(g, engine="queue", batch=64, seed=0,
+                       selection=selection)
+    with jax.transfer_guard("disallow"):
+        seeds, est, stats = solver.solve(3, 0.5, max_theta=256)
+    assert len(set(seeds.tolist())) == 3
+    assert est > 0 and stats.selection == selection
+
+
+def test_solver_selection_paths_agree():
+    g = _wc_graph(n=60, m=300, seed=6)
+    results = {}
+    for sel in ("fused", "bitset", "celf-sketch"):
+        seeds, est, _ = imm(g, 4, 0.5, engine="queue", batch=64, seed=3,
+                            selection=sel)
+        results[sel] = (seeds.tolist(), round(est, 4))
+    assert results["fused"] == results["bitset"] == results["celf-sketch"]
+
+
+def test_solver_rejects_unknown_selection():
+    g = _wc_graph(n=20, m=60, seed=1)
+    with pytest.raises(ValueError, match="selection"):
+        IMMSolver(g, selection="nope")
+
+
+# ------------------------------------------ seed-quality regression (MC)
+
+@pytest.mark.parametrize("selection", ("fused", "bitset", "celf-sketch"))
+def test_seed_quality_within_guarantee_vs_oracle(selection):
+    """Empirical spread of each path's seeds (forward MC) clears the
+    (1 - 1/e - eps) bound against the serial numpy oracle's seeds on a
+    fixed-RNG graph (10% slack absorbs the MC noise on both sides)."""
+    n, k, eps = 30, 3, 0.3
+    g = _wc_graph(n=n, m=150, seed=12)
+    g_rev = csr_mod.reverse(g)
+    seeds_oracle, _, _ = oracle.imm_oracle(
+        np.asarray(g_rev.offsets), np.asarray(g_rev.indices),
+        np.asarray(g_rev.weights), n, k, eps, seed=0, max_theta=2048)
+    seeds, _, _ = imm(g, k, eps, engine="queue", batch=64, seed=2,
+                      selection=selection, max_theta=2048)
+    spread_sel = forward.ic_spread(jax.random.key(7), g, seeds.tolist(),
+                                   n_sims=2048)
+    spread_ora = forward.ic_spread(jax.random.key(8), g, seeds_oracle,
+                                   n_sims=2048)
+    bound = (1.0 - 1.0 / np.e - eps) * spread_ora
+    assert spread_sel >= bound * 0.9, (selection, spread_sel, spread_ora)
