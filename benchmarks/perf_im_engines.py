@@ -109,6 +109,80 @@ def bench_selection(n=2000, r=4, k=10, pool_rows=2048, batch=256,
     return out
 
 
+def bench_sharded(n=100_000, rows=1 << 20, k=10, sketch_k=1024,
+                  batch_rows=8192, mean_len=8, mesh_spec=None, seed=0):
+    """Selection at the post-bitset-matrix scale on the mesh-sharded pool.
+
+    Builds a synthetic RR pool past the point where the packed bitset
+    matrix no longer fits (default n=1e5, θ=2^20 ≈ 1e6: the matrix would be
+    ``row_capacity · ceil(n/32) · 4`` ≈ 13 GB), then times the fused scan
+    and CELF-sketch selection on the sharded store.  Synthetic sets (random
+    base + stride, row-unique by construction) keep pool-building O(rows)
+    — selection cost does not depend on how the sets were sampled.
+
+    Also the acceptance check for the packed-word sketch: asserts that *no*
+    (n+1, k) bool occupancy buffer exists anywhere (store attribute and a
+    live-array scan) and records the bool-vs-packed memory comparison.
+    Writes ``experiments/bench/BENCH_sharded.json``.
+    """
+    from repro.launch.mesh import make_sample_mesh
+    mesh = make_sample_mesh(mesh_spec)
+    store = cov.ShardedDeviceRRStore(n, capacity=batch_rows * mean_len,
+                                     sketch_k=sketch_k, mesh=mesh)
+    rng = np.random.default_rng(seed)
+    t0 = time.perf_counter()
+    stride = max(n // (2 * mean_len + 2), 1)
+    while store.n_rr < rows:
+        cnt = min(batch_rows, rows - store.n_rr)
+        lens = rng.integers(1, 2 * mean_len, cnt)
+        base = rng.integers(0, n, cnt)
+        nodes = (base[:, None]
+                 + np.arange(lens.max(), dtype=np.int64)[None, :] * stride) % n
+        store.append_batch((nodes, lens))
+    build_s = time.perf_counter() - t0
+    # ---- acceptance: packed-word occupancy end to end, no bool buffer
+    assert not hasattr(store, "_occ"), "bool occupancy resurrected"
+    packed_bytes = store.sketch_bytes()
+    bool_bytes = store.sketch_rows * store.sketch_k          # 1 byte/bucket
+    assert packed_bytes * 8 == bool_bytes
+    assert not any(
+        a.dtype == bool and a.ndim >= 2 and store.sketch_k in a.shape[1:]
+        for a in jax.live_arrays()), "live (..., k) bool occupancy found"
+    n_words = (n + 31) // 32
+    bitset_bytes = store.row_capacity() * n_words * 4 * store.n_shards
+    out = {"graph": {"kind": "synthetic", "n": n, "mean_len": mean_len},
+           "mesh": {"devices": store.n_shards,
+                    "pool_sharding": f"{store.axis}:{store.n_shards}",
+                    "per_device_pool_bytes": store.per_device_pool_bytes()},
+           "pool": {"rows": store.n_rr, "elements": store.n_elems,
+                    "build_s": round(build_s, 2)},
+           "sketch_memory": {
+               "packed_bytes": packed_bytes, "bool_bytes": bool_bytes,
+               "ratio": bool_bytes / max(packed_bytes, 1),
+               "sketch_k": store.sketch_k},
+           "bitset_matrix_bytes": bitset_bytes,
+           "bitset_skipped": bitset_bytes > (1 << 31),
+           "params": {"k": k, "seed": seed}, "paths": {}}
+    seeds_by = {}
+    for path, fn in (("fused", lambda: store.select(k, method="flat")),
+                     ("celf-sketch",
+                      lambda: cov.select_seeds_celf(store, k))):
+        t0 = time.perf_counter()
+        res = fn()
+        jax.block_until_ready(res.seeds)
+        dt = time.perf_counter() - t0
+        seeds_by[path] = np.asarray(res.seeds).tolist()
+        out["paths"][path] = {"wall_s": round(dt, 3),
+                              "seeds": seeds_by[path],
+                              "frac": round(float(res.frac), 6)}
+        report(f"perf_im/sharded/{path}", dt * 1e6, f"wall={dt:.2f}s")
+    out["seeds_identical"] = seeds_by["fused"] == seeds_by["celf-sketch"]
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, "BENCH_sharded.json"), "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
 def bench_pipeline(n=N, r=R, k=10, eps=0.4, max_theta=4096, batch=512,
                    engines=PIPELINE_ENGINES, seed=0):
     """Time end-to-end ``imm()`` per engine; returns the result dict."""
@@ -210,15 +284,26 @@ if __name__ == "__main__":
                     help="skip the micro-step section (CI smoke)")
     ap.add_argument("--selection-only", action="store_true",
                     help="run only the selection-backend comparison")
+    ap.add_argument("--sharded", action="store_true",
+                    help="mesh-sharded selection sweep past the bitset-"
+                         "matrix limit (writes BENCH_sharded.json)")
     ap.add_argument("--pool-rows", type=int, default=2048,
                     help="RR pool size for --selection-only")
+    ap.add_argument("--rows", type=int, default=None,
+                    help="target pool rows for --sharded (default 2^20)")
     ap.add_argument("--sketch-k", type=int, default=512)
+    ap.add_argument("--mesh", default=None,
+                    help="--sharded mesh spec (device count or 'axis:N')")
     args = ap.parse_args()
     pkw = dict(k=args.k, eps=args.eps, max_theta=args.max_theta,
                batch=args.batch, engines=tuple(args.engines.split(",")))
     skw = dict(n=args.n, r=args.r, k=args.k, pool_rows=args.pool_rows,
                batch=args.batch, sketch_k=args.sketch_k)
-    if args.selection_only:
+    if args.sharded:
+        rows = args.rows if args.rows is not None else 1 << 20
+        bench_sharded(n=args.n, rows=rows, k=args.k,
+                      sketch_k=args.sketch_k, mesh_spec=args.mesh)
+    elif args.selection_only:
         bench_selection(**skw)
     elif args.pipeline_only:
         bench_pipeline(n=args.n, r=args.r, **pkw)

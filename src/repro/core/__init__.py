@@ -3,6 +3,7 @@ from repro.core.engine import (SamplerEngine, RRBatch, register_engine,
                                get_engine, make_engine, list_engines,
                                resolve_engine_name)
 from repro.core.coverage import (RRStore, IncrementalRRStore, DeviceRRStore,
+                                 ShardedDeviceRRStore,
                                  build_store, merge_stores, occur_histogram,
                                  select_seeds, select_seeds_device,
                                  select_seeds_celf)
@@ -17,7 +18,8 @@ __all__ = [
     "imm", "IMMSolver",
     "SamplerEngine", "RRBatch", "register_engine", "get_engine",
     "make_engine", "list_engines", "resolve_engine_name",
-    "RRStore", "IncrementalRRStore", "DeviceRRStore", "build_store",
+    "RRStore", "IncrementalRRStore", "DeviceRRStore",
+    "ShardedDeviceRRStore", "build_store",
     "merge_stores", "occur_histogram", "select_seeds", "select_seeds_device",
     "select_seeds_celf",
     "sample_rrsets_queue", "to_lists",

@@ -9,14 +9,22 @@ vectorized processing we carry ``rr_ids`` = the row id of every flat element
   per-RR membership scan of u   -> equality scan + segment_max by rr_ids
   Covered flag + decrement      -> mask + segment scatter-sub on Occur
 
-The pool itself is device-resident (:class:`DeviceRRStore`): appends are
-jit'd rank-scatters into doubling donated buffers and the fused selection
-(:func:`select_seeds_device`) runs on the capacity-padded live buffers, so
-the whole IMM hot loop executes under ``jax.transfer_guard("disallow")``.
+The pool itself is *mesh-resident* (:class:`ShardedDeviceRRStore`): the flat
+buffers carry a leading shard dimension equal to the device-mesh size and
+stay sharded over the ``samples`` axis — each device keeps the rows it was
+dealt, rr_ids are **local**, and appends are per-shard jit'd rank-scatters
+into donated doubling buffers.  Every selection backend (fused scan, Pallas
+bitset, CELF-sketch) runs as a ``shard_map`` over the same sharded views:
+Occur is psum-reduced, argmax is replicated math, coverage updates stay
+local — per seed the only collective is one ``psum(n)`` (plus one scalar
+psum for the gain).  A single device is simply the mesh=1 special case of
+the same code path; there is no separate single-device implementation.
 
-Distributed mode: RR rows are sharded across devices (each device keeps the
-rows it sampled); ``Occur`` is psum-reduced, argmax is replicated math, and
-coverage updates stay local — per seed the only collective is one psum(n).
+The per-node coverage sketch is maintained **as packed uint32 words**
+(``core/sketch.py``), replicated across the mesh: every device folds the
+identical full batch into its replica (cheaper than any cross-device OR of
+sketch deltas — see DESIGN.md §5), and the CELF sweep scores a disjoint
+stripe of candidates per device, combined by one psum.
 """
 from __future__ import annotations
 
@@ -26,7 +34,9 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map_unchecked, pvary
 from repro.core import sketch as sketch_mod
 from repro.core.packing import rank_positions
 from repro.kernels.bitset import _popcount
@@ -51,7 +61,7 @@ def _compact_padded(nodes, lens, base: int = 0):
     store (paper Alg. 6 lines 4-11, vectorized).
 
     Lengths are clamped to ``[0, W]`` exactly like the device append path
-    (:func:`_append_scatter`): an overflowed lane may report its true
+    (:func:`_append_scatter_local`): an overflowed lane may report its true
     pre-truncation length while ``nodes`` only materializes ``W`` columns —
     without the clamp the element count (masked by width) and the row-id
     count (repeated by raw length) drift apart and the host mirror
@@ -152,26 +162,46 @@ class IncrementalRRStore:
 
 
 # ---------------------------------------------------------------------------
-# Device-resident RR pool (paper §3.5 memory layout, kept on-accelerator).
+# Mesh-sharded device-resident RR pool (paper §3.5 layout × DiFuseR sharding).
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("width",))
-def _batch_counts(lens, *, width):
-    """(elements, valid rows) of one padded batch, as a (2,) device vector."""
-    lens = jnp.minimum(jnp.maximum(lens.astype(jnp.int32), 0), width)
-    return jnp.stack([lens.sum(dtype=jnp.int32),
-                      (lens > 0).sum(dtype=jnp.int32)])
+_PACK = 1 << 15   # packed-append window (elements per DUS write)
+
+_EVAL_CHUNK = 8   # broadcast width of one exact-eval pass
 
 
-@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3, 4))
-def _append_scatter(flat, ids, valid, t, n_rr, nodes, lens):
-    """Rank-scatter one padded batch into the live device buffers, in place.
+def _default_mesh() -> Mesh:
+    """The mesh=1 special case: a single-device mesh over the default
+    device.  Single-device execution is *not* a separate code path — it is
+    this mesh driving the same shard_map programs with psum over one shard."""
+    return Mesh(np.asarray(jax.devices()[:1]), ("samples",))
 
-    All five state operands are donated, so XLA updates the pool buffers
-    without a copy; ``t``/``n_rr`` ride along as device scalars.  Element
-    ranks are a row-major prefix sum of the validity mask (rows stay
+
+@functools.partial(jax.jit, static_argnames=("pad", "n"))
+def _pad_batch_rows(nodes, lens, *, pad, n):
+    """Append ``pad`` zero-length sentinel rows so the batch divides the
+    shard count (jitted: ``jnp.full`` outside jit commits the fill scalar
+    host->device and trips the transfer guard)."""
+    w = nodes.shape[1]
+    return (jnp.concatenate([nodes, jnp.full((pad, w), n, nodes.dtype)]),
+            jnp.concatenate([lens, jnp.zeros((pad,), lens.dtype)]))
+
+
+@functools.partial(jax.jit, static_argnames=("d", "width"))
+def _shard_counts(lens, *, d, width):
+    """Per-shard (elements, valid rows) of one padded batch: (D, 2) int32."""
+    l = jnp.minimum(jnp.maximum(lens.astype(jnp.int32), 0), width)
+    l = l.reshape(d, -1)
+    return jnp.stack([l.sum(axis=1, dtype=jnp.int32),
+                      (l > 0).sum(axis=1, dtype=jnp.int32)], axis=1)
+
+
+def _append_scatter_local(flat, ids, valid, t, n_rr, nodes, lens):
+    """Rank-scatter one padded batch into one shard's live buffers.
+
+    Element ranks are a row-major prefix sum of the validity mask (rows stay
     contiguous, matching the host compaction order exactly); rows with
-    length 0 are padding and receive no row id.
+    length 0 are padding and receive no row id.  Row ids are shard-*local*.
     """
     cap = flat.shape[0]
     r, w = nodes.shape
@@ -190,13 +220,8 @@ def _append_scatter(flat, ids, valid, t, n_rr, nodes, lens):
             n_rr + row_valid.sum(dtype=jnp.int32))
 
 
-_PACK = 1 << 15   # packed-append window (elements per DUS write)
-
-
-@functools.partial(jax.jit, static_argnames=("pack", "n"),
-                   donate_argnums=(0, 1, 2, 3, 4))
-def _append_packed(flat, ids, valid, t, n_rr, nodes, lens, *, pack, n):
-    """Rank-scatter append, packed variant for wide batches.
+def _append_packed_local(flat, ids, valid, t, n_rr, nodes, lens, *, pack, n):
+    """Rank-scatter append, packed variant for wide batches (one shard).
 
     XLA:CPU lowers scatter to a serial per-update loop, so the plain
     rank-scatter costs O(R·W) scatter updates even though only
@@ -228,20 +253,8 @@ def _append_packed(flat, ids, valid, t, n_rr, nodes, lens, *, pack, n):
             n_rr + row_valid.sum(dtype=jnp.int32))
 
 
-@functools.partial(jax.jit, static_argnames=("newcap", "n"))
-def _grow_buffers(flat, ids, valid, *, newcap, n):
-    # no donation: the outputs are larger than the inputs, so aliasing is
-    # impossible — growth is the one amortized O(cap) device copy
-
-    pad = newcap - flat.shape[0]
-    return (jnp.concatenate([flat, jnp.full((pad,), n, jnp.int32)]),
-            jnp.concatenate([ids, jnp.zeros((pad,), jnp.int32)]),
-            jnp.concatenate([valid, jnp.zeros((pad,), bool)]))
-
-
-@functools.partial(jax.jit, static_argnames=("num_rows", "n_words"))
-def _bitset_from_flat(flat, ids, valid, *, num_rows, n_words):
-    """Pack the flat pool into a (num_rows, n_words) membership bit matrix.
+def _bitset_from_flat_local(flat, ids, valid, *, num_rows, n_words):
+    """Pack one shard's flat pool into a (num_rows, n_words) bit matrix.
 
     Elements are row-unique (RRBatch contract), so within one (row, word)
     cell every scattered bit is distinct and scatter-add == scatter-or.
@@ -255,78 +268,213 @@ def _bitset_from_flat(flat, ids, valid, *, num_rows, n_words):
         jnp.clip(ids, 0, num_rows - 1), w].add(bit, mode="drop")
 
 
-class DeviceRRStore:
-    """Growing CSR-of-RR pool that *lives on the accelerator* (DESIGN.md §3).
+@functools.lru_cache(maxsize=None)
+def _mesh_store_fns(mesh: Mesh):
+    """Per-mesh jitted shard_map programs for the pool (append/grow/sketch).
 
-    The numpy :class:`IncrementalRRStore` pulls every batch to the host and
-    re-uploads the pool before each selection — exactly the host
-    orchestration the paper's §3.5 layout avoids.  Here ``append_batch`` is
-    one jit'd rank-scatter into doubling device buffers (``donate_argnums``
-    ⇒ in-place, amortized O(1) growth) and selection runs directly on the
-    capacity-padded live buffers, so shapes stay stable across rounds and
-    the fused greedy compiles O(log rounds) times instead of every round.
+    Cached on the mesh so every store on the same mesh shares one jit cache
+    (shapes recompile only at capacity doublings, as before).
+    """
+    ax = mesh.axis_names[0]
+    buf, vec, b3 = P(ax, None), P(ax), P(ax, None, None)
 
-    Host knowledge: the exact element/row counts are mirrored on the host
-    via one *explicit* scalar fetch per append (``jax.device_get`` of a (2,)
-    vector) — the same per-relaunch ``N_RR`` readback gIM's Alg. 6 host loop
-    performs, and the only host↔device traffic an append causes.  Explicit
-    transfers are permitted under ``jax.transfer_guard("disallow")``, which
-    the IMM driver holds over the whole sampling+selection loop.
+    def _wrap_append(local_fn):
+        def local(flat, ids, valid, t, nrr, nodes, lens):
+            out = local_fn(flat[0], ids[0], valid[0], t[0], nrr[0],
+                           nodes[0], lens[0])
+            return tuple(x[None] for x in out)
+        return shard_map_unchecked(
+            local, mesh=mesh,
+            in_specs=(buf, buf, buf, vec, vec, b3, buf),
+            out_specs=(buf, buf, buf, vec, vec))
 
-    ``snapshot()`` returns a classic :class:`RRStore` view sliced to the
-    live extent (device-side slice, no host transfer) for compatibility;
-    the fused selection (:func:`select_seeds_device`) bypasses it and reads
-    the padded buffers directly.  A snapshot is valid until the next
-    ``append_batch`` (donation retires the previous buffers).
+    @functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3, 4))
+    def append_scatter(flat, ids, valid, t, nrr, nodes, lens):
+        return _wrap_append(_append_scatter_local)(
+            flat, ids, valid, t, nrr, nodes, lens)
+
+    @functools.partial(jax.jit, static_argnames=("pack", "n"),
+                       donate_argnums=(0, 1, 2, 3, 4))
+    def append_packed(flat, ids, valid, t, nrr, nodes, lens, *, pack, n):
+        return _wrap_append(functools.partial(
+            _append_packed_local, pack=pack, n=n))(
+            flat, ids, valid, t, nrr, nodes, lens)
+
+    @functools.partial(jax.jit, static_argnames=("newcap", "n"))
+    def grow(flat, ids, valid, *, newcap, n):
+        # no donation: the outputs are larger than the inputs, so aliasing
+        # is impossible — growth is the one amortized O(cap) device copy
+        def local(f, i, v):
+            pad = newcap - f.shape[1]
+            return (jnp.concatenate([f, jnp.full((1, pad), n, jnp.int32)], 1),
+                    jnp.concatenate([i, jnp.zeros((1, pad), jnp.int32)], 1),
+                    jnp.concatenate([v, jnp.zeros((1, pad), bool)], 1))
+        return shard_map_unchecked(
+            local, mesh=mesh, in_specs=(buf, buf, buf),
+            out_specs=(buf, buf, buf))(flat, ids, valid)
+
+    @functools.partial(jax.jit, static_argnames=("k", "mode"),
+                       donate_argnums=(0,))
+    def sketch_fold(sk, nodes, lens, base, *, k, mode):
+        # replication beats sharding for the fold: every device folds the
+        # identical full batch into its replica — zero collectives, and the
+        # packed fold is O(batch · log batch) regardless of sketch size
+        def local(sk, nodes, lens, base):
+            return sketch_mod.fold_batch_packed(
+                sk[0], nodes, lens, base, k=k, mode=mode)[None]
+        return shard_map_unchecked(
+            local, mesh=mesh, in_specs=(b3, P(), P(), P()),
+            out_specs=b3)(sk, nodes, lens, base)
+
+    @functools.partial(jax.jit, static_argnames=("num_rows", "n_words"))
+    def bitset_build(flat, ids, valid, *, num_rows, n_words):
+        def local(flat, ids, valid):
+            return _bitset_from_flat_local(
+                flat[0], ids[0], valid[0],
+                num_rows=num_rows, n_words=n_words)[None]
+        return shard_map_unchecked(
+            local, mesh=mesh, in_specs=(buf, buf, buf),
+            out_specs=b3)(flat, ids, valid)
+
+    @functools.partial(jax.jit, static_argnames=("n_rows", "k", "mode"))
+    def sketch_from_pool(flat, ids, valid, *, n_rows, k, mode):
+        # on-demand sketch for stores built without an incremental one:
+        # per-shard partial fold by *local* row ids (collisions across
+        # shards only cost precision, never soundness — Δocc stays a lower
+        # bound), combined into identical replicas by one psum-OR
+        # (all_gather + OR-reduce over the shard axis)
+        def local(flat, ids, valid):
+            v, b = sketch_mod.flat_to_packed_bits(
+                flat[0], ids[0], valid[0], n_rows=n_rows, k=k, mode=mode)
+            part = sketch_mod.scatter_or_bits(
+                jnp.zeros((n_rows, k // 32), jnp.uint32), v, b)
+            g = jax.lax.all_gather(part, ax)
+            return jax.lax.reduce(g, jnp.uint32(0),
+                                  jax.lax.bitwise_or, (0,))[None]
+        return shard_map_unchecked(
+            local, mesh=mesh, in_specs=(buf, buf, buf),
+            out_specs=b3)(flat, ids, valid)
+
+    class Fns:
+        pass
+
+    fns = Fns()
+    fns.append_scatter = append_scatter
+    fns.append_packed = append_packed
+    fns.grow = grow
+    fns.sketch_fold = sketch_fold
+    fns.bitset_build = bitset_build
+    fns.sketch_from_pool = sketch_from_pool
+    return fns
+
+
+class ShardedDeviceRRStore:
+    """Growing CSR-of-RR pool sharded over a device mesh (DESIGN.md §5).
+
+    The flat pool (``flat``/``ids``/``valid``) carries a leading shard
+    dimension equal to the mesh size and is sharded over the ``samples``
+    axis: each device keeps the rows it was dealt, row ids are *local*, and
+    ``append_batch`` is one jit'd ``shard_map`` rank-scatter per shard into
+    donated doubling buffers (amortized O(1) growth, like the paper's
+    Alg. 6 pool but per device).  Batches are dealt to shards in contiguous
+    row blocks; a batch that is already sharded on the same mesh (a sharded
+    engine's ``sample_sharded``) is re-laid-out by one explicit
+    ``device_put`` with no host round-trip.
+
+    The per-node coverage sketch is maintained **directly as packed uint32
+    words** — (D, n_pad, k/32), a replica per shard, folded by every device
+    from the identical replicated batch with canonical *global* (batch
+    order) row numbering.  No (n+1, k) bool occupancy buffer exists on the
+    append path (the ~8× sketch-memory cut of the ROADMAP).
+
+    Host knowledge: exact per-shard element/row counts are mirrored on the
+    host via one *explicit* (D, 2) scalar fetch per append — the same
+    per-relaunch ``N_RR`` readback gIM's Alg. 6 host loop performs, and the
+    only host↔device traffic an append causes.  Explicit transfers are
+    permitted under ``jax.transfer_guard("disallow")``, which the IMM
+    driver holds over the whole sampling+selection loop — on a mesh of any
+    size.
+
+    ``DeviceRRStore`` (the historical single-device pool) is this class on
+    a 1-device mesh: shard_map over one shard, psum over one device.
     """
 
     DEFAULT_SKETCH_K = 1024
 
     def __init__(self, n_nodes: int, capacity: int = 4096,
-                 sketch_k: int | None = None, sketch_mode: str = "mod"):
+                 sketch_k: int | None = None, sketch_mode: str = "mod",
+                 mesh: Mesh | None = None):
         if n_nodes >= np.iinfo(np.int32).max:
             raise ValueError("item space must fit int32")
         self.n_nodes = n_nodes
-        cap = _ceil_pow2(max(capacity, 1))
-        self._flat = jnp.full((cap,), n_nodes, jnp.int32)
-        self._ids = jnp.zeros((cap,), jnp.int32)
-        self._valid = jnp.zeros((cap,), bool)
-        self._t_dev = jnp.zeros((), jnp.int32)
-        self._nrr_dev = jnp.zeros((), jnp.int32)
-        self._t = 0                      # host mirrors (exact)
-        self._n_rr = 0
+        self.mesh = mesh if mesh is not None else _default_mesh()
+        self.axis = self.mesh.axis_names[0]
+        self.n_shards = d = int(self.mesh.devices.size)
+        self._sh_buf = NamedSharding(self.mesh, P(self.axis, None))
+        self._sh_vec = NamedSharding(self.mesh, P(self.axis))
+        self._sh_b3 = NamedSharding(self.mesh, P(self.axis, None, None))
+        self._sh_rep = NamedSharding(self.mesh, P())
+        cap = _ceil_pow2(max(-(-capacity // d), 1))
+        self._flat = jax.device_put(
+            np.full((d, cap), n_nodes, np.int32), self._sh_buf)
+        self._ids = jax.device_put(np.zeros((d, cap), np.int32), self._sh_buf)
+        self._valid = jax.device_put(np.zeros((d, cap), bool), self._sh_buf)
+        self._t_dev = jax.device_put(np.zeros(d, np.int32), self._sh_vec)
+        self._nrr_dev = jax.device_put(np.zeros(d, np.int32), self._sh_vec)
+        self._t_loc = np.zeros(d, np.int64)      # host mirrors (exact)
+        self._nrr_loc = np.zeros(d, np.int64)
         self._cache: RRStore | None = None
-        self._bitset = None              # (num_rows, n_words) cache
-        # optional incremental coverage sketch (core/sketch.py): per-node
-        # k-bucket hashed row-occupancy, folded in batch by batch
+        self._bitset = None              # (D, num_rows, n_words) cache
         self.sketch_mode = sketch_mode
         self.sketch_k = (sketch_mod.resolve_sketch_k(sketch_k)
                          if sketch_k is not None else None)
-        self._occ = (jnp.zeros((n_nodes + 1, self.sketch_k), bool)
-                     if self.sketch_k is not None else None)
-        self._sk_words = None            # packed (n+1, k/32) cache
+        # sketch rows padded to a multiple of the shard count so the CELF
+        # sweep can stripe candidates evenly across devices
+        self.sketch_rows = -(-(n_nodes + 1) // d) * d
+        self._sk_words = (jax.device_put(
+            np.zeros((d, self.sketch_rows, self.sketch_k // 32), np.uint32),
+            self._sh_b3) if self.sketch_k is not None else None)
+        self._sk_cache = None            # on-demand (no incremental sketch)
+        self._fns = _mesh_store_fns(self.mesh)
 
+    # -- sizes -------------------------------------------------------------
     @property
     def n_rr(self) -> int:
-        return self._n_rr
+        return int(self._nrr_loc.sum())
 
     @property
     def n_elems(self) -> int:
-        return self._t
+        return int(self._t_loc.sum())
 
     @property
     def capacity(self) -> int:
-        return int(self._flat.shape[0])
+        """Per-shard element capacity."""
+        return int(self._flat.shape[1])
 
     @property
     def n_rr_dev(self):
-        """Row count as a device scalar (denominator of F_R under the guard)."""
+        """Per-shard row counts as a sharded (D,) device vector (selection
+        psums it for the F_R denominator under the guard)."""
         return self._nrr_dev
 
+    def per_device_pool_bytes(self) -> int:
+        """Live pool bytes on each device: flat + ids + valid buffers."""
+        return self.capacity * (4 + 4 + 1)
+
+    def sketch_bytes(self) -> int:
+        """Per-replica packed sketch bytes (0 without an incremental
+        sketch).  The deleted bool occupancy would be 8× this."""
+        if self._sk_words is None:
+            return 0
+        return self.sketch_rows * (self.sketch_k // 32) * 4
+
+    # -- append ------------------------------------------------------------
     def append_batch(self, batch) -> None:
         """Compact one batch (``RRBatch`` or ``(nodes, lengths)``) into the
-        pool.  Zero-length rows are padding (fixed-shape device engine
-        paths emit them) and are dropped."""
+        sharded pool.  Zero-length rows are padding (fixed-shape device
+        engine paths emit them) and are dropped.  Rows are dealt to shards
+        in contiguous blocks; the tail shard absorbs the divisibility
+        padding."""
         nodes, lens = (batch.nodes, batch.lengths) if hasattr(batch, "nodes") \
             else batch
         nodes = jnp.asarray(nodes)
@@ -334,100 +482,158 @@ class DeviceRRStore:
         if nodes.ndim != 2 or lens.shape != (nodes.shape[0],):
             raise ValueError("append_batch wants padded (R, W) nodes + (R,) "
                              "lengths")
-        elems, rows = (int(x) for x in jax.device_get(
-            _batch_counts(lens, width=nodes.shape[1])))
         r, w = nodes.shape
-        if self._occ is not None:
-            # fold the batch into the coverage sketch *before* the append
-            # advances the device row counter (global row ids must match
-            # the compaction's)
-            self._occ = sketch_mod.sketch_append(
-                self._occ, nodes, lens, self._nrr_dev,
+        d = self.n_shards
+        rloc = -(-r // d)
+        pad = rloc * d - r
+        if pad:
+            nodes, lens = _pad_batch_rows(nodes, lens, pad=pad,
+                                          n=self.n_nodes)
+        counts = np.asarray(jax.device_get(
+            _shard_counts(lens, d=d, width=w)), np.int64)
+        elems_l, rows_l = counts[:, 0], counts[:, 1]
+        if self._sk_words is not None:
+            # fold the batch into the packed coverage sketch *before* the
+            # append advances the row counters: bucketing uses canonical
+            # global (batch-order) row ids, identical on any mesh size
+            nodes_rep = jax.device_put(nodes, self._sh_rep)
+            lens_rep = jax.device_put(lens, self._sh_rep)
+            base = jax.device_put(np.int32(self.n_rr), self._sh_rep)
+            self._sk_words = self._fns.sketch_fold(
+                self._sk_words, nodes_rep, lens_rep, base,
                 k=self.sketch_k, mode=self.sketch_mode)
         # wide batches (device engine padding ≫ payload) go through the
         # packed append: gather-pack + contiguous writes beat a serial
         # R·W-update scatter by orders of magnitude on CPU
-        packed = r * w > _PACK and elems <= _PACK
-        need = self._t + (max(elems, _PACK) if packed else elems)
+        packed = rloc * w > _PACK and int(elems_l.max()) <= _PACK
+        need = int(((self._t_loc + _PACK) if packed
+                    else (self._t_loc + elems_l)).max())
         if need > self.capacity:
             newcap = self.capacity
             while newcap < need:
                 newcap *= 2
-            self._flat, self._ids, self._valid = _grow_buffers(
+            self._flat, self._ids, self._valid = self._fns.grow(
                 self._flat, self._ids, self._valid,
                 newcap=newcap, n=self.n_nodes)
+        nodes_sh = jax.device_put(nodes.reshape(d, rloc, w), self._sh_b3)
+        lens_sh = jax.device_put(lens.reshape(d, rloc), self._sh_buf)
         if packed:
             (self._flat, self._ids, self._valid, self._t_dev,
-             self._nrr_dev) = _append_packed(
+             self._nrr_dev) = self._fns.append_packed(
                 self._flat, self._ids, self._valid, self._t_dev,
-                self._nrr_dev, nodes, lens, pack=_PACK, n=self.n_nodes)
+                self._nrr_dev, nodes_sh, lens_sh,
+                pack=_PACK, n=self.n_nodes)
         else:
             (self._flat, self._ids, self._valid, self._t_dev,
-             self._nrr_dev) = _append_scatter(
+             self._nrr_dev) = self._fns.append_scatter(
                 self._flat, self._ids, self._valid, self._t_dev,
-                self._nrr_dev, nodes, lens)
-        self._t += elems
-        self._n_rr += rows
+                self._nrr_dev, nodes_sh, lens_sh)
+        self._t_loc += elems_l
+        self._nrr_loc += rows_l
         self._cache = None
         self._bitset = None
-        self._sk_words = None
+        self._sk_cache = None
 
+    # -- views -------------------------------------------------------------
     def snapshot(self) -> RRStore:
-        """Back-compat :class:`RRStore` view of the live extent (valid until
-        the next append)."""
-        if self._cache is None:
-            t = self._t
+        """Back-compat :class:`RRStore` view (valid until the next append).
+
+        On a 1-device mesh this is a device-side slice of the live extent
+        with the exact single-device layout.  On a multi-device mesh the
+        shards are gathered to the host and renumbered shard-major (local
+        ids + per-shard offsets) — a debugging/compat view; the hot paths
+        never call it.
+        """
+        if self._cache is not None:
+            return self._cache
+        if self.n_shards == 1:
+            t = int(self._t_loc[0])
             self._cache = RRStore(
-                rr_flat=self._flat[:t], rr_ids=self._ids[:t],
-                valid=self._valid[:t], n_rr=self._n_rr, n_nodes=self.n_nodes)
+                rr_flat=_slice_extent(self._flat, t=t),
+                rr_ids=_slice_extent(self._ids, t=t),
+                valid=_slice_extent(self._valid, t=t),
+                n_rr=self.n_rr, n_nodes=self.n_nodes)
+            return self._cache
+        flat, ids, valid = (np.asarray(x) for x in jax.device_get(
+            (self._flat, self._ids, self._valid)))
+        parts_f, parts_i, base = [], [], 0
+        for s in range(self.n_shards):
+            m = valid[s]
+            parts_f.append(flat[s][m])
+            parts_i.append(ids[s][m] + base)
+            base += int(self._nrr_loc[s])
+        ff = np.concatenate(parts_f) if parts_f else np.zeros(0, np.int64)
+        ii = np.concatenate(parts_i) if parts_i else np.zeros(0, np.int64)
+        self._cache = RRStore(
+            rr_flat=jax.device_put(ff.astype(np.int32)),
+            rr_ids=jax.device_put(ii.astype(np.int32)),
+            valid=jax.device_put(np.ones(ff.shape[0], bool)),
+            n_rr=self.n_rr, n_nodes=self.n_nodes)
         return self._cache
 
     def row_capacity(self) -> int:
-        """Static row bound for the fused selection: next power of two ≥
-        n_rr (and ≥ 32 so the Covered bitset packs whole words).  Selection
-        recompiles only when this doubles."""
-        return max(32, _ceil_pow2(max(self._n_rr, 1)))
+        """Static per-shard row bound for selection: next power of two ≥
+        the largest shard's row count (and ≥ 32 so the Covered bitset packs
+        whole words).  Selection recompiles only when this doubles."""
+        return max(32, _ceil_pow2(max(int(self._nrr_loc.max()), 1)))
 
     def bitset_matrix(self):
-        """(row_capacity, ceil(n/32)) packed membership matrix (cached)."""
+        """(D, row_capacity, ceil(n/32)) packed membership matrix, one
+        block per shard (cached)."""
         num_rows = self.row_capacity()
         n_words = (self.n_nodes + 31) // 32
-        if self._bitset is None or self._bitset.shape != (num_rows, n_words):
-            self._bitset = _bitset_from_flat(
+        if self._bitset is None or \
+                self._bitset.shape[1:] != (num_rows, n_words):
+            self._bitset = self._fns.bitset_build(
                 self._flat, self._ids, self._valid,
                 num_rows=num_rows, n_words=n_words)
         return self._bitset
 
-    def sketch_words(self, k: int | None = None):
-        """Packed (n+1, k/32) uint32 per-node coverage sketch (cached).
+    def sketch_words_mesh(self, k: int | None = None):
+        """(D, sketch_rows, k/32) packed per-node coverage sketch — one
+        replica per shard.
 
-        Stores constructed with ``sketch_k`` return the incrementally-built
-        sketch; otherwise the sketch is built from the live flat pool on
-        demand (one jit'd scatter over the elements).
+        Stores constructed with ``sketch_k`` return the incrementally
+        maintained fold (bit-identical on any mesh size); otherwise the
+        sketch is built on demand from the sharded flat pool (per-shard
+        partial folds by local row ids, combined by one psum-OR).
         """
-        if self._occ is not None:
-            if k is not None and sketch_mod.resolve_sketch_k(k) != \
-                    self.sketch_k:
+        if self._sk_words is not None:
+            if k is not None and \
+                    sketch_mod.resolve_sketch_k(k) != self.sketch_k:
                 raise ValueError(
                     f"store maintains an incremental sketch of k="
                     f"{self.sketch_k}; requested k={k} cannot be honored")
-            if self._sk_words is None:
-                self._sk_words = sketch_mod.pack_sketch(
-                    self._occ, words=self.sketch_k // 32)
             return self._sk_words
         kk = sketch_mod.resolve_sketch_k(k if k is not None
                                          else self.DEFAULT_SKETCH_K)
-        if self._sk_words is None or self._sk_words.shape[1] != kk // 32:
-            occ = sketch_mod.sketch_from_flat(
+        if self._sk_cache is None or self._sk_cache.shape[2] != kk // 32:
+            self._sk_cache = self._fns.sketch_from_pool(
                 self._flat, self._ids, self._valid,
-                n=self.n_nodes, k=kk, mode=self.sketch_mode)
-            self._sk_words = sketch_mod.pack_sketch(occ, words=kk // 32)
-        return self._sk_words
+                n_rows=self.sketch_rows, k=kk, mode=self.sketch_mode)
+        return self._sk_cache
+
+    def sketch_words(self, k: int | None = None):
+        """Single-replica (n+1, k/32) view of the packed sketch (the mesh
+        replicas pad rows to a multiple of the shard count for the striped
+        sweep; the canonical view slices that padding off, so the view is
+        identical on any mesh size)."""
+        return _slice_extent(self.sketch_words_mesh(k), t=self.n_nodes + 1)
 
     def select(self, k: int, method: str = "auto") -> "CoverageResult":
         if method in ("celf", "celf-sketch"):
             return select_seeds_celf(self, k)
         return select_seeds_device(self, k, method=method)
+
+
+# the historical single-device pool IS the mesh=1 case — same class, same
+# code path, a 1-device mesh by default
+DeviceRRStore = ShardedDeviceRRStore
+
+
+@functools.partial(jax.jit, static_argnames=("t",))
+def _slice_extent(x, *, t):
+    return x[0, :t]
 
 
 def merge_stores(stores: list[RRStore]) -> RRStore:
@@ -493,15 +699,8 @@ def select_seeds(store: RRStore, k: int) -> CoverageResult:
 
 
 # ---------------------------------------------------------------------------
-# Fused selection on the device-resident pool (capacity-stable shapes).
+# Mesh-sharded selection backends (fused scan / Pallas bitset / CELF).
 # ---------------------------------------------------------------------------
-
-@functools.partial(jax.jit, static_argnames=("n",))
-def _occur_flat(flat, valid, *, n):
-    """Exact Occur histogram over the capacity-padded flat pool."""
-    return jnp.zeros(n + 1, jnp.int32).at[flat].add(
-        valid.astype(jnp.int32), mode="drop")[:n]
-
 
 def _unpack_covered(cov_words):
     """(nw,) packed uint32 Covered bitset -> (nw*32,) bool rows."""
@@ -521,8 +720,9 @@ def _newly_rows(flat, ids, valid, covered, u):
     """Rows containing ``u`` that are not yet covered — THE membership pass.
 
     Single shared body for the fused scan step, the CELF exact-eval batch
-    (vmapped over candidates) and the CELF commit: the celf==fused parity
-    contract hangs on every path computing newly-covered rows identically.
+    (vmapped over candidates) and the CELF commit; every caller runs it
+    per shard on local rows, so the celf==fused parity contract hangs on
+    every path computing newly-covered rows identically.
     """
     match = (flat == u) & valid
     row_has = jax.ops.segment_max(match.astype(jnp.int32), ids,
@@ -530,145 +730,230 @@ def _newly_rows(flat, ids, valid, covered, u):
     return row_has & ~covered
 
 
-@functools.partial(jax.jit, static_argnames=("num_rows", "n", "k"))
-def _greedy_fused(flat, ids, valid, n_rr, *, num_rows, n, k):
-    """Alg. 7 as ONE scan over the capacity-padded buffers.
+@functools.lru_cache(maxsize=None)
+def _mesh_select_fns(mesh: Mesh):
+    """Per-mesh jitted shard_map selection programs.
 
-    Differences from :func:`_greedy`: operands are the pool's *capacity*
-    buffers (shapes change only at doublings, so the LB loop re-selects
-    without recompiling), the row count arrives as a device scalar (only the
-    F_R denominator needs it), and Covered lives as a packed
-    ``(num_rows/32,)`` uint32 bitset — per-seed gains are popcount
-    arithmetic on the newly-covered words.  The Occur decrement stays a
-    masked scatter over the flat elements: on a sparse pool that is
-    O(elements), strictly less work than any dense per-node pass (the
-    bit-matrix decrement variant lives in :func:`_greedy_bitset`).
+    Every backend reads the same sharded pool views: Occur partials are
+    psum-reduced, argmax is replicated math, Covered stays shard-local, and
+    per seed the only collectives are one ``psum(n)`` (decrement) and one
+    scalar psum (gain) — exactly the protocol of DESIGN.md §5.  Replicated
+    outputs come back through ``out_specs=P()``, so no host-side slicing
+    (which would commit an index scalar under the transfer guard) is
+    needed.
     """
-    occur0 = _occur_flat(flat, valid, n=n)
+    ax = mesh.axis_names[0]
+    buf, vec, b3 = P(ax, None), P(ax), P(ax, None, None)
 
-    def step(carry, _):
-        occur, cov_words = carry
-        u = jnp.argmax(occur).astype(jnp.int32)
-        newly = _newly_rows(flat, ids, valid, _unpack_covered(cov_words), u)
-        new_words = _pack_covered(newly)
-        gain = _popcount(new_words).sum(dtype=jnp.int32)
-        elem_newly = newly[jnp.clip(ids, 0, num_rows - 1)] & valid
-        dec = jnp.zeros(n + 1, jnp.int32).at[flat].add(
-            elem_newly.astype(jnp.int32), mode="drop")[:n]
-        return (occur - dec, cov_words | new_words), (u, gain)
+    @functools.partial(jax.jit, static_argnames=("num_rows", "n", "k"))
+    def fused(flat, ids, valid, nrr, *, num_rows, n, k):
+        """Alg. 7 as ONE scan over the capacity-padded sharded buffers.
 
-    cov0 = jnp.zeros(num_rows // 32, jnp.uint32)
-    _, (seeds, gains) = jax.lax.scan(step, (occur0, cov0), None, length=k)
-    frac = gains.sum(dtype=jnp.int32) / jnp.maximum(n_rr, 1)
-    return seeds, gains, frac.astype(jnp.float32)
+        Operands are the pool's *capacity* buffers (shapes change only at
+        doublings, so the LB loop re-selects without recompiling), the row
+        counts arrive as per-shard device scalars (only the F_R denominator
+        needs their psum), and Covered lives as a packed per-shard
+        ``(num_rows/32,)`` uint32 bitset — per-seed gains are popcount
+        arithmetic on the newly-covered words.  The Occur decrement stays a
+        masked scatter over the local flat elements: on a sparse pool that
+        is O(elements/D) per device, strictly less work than any dense
+        per-node pass (the bit-matrix variant is :func:`bitset`).
+        """
+        def local(flat, ids, valid, nrr):
+            flat, ids, valid = flat[0], ids[0], valid[0]
+            occur0 = jnp.zeros(n + 1, jnp.int32).at[flat].add(
+                valid.astype(jnp.int32), mode="drop")[:n]
+            occur0 = jax.lax.psum(occur0, ax)
+            nrr_tot = jax.lax.psum(nrr[0], ax)
+
+            def step(carry, _):
+                occur, cov_words = carry
+                u = jnp.argmax(occur).astype(jnp.int32)
+                newly = _newly_rows(flat, ids, valid,
+                                    _unpack_covered(cov_words), u)
+                new_words = _pack_covered(newly)
+                gain = jax.lax.psum(
+                    _popcount(new_words).sum(dtype=jnp.int32), ax)
+                elem_newly = newly[jnp.clip(ids, 0, num_rows - 1)] & valid
+                dec = jnp.zeros(n + 1, jnp.int32).at[flat].add(
+                    elem_newly.astype(jnp.int32), mode="drop")[:n]
+                occur = occur - jax.lax.psum(dec, ax)
+                return (occur, cov_words | new_words), (u, gain)
+
+            cov0 = pvary(jnp.zeros(num_rows // 32, jnp.uint32), ax)
+            _, (seeds, gains) = jax.lax.scan(
+                step, (occur0, cov0), None, length=k)
+            frac = gains.sum(dtype=jnp.int32) / jnp.maximum(nrr_tot, 1)
+            return seeds, gains, frac.astype(jnp.float32)
+
+        return shard_map_unchecked(
+            local, mesh=mesh, in_specs=(buf, buf, buf, vec),
+            out_specs=(P(), P(), P()))(flat, ids, valid, nrr)
+
+    @functools.partial(jax.jit, static_argnames=("k",))
+    def bitset(m_words, nrr, *, k):
+        """Alg. 7 on the per-shard packed membership matrices, via the
+        Pallas bitset kernels (each shard runs the kernels on its local
+        block; Occur and its decrement are psum-reduced).  Work per seed is
+        O(num_rows · n/32) per device regardless of sparsity, so this path
+        wins when RR sets are dense (mean size ≳ n/32)."""
+        from repro.kernels import ops as kops
+
+        def local(m, nrr):
+            m = m[0]
+            occur0 = jax.lax.psum(kops.occur_from_bitset(m), ax)
+            nrr_tot = jax.lax.psum(nrr[0], ax)
+
+            def step(carry, _):
+                occur, covered = carry
+                u = jnp.argmax(occur).astype(jnp.int32)
+                col = m[:, u >> 5]
+                hit = ((col >> (u & 31).astype(jnp.uint32))
+                       & jnp.uint32(1)) != 0
+                newly = hit & ~covered
+                dec = jax.lax.psum(
+                    kops.occur_from_bitset_masked(m, newly), ax)
+                gain = jax.lax.psum(newly.sum(dtype=jnp.int32), ax)
+                return (occur - dec, covered | hit), (u, gain)
+
+            covered0 = pvary(jnp.zeros(m.shape[0], bool), ax)
+            _, (seeds, gains) = jax.lax.scan(
+                step, (occur0, covered0), None, length=k)
+            frac = gains.sum(dtype=jnp.int32) / jnp.maximum(nrr_tot, 1)
+            return seeds, gains, frac.astype(jnp.float32)
+
+        return shard_map_unchecked(
+            local, mesh=mesh, in_specs=(b3, vec),
+            out_specs=(P(), P(), P()))(m_words, nrr)
+
+    @functools.partial(jax.jit, static_argnames=("n",))
+    def occur(flat, valid, *, n):
+        """Exact psum-reduced Occur histogram (CELF's upper-bound init)."""
+        def local(flat, valid):
+            h = jnp.zeros(n + 1, jnp.int32).at[flat[0]].add(
+                valid[0].astype(jnp.int32), mode="drop")[:n]
+            return jax.lax.psum(h, ax)
+        return shard_map_unchecked(
+            local, mesh=mesh, in_specs=(buf, buf),
+            out_specs=P())(flat, valid)
+
+    @jax.jit
+    def eval_batch(flat, ids, valid, cov_words, cands):
+        """Exact marginal coverage of C candidates vs the covered bitset.
+
+        The membership pass is broadcast over ``_EVAL_CHUNK`` candidates at
+        a time under ``lax.map`` per shard, so peak memory is
+        O(local elements · _EVAL_CHUNK) — a *fixed* multiple of the pool
+        shard, independent of ``eval_batch``.  ``cands`` is replicated and
+        may be padded with -1 (matches nothing, gain 0); per-shard counts
+        are psum-reduced into the replicated exact gains.
+        """
+        def local(flat, ids, valid, cov_words, cands):
+            flat, ids, valid = flat[0], ids[0], valid[0]
+            covered = _unpack_covered(cov_words[0])
+            c = cands.shape[0]
+            pad = (-c) % _EVAL_CHUNK
+            cs = jnp.concatenate(
+                [cands, jnp.full((pad,), -1, cands.dtype)]) if pad else cands
+
+            def chunk(cc):
+                newly = jax.vmap(
+                    lambda u: _newly_rows(flat, ids, valid, covered, u))(cc)
+                return newly.sum(axis=1, dtype=jnp.int32)
+
+            gains = jax.lax.map(chunk, cs.reshape(-1, _EVAL_CHUNK))
+            return jax.lax.psum(gains.reshape(-1)[:c], ax)
+
+        return shard_map_unchecked(
+            local, mesh=mesh, in_specs=(buf, buf, buf, buf, P()),
+            out_specs=P())(flat, ids, valid, cov_words, cands)
+
+    @jax.jit
+    def apply_seed(flat, ids, valid, cov_words, u):
+        """Commit seed ``u``: OR its rows into each shard's packed Covered
+        bitset and psum the exact gain."""
+        def local(flat, ids, valid, cov_words, u):
+            newly = _newly_rows(flat[0], ids[0], valid[0],
+                                _unpack_covered(cov_words[0]), u)
+            new_words = _pack_covered(newly)
+            gain = jax.lax.psum(_popcount(new_words).sum(dtype=jnp.int32), ax)
+            return (cov_words[0] | new_words)[None], gain
+        return shard_map_unchecked(
+            local, mesh=mesh, in_specs=(buf, buf, buf, buf, P()),
+            out_specs=(buf, P()))(flat, ids, valid, cov_words, u)
+
+    @functools.partial(jax.jit, static_argnames=("stripe",))
+    def sweep(sk, cov_sk, *, stripe):
+        """Δocc lower bounds for every node in one mesh-parallel sweep:
+        each device scores its contiguous stripe of candidates against its
+        sketch replica; one psum of the disjoint stripes yields the full
+        replicated vector (the sketch sweep is embarrassingly parallel)."""
+        def local(sk, cov):
+            i = jax.lax.axis_index(ax)
+            g = sketch_mod.union_gains_stripe(
+                sk[0], cov[0], i * stripe, stripe)
+            full = jax.lax.dynamic_update_slice(
+                jnp.zeros(sk.shape[1], jnp.int32), g, (i * stripe,))
+            return jax.lax.psum(full, ax)
+        return shard_map_unchecked(
+            local, mesh=mesh, in_specs=(b3, buf),
+            out_specs=P())(sk, cov_sk)
+
+    @jax.jit
+    def union(cov_sk, sk, u):
+        """Fold one accepted seed into every replica of the union sketch —
+        the per-seed psum-OR of k/32 words (zero-cost here: replicas are
+        identical, so each shard ORs its own copy)."""
+        def local(cov, sk, u):
+            return (cov[0] | sk[0, u])[None]
+        return shard_map_unchecked(
+            local, mesh=mesh, in_specs=(buf, b3, P()),
+            out_specs=buf)(cov_sk, sk, u)
+
+    class Fns:
+        pass
+
+    fns = Fns()
+    fns.fused = fused
+    fns.bitset = bitset
+    fns.occur = occur
+    fns.eval_batch = eval_batch
+    fns.apply_seed = apply_seed
+    fns.sweep = sweep
+    fns.union = union
+    return fns
 
 
-@functools.partial(jax.jit, static_argnames=("k",))
-def _greedy_bitset(m_words, n_rr, *, k):
-    """Alg. 7 on the packed membership matrix, via the Pallas bitset kernels.
-
-    ``occur_from_bitset`` builds Occur as a cross-lane bit-column reduction
-    and its row-masked variant computes the per-seed decrement over the
-    newly covered rows — popcount arithmetic end to end, no flat scatter.
-    Work per seed is O(num_rows · n/32) regardless of sparsity, so this
-    path wins when RR sets are dense (mean size ≳ n/32) and the flat pool
-    would be larger than the bit matrix; ``select_seeds_device`` picks per
-    store.  Membership of the freshly selected seed is a bit-column test.
-    """
-    from repro.kernels import ops as kops
-    num_rows = m_words.shape[0]
-    occur0 = kops.occur_from_bitset(m_words)         # (n_words*32,)
-
-    def step(carry, _):
-        occur, covered = carry
-        u = jnp.argmax(occur).astype(jnp.int32)
-        col = m_words[:, u >> 5]
-        hit = ((col >> (u & 31).astype(jnp.uint32)) & jnp.uint32(1)) != 0
-        newly = hit & ~covered
-        dec = kops.occur_from_bitset_masked(m_words, newly)
-        gain = newly.sum(dtype=jnp.int32)
-        return (occur - dec, covered | hit), (u, gain)
-
-    covered0 = jnp.zeros(num_rows, bool)
-    _, (seeds, gains) = jax.lax.scan(step, (occur0, covered0), None, length=k)
-    frac = gains.sum(dtype=jnp.int32) / jnp.maximum(n_rr, 1)
-    return seeds, gains, frac.astype(jnp.float32)
-
-
-def select_seeds_device(store: "DeviceRRStore", k: int,
+def select_seeds_device(store: "ShardedDeviceRRStore", k: int,
                         method: str = "auto") -> CoverageResult:
-    """Fused greedy selection directly on a :class:`DeviceRRStore`.
+    """Fused greedy selection directly on a :class:`ShardedDeviceRRStore`.
 
     ``method``: ``"flat"`` (scatter decrement, optimal for sparse RR pools),
     ``"bitset"`` (Pallas bit-matrix path, optimal for dense pools), or
-    ``"auto"`` — bitset iff the bit matrix is no larger than the flat
-    capacity buffers it replaces (i.e. mean RR size ≳ n/32).  Everything
-    stays on device; the returned ``frac`` uses the device row count, so the
-    call is legal under ``jax.transfer_guard("disallow")``.
+    ``"auto"`` — bitset iff the per-shard bit matrix is no larger than the
+    per-shard flat capacity buffers it replaces (i.e. mean RR size ≳ n/32).
+    Everything stays on the mesh; the returned ``frac`` uses the psum of
+    the per-shard device row counts, so the call is legal under
+    ``jax.transfer_guard("disallow")`` on a mesh of any size.
     """
+    fns = _mesh_select_fns(store.mesh)
     num_rows = store.row_capacity()
     if method == "auto":
         n_words = (store.n_nodes + 31) // 32
         method = "bitset" if num_rows * n_words <= store.capacity else "flat"
     if method == "flat":
-        seeds, gains, frac = _greedy_fused(
+        seeds, gains, frac = fns.fused(
             store._flat, store._ids, store._valid, store.n_rr_dev,
             num_rows=num_rows, n=store.n_nodes, k=k)
     elif method == "bitset":
-        seeds, gains, frac = _greedy_bitset(store.bitset_matrix(),
-                                            store.n_rr_dev, k=k)
+        seeds, gains, frac = fns.bitset(store.bitset_matrix(),
+                                        store.n_rr_dev, k=k)
     else:
         raise ValueError(f"unknown selection method {method!r}")
     return CoverageResult(seeds=seeds, gains=gains, frac=frac)
 
 
-# ---------------------------------------------------------------------------
-# CELF lazy greedy over sketch estimates (third selection backend).
-# ---------------------------------------------------------------------------
-
-_EVAL_CHUNK = 8   # broadcast width of one exact-eval pass
-
-
-@jax.jit
-def _celf_eval_batch(flat, ids, valid, cov_words, cands):
-    """Exact marginal coverage of C candidates against the covered bitset.
-
-    One jit call evaluates the whole batch: the membership pass (equality
-    scan + segment-max, the fused path's inner step) is broadcast over
-    ``_EVAL_CHUNK`` candidates at a time under ``lax.map``, so peak memory
-    is O(elements · _EVAL_CHUNK) — a *fixed* multiple of the pool,
-    independent of ``eval_batch`` (a full (T, C) broadcast would scale the
-    pool's footprint with the batch width, fatal exactly in the huge-pool
-    regime this backend exists for).  ``cands`` may be padded with -1
-    (matches nothing, gain 0).  Shapes are the pool's capacity buffers, so
-    the call is capacity-stable like the fused scan.
-    """
-    covered = _unpack_covered(cov_words)
-    c = cands.shape[0]
-    pad = (-c) % _EVAL_CHUNK
-    cands = jnp.concatenate(
-        [cands, jnp.full((pad,), -1, cands.dtype)]) if pad else cands
-
-    def chunk(cs):
-        newly = jax.vmap(
-            lambda u: _newly_rows(flat, ids, valid, covered, u))(cs)
-        return newly.sum(axis=1, dtype=jnp.int32)
-
-    gains = jax.lax.map(chunk, cands.reshape(-1, _EVAL_CHUNK))
-    return gains.reshape(-1)[:c]
-
-
-@jax.jit
-def _celf_apply(flat, ids, valid, cov_words, u):
-    """Commit seed ``u``: OR its rows into the packed Covered bitset and
-    return (new cov_words, exact gain)."""
-    newly = _newly_rows(flat, ids, valid, _unpack_covered(cov_words), u)
-    new_words = _pack_covered(newly)
-    gain = _popcount(new_words).sum(dtype=jnp.int32)
-    return cov_words | new_words, gain
-
-
-def select_seeds_celf(store: "DeviceRRStore", k: int, *,
+def select_seeds_celf(store: "ShardedDeviceRRStore", k: int, *,
                       eval_batch: int = 32, use_sketch: bool = True,
                       stats_out: dict | None = None) -> CoverageResult:
     """CELF lazy greedy selection with sketch-first candidate ordering.
@@ -678,20 +963,27 @@ def select_seeds_celf(store: "DeviceRRStore", k: int, *,
     each node's last exact marginal gain (initialized from the exact Occur
     histogram) — a valid upper bound under submodularity — and per seed only
     the candidates that could still win are re-evaluated exactly, in batches
-    of ``eval_batch`` via :func:`_celf_eval_batch`.  The per-node coverage
-    sketch (``core/sketch.py``) orders that verification: its union-estimate
-    Δocc (one Pallas popcount sweep over all nodes) is a certified *lower*
+    of ``eval_batch``.  The packed per-node coverage sketch
+    (``core/sketch.py``) orders that verification: its union-estimate Δocc
+    (one mesh-parallel popcount sweep over all nodes) is a certified *lower*
     bound on the marginal gain, so the likeliest winners are verified first
     and acceptance usually triggers on the first pop.
+
+    On a multi-device mesh, exact re-evaluation shards over the pool like
+    the fused scan (each device scans its local rows; per-shard counts are
+    psum-reduced), the sweep stripes candidates across devices, and the
+    union sketch is one psum-OR of k/32 words per accepted seed — so the
+    backend accepts the same sharded pool views as the other two.
 
     Correctness is structural, not statistical: a candidate is accepted only
     when its freshly-computed exact gain is ≥ every remaining upper bound
     (ties resolved to the lowest node id, matching ``jnp.argmax``), so the
     returned seeds are *identical* to the fused-scan path for any sketch
-    size — the sketch only changes how many exact evaluations happen.  With
-    ``sketch_k >= n_rr`` (mod bucketing) the estimates are themselves exact
-    and one verification batch per seed suffices.  The (1−1/e−ε) guarantee
-    of Alg. 2 is therefore preserved verbatim.
+    size and any mesh size — the sketch only changes how many exact
+    evaluations happen.  With ``sketch_k >= n_rr`` (mod bucketing) the
+    estimates are themselves exact and one verification batch per seed
+    suffices.  The (1−1/e−ε) guarantee of Alg. 2 is therefore preserved
+    verbatim.
 
     All device interaction is explicit (``device_put``/``device_get``), so
     the call is legal under ``jax.transfer_guard("disallow")``; shapes are
@@ -701,18 +993,23 @@ def select_seeds_celf(store: "DeviceRRStore", k: int, *,
     n = store.n_nodes
     num_rows = store.row_capacity()
     nw = num_rows // 32
+    d = store.n_shards
+    fns = _mesh_select_fns(store.mesh)
     flat, ids, valid = store._flat, store._ids, store._valid
     c = max(1, min(eval_batch, n))
 
     ub = np.asarray(jax.device_get(
-        _occur_flat(flat, valid, n=n)), dtype=np.int64).copy()
+        fns.occur(flat, valid, n=n)), dtype=np.int64).copy()
     fresh = np.zeros(n, bool)
     # explicit placement: plain jnp.zeros is an implicit h2d transfer and
     # would trip the solver's transfer_guard("disallow")
-    cov_words = jax.device_put(np.zeros(nw, np.uint32))
+    cov_words = jax.device_put(np.zeros((d, nw), np.uint32), store._sh_buf)
     if use_sketch:
-        sk_words = store.sketch_words()
-        cov_sk = jax.device_put(np.zeros(sk_words.shape[1], np.uint32))
+        sk_words = store.sketch_words_mesh()
+        sk_k = int(sk_words.shape[2]) * 32
+        stripe = store.sketch_rows // d
+        cov_sk = jax.device_put(
+            np.zeros((d, sk_words.shape[2]), np.uint32), store._sh_buf)
     n_evals = 0
     n_eval_calls = 0
     node_ids = np.arange(n)
@@ -722,8 +1019,9 @@ def select_seeds_celf(store: "DeviceRRStore", k: int, *,
         cands = np.asarray(cands, np.int32)
         pad = np.full(c, -1, np.int32)
         pad[:len(cands)] = cands
-        g = np.asarray(jax.device_get(_celf_eval_batch(
-            flat, ids, valid, cov_words, jax.device_put(pad))))
+        g = np.asarray(jax.device_get(fns.eval_batch(
+            flat, ids, valid, cov_words,
+            jax.device_put(pad, store._sh_rep))))
         ub[cands] = g[:len(cands)]
         fresh[cands] = True
         n_evals += len(cands)
@@ -733,12 +1031,13 @@ def select_seeds_celf(store: "DeviceRRStore", k: int, *,
     for _ in range(k):
         fresh[:] = False
         if use_sketch:
-            # sketch sweep: Δocc lower bounds for every node in one kernel
-            # call; verify the likeliest winners exactly before entering
-            # the lazy loop (O(n) top-c selection — eval-batch composition
-            # affects only the eval count, never the accepted seed)
+            # sketch sweep: Δocc lower bounds for every node in one
+            # mesh-parallel pass; verify the likeliest winners exactly
+            # before entering the lazy loop (O(n) top-c selection —
+            # eval-batch composition affects only the eval count, never
+            # the accepted seed)
             deltas = np.asarray(jax.device_get(
-                sketch_mod.union_gains(sk_words, cov_sk)))[:n]
+                fns.sweep(sk_words, cov_sk, stripe=stripe)))[:n]
             key = deltas.astype(np.int64) * (n + 1) - node_ids
             eval_exact(np.argpartition(-key, c - 1)[:c])
         while True:
@@ -754,10 +1053,11 @@ def select_seeds_celf(store: "DeviceRRStore", k: int, *,
             cc = min(c, len(stale_idx))
             key = ub[stale_idx] * (n + 1) - stale_idx
             eval_exact(stale_idx[np.argpartition(-key, cc - 1)[:cc]])
-        u_dev = jax.device_put(np.int32(u))
-        cov_words, gain_dev = _celf_apply(flat, ids, valid, cov_words, u_dev)
+        u_dev = jax.device_put(np.int32(u), store._sh_rep)
+        cov_words, gain_dev = fns.apply_seed(flat, ids, valid, cov_words,
+                                             u_dev)
         if use_sketch:
-            cov_sk = sketch_mod.union_row(cov_sk, sk_words, u_dev)
+            cov_sk = fns.union(cov_sk, sk_words, u_dev)
         gain = int(jax.device_get(gain_dev))
         ub[u] = 0                        # exact: u's rows are now covered
         seeds.append(u)
@@ -765,8 +1065,7 @@ def select_seeds_celf(store: "DeviceRRStore", k: int, *,
 
     if stats_out is not None:
         stats_out.update(n_exact_evals=n_evals, n_eval_calls=n_eval_calls,
-                         sketch_k=(int(store.sketch_words().shape[1]) * 32
-                                   if use_sketch else 0),
+                         sketch_k=(sk_k if use_sketch else 0),
                          n_rr=store.n_rr)
     frac = sum(gains) / max(store.n_rr, 1)
     return CoverageResult(
@@ -855,16 +1154,16 @@ def shard_stores(per_shard_rr: list[list[list[int]]], n: int) -> RRStore:
 
 
 # ---------------------------------------------------------------------------
-# Distributed (shard_map) variant: RR rows sharded, Occur psum-reduced.
+# Legacy distributed variant on host-built shard stacks (pre-dates the
+# mesh-native ShardedDeviceRRStore; kept for the host shard_stores API).
 # ---------------------------------------------------------------------------
 
 def select_seeds_sharded(mesh, store_shards, k: int, n: int, axis_names):
     """store_shards: RRStore pytree whose arrays carry a leading shard dim
     equal to the mesh size (one row per device); rr_ids are *local* row ids.
-    Per-seed collective cost: one psum over (n,) int32 — see DESIGN.md §4.
+    Per-seed collective cost: one psum over (n,) int32 — see DESIGN.md §5.
     """
-    from jax.sharding import PartitionSpec as P
-    from repro.compat import shard_map, pvary
+    from repro.compat import shard_map
 
     local_n_rr = store_shards.n_rr  # rows per shard (uniform)
 

@@ -96,6 +96,12 @@ class SamplerEngine(Protocol):
     * ``sample_device(key)`` — fixed-shape variant of ``sample`` that may
       return zero-length padding rows (see :class:`RRBatch`); preferred by
       the solvers because stable shapes mean stable jit caches.
+    * ``mesh`` + ``sample_sharded(key)`` — mesh-fanned engines expose the
+      jax ``Mesh`` they sample over and a variant whose batch arrays stay
+      *sharded* across it (per-device rows resident on the device that
+      sampled them, no gather).  When the solver's pool shares the same
+      mesh (``IMMSolver(mesh=...)``), it prefers this path and the rows
+      never leave their sampling device.
     """
     name: str
 

@@ -8,16 +8,20 @@ or a caller-supplied engine instance (e.g. the sharded launcher's).  Every
 round is ``batch = engine.sample(key)`` → ``store.append_batch(batch)``; the
 solver never inspects engine internals.
 
-The hot loop is *device-resident*: the RR pool is a
-:class:`~repro.core.coverage.DeviceRRStore` (jit'd rank-scatter appends into
-donated doubling buffers), selection is the fused capacity-stable greedy
-(:func:`~repro.core.coverage.select_seeds_device`), and for engines that
-declare ``device_resident`` the whole sampling+selection loop runs under
-``jax.transfer_guard("disallow")``.  The only host↔device traffic per round
-is the store's explicit scalar count fetch — the same per-relaunch ``N_RR``
-readback gIM's Alg. 6 host loop performs; per-round stats (micro-steps,
-overflow) accumulate as device scalars and materialize once per
-``sample_until`` (or lazily on ``stats`` access).
+The hot loop is *mesh-resident*: the RR pool is a
+:class:`~repro.core.coverage.ShardedDeviceRRStore` sharded over the device
+mesh chosen once at solver construction (``mesh=`` — ``None`` is the
+1-device mesh, the same code path), selection is the capacity-stable
+psum-reduced greedy (:func:`~repro.core.coverage.select_seeds_device` /
+``select_seeds_celf``), and for engines that declare ``device_resident``
+the whole sampling+selection loop runs under
+``jax.transfer_guard("disallow")`` on a mesh of any size.  The only
+host↔device traffic per round is the store's explicit per-shard count
+fetch — the same per-relaunch ``N_RR`` readback gIM's Alg. 6 host loop
+performs; per-round stats (micro-steps, overflow) accumulate as device
+scalars and materialize once per ``sample_until`` (or lazily on ``stats``
+access).  Engines sharing the solver's mesh and exposing
+``sample_sharded`` keep their rows on the device that sampled them.
 
 All martingale math (λ', λ*, the Alg. 2 LB loop) follows IMM [Tang et al.'15]
 and is shared with the numpy oracle (core/oracle.py) so both sides compute
@@ -59,6 +63,9 @@ class IMMStats:
     frac_covered: float = 0.0
     sampling_steps: int = 0
     selection: str = "auto"
+    mesh_shape: tuple = (1,)
+    pool_sharding: str = "samples:1"
+    per_device_pool_bytes: int = 0
     history: list = field(default_factory=list)
 
 
@@ -85,7 +92,7 @@ class IMMSolver:
                  batch: Optional[int] = None, qcap: Optional[int] = None,
                  ec: Optional[int] = None, model: Optional[str] = None,
                  selection: str = "auto", sketch_k: Optional[int] = None,
-                 seed: int = 0):
+                 mesh=None, seed: int = 0):
         self.g = g
         self.n = g.n_nodes
         if isinstance(engine, str):
@@ -122,11 +129,17 @@ class IMMSolver:
         # the celf path estimates from the incremental coverage sketch, so
         # the store maintains one from the first append on
         if self._sel_method == "celf" and sketch_k is None:
-            sketch_k = cov.DeviceRRStore.DEFAULT_SKETCH_K
+            sketch_k = cov.ShardedDeviceRRStore.DEFAULT_SKETCH_K
         self.key = jax.random.key(seed)
-        self.store = cov.DeviceRRStore(self.engine.item_space,
-                                       sketch_k=sketch_k)
-        self._stats = IMMStats(selection=selection)
+        # mesh placement is decided exactly once, here: the pool, the
+        # sketch, and every selection backend live on this mesh for the
+        # solver's lifetime (mesh=None -> the 1-device mesh special case)
+        self.store = cov.ShardedDeviceRRStore(self.engine.item_space,
+                                              sketch_k=sketch_k, mesh=mesh)
+        self._stats = IMMStats(
+            selection=selection,
+            mesh_shape=tuple(int(s) for s in self.store.mesh.devices.shape),
+            pool_sharding=f"{self.store.axis}:{self.store.n_shards}")
         self._stats_dirty = False
         # stats accumulate as device scalars; materialized once per
         # sample_until / on `stats` access, not per round
@@ -141,6 +154,12 @@ class IMMSolver:
                        else "allow")
         self._sample = getattr(self.engine, "sample_device",
                                self.engine.sample)
+        # a sharded engine on the *same* mesh hands the store rows that are
+        # already resident on their sampling device — no dev0 gather
+        if (self.store.n_shards > 1
+                and getattr(self.engine, "mesh", None) == self.store.mesh
+                and hasattr(self.engine, "sample_sharded")):
+            self._sample = self.engine.sample_sharded
 
     # -- stats -------------------------------------------------------------
     @property
@@ -157,6 +176,7 @@ class IMMSolver:
             st.n_rr_sampled = self.store.n_rr
             st.overflow_fraction = (ovf / self._ovf_lanes
                                     if self._ovf_lanes else 0.0)
+            st.per_device_pool_bytes = self.store.per_device_pool_bytes()
             self._stats_dirty = False
 
     # -- sampling ----------------------------------------------------------
@@ -220,7 +240,7 @@ def imm(g: CSRGraph, k: int, eps: float, **kw):
     """One-shot convenience wrapper; returns (seeds, spread_estimate, stats)."""
     solver_kw = {k_: v for k_, v in kw.items()
                  if k_ in ("engine", "batch", "qcap", "ec", "model", "seed",
-                           "selection", "sketch_k")}
+                           "selection", "sketch_k", "mesh")}
     solve_kw = {k_: v for k_, v in kw.items() if k_ in ("ell", "max_theta")}
     solver = IMMSolver(g, **solver_kw)
     return solver.solve(k, eps, **solve_kw)

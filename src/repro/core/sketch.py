@@ -12,6 +12,18 @@ popcounts — exactly the packed-bitset plumbing of ``kernels/bitset.py``, so
 the per-candidate union estimate over all n nodes is one Pallas popcount
 sweep (``kernels/sketch.py``).
 
+The occupancy is maintained **directly as packed uint32 words** — an
+(R, k/32) uint32 matrix, never an (R, k) bool one.  Scatter-OR into packed
+words is not a plain scatter (two bits landing in one word must combine,
+and a bit already present must not carry), so the fold
+(:func:`scatter_or_bits`) lexsorts the batch's (row, bucket) pairs, keeps
+first occurrences, masks bits already set in the live words, and commits
+the survivors with one scatter-*add* — which at that point is exactly
+scatter-OR.  This is the ~8× sketch-memory cut over the historical bool
+occupancy (deleted); the equivalent TPU-bound Pallas kernel lives in
+``kernels/sketch.py`` (:func:`~repro.kernels.sketch.sketch_scatter_or`)
+and is property-tested bit-identical.
+
 Properties the CELF selection path (``coverage.select_seeds_celf``) relies
 on:
 
@@ -25,9 +37,11 @@ on:
   Δocc *equals* the exact marginal gain and one verification per seed
   suffices.  Past k rows the sketch degrades gracefully into a uniform
   hash (sequential row ids stride the buckets perfectly).
-* **Incremental** — ``DeviceRRStore.append_batch`` folds each batch into
-  the sketch with one jit'd scatter (O(batch elements), no rebuild); the
-  packed word matrix is cached per live extent like the bitset matrix.
+* **Incremental** — ``ShardedDeviceRRStore.append_batch`` folds each batch
+  into the packed words with one jit'd sort+scatter (O(batch elements
+  · log), no rebuild); on a multi-device mesh the fold runs replicated
+  (every device folds the identical full batch — cheaper than any
+  cross-device OR of sketch deltas, see DESIGN.md §5).
 
 Cardinality estimation for consumers that want absolute counts (benchmarks,
 tests) is classic linear counting: ``n̂ = k · ln(k / (k − occ))``.
@@ -65,33 +79,75 @@ def bucket_of(row_ids, k: int, mode: str = "mod"):
     return (rid % jnp.uint32(k)).astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "mode"),
-                   donate_argnums=(0,))
-def sketch_append(occ, nodes, lens, row_base, *, k, mode):
-    """Fold one padded batch into the (n+1, k) bool occupancy sketch.
+def scatter_or_bits(words, v, b):
+    """Scatter-OR bucket bits into packed words: ``words[v] |= 1 << b``.
 
-    ``row_base`` is the pool's row count *before* this batch (device
-    scalar), so global row ids match the store's compaction exactly.
-    Rows with length 0 are padding and contribute nothing.  Duplicate
-    scatter targets all write ``True`` — deterministic, so a plain
-    ``.at[].set`` is safe (no scatter-or needed).
+    ``words`` (R, W) uint32, ``v``/``b`` (E,) int32 flat (row, bucket)
+    pairs; entries with ``v >= R`` are dropped (sentinels).  Duplicate
+    pairs and bits already present are handled exactly: pairs are lexsorted
+    and deduplicated, surviving bits are masked against the current words
+    (one gather), and the remainder — now provably absent and pairwise
+    distinct — commits via scatter-add, which equals scatter-OR on disjoint
+    bits.  O(E log E) work, no bool buffer of any size.
+    """
+    n_rows = words.shape[0]
+    order = jnp.lexsort((b, v))
+    vs, bs = v[order], b[order]
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), (vs[1:] != vs[:-1]) | (bs[1:] != bs[:-1])])
+    wi = bs >> 5
+    bit = jnp.uint32(1) << (bs & 31).astype(jnp.uint32)
+    cur = words[jnp.clip(vs, 0, n_rows - 1), jnp.clip(wi, 0, words.shape[1] - 1)]
+    new = jnp.where(first & (vs < n_rows) & ((cur & bit) == 0),
+                    bit, jnp.uint32(0))
+    return words.at[vs, wi].add(new, mode="drop")
+
+
+def fold_batch_packed(words, nodes, lens, row_base, *, k, mode):
+    """Fold one padded batch into the packed (R, k/32) occupancy words.
+
+    ``row_base`` is the pool's *global* row count before this batch (device
+    scalar), so bucketing matches the canonical batch-order row numbering
+    regardless of how the pool itself is sharded.  Rows with length 0 are
+    padding and contribute nothing.  Plain traceable function — the store
+    jits it directly (single device) or per shard inside ``shard_map``
+    (every device folds the identical replicated batch).
     """
     r, w = nodes.shape
-    n_rows = occ.shape[0]                        # n + 1 (row n = sentinel bin)
+    n_rows = words.shape[0]
     lens = jnp.minimum(jnp.maximum(lens.astype(jnp.int32), 0), w)
     mask = jnp.arange(w, dtype=jnp.int32)[None, :] < lens[:, None]
     row_valid = lens > 0
     rid = row_base + jnp.cumsum(row_valid, dtype=jnp.int32) - 1
-    b = bucket_of(rid, k, mode)                  # (r,)
-    v = jnp.where(mask, nodes.astype(jnp.int32), n_rows)   # OOB -> dropped
-    return occ.at[v, jnp.broadcast_to(b[:, None], (r, w))].set(
-        True, mode="drop")
+    b = jnp.broadcast_to(bucket_of(rid, k, mode)[:, None], (r, w)).reshape(-1)
+    v = jnp.where(mask, nodes.astype(jnp.int32), n_rows).reshape(-1)
+    return scatter_or_bits(words, v, b)
+
+
+def flat_to_packed_bits(flat, ids, valid, *, n_rows, k, mode):
+    """(flat pool → (v, b) pairs) for :func:`scatter_or_bits`."""
+    b = bucket_of(ids, k, mode)
+    v = jnp.where(valid, flat.astype(jnp.int32), n_rows)
+    return v, b
+
+
+@functools.partial(jax.jit, static_argnames=("n_rows", "k", "mode"))
+def sketch_packed_from_flat(flat, ids, valid, *, n_rows, k, mode):
+    """Build packed (n_rows, k/32) occupancy words from an existing flat
+    pool (stores created without an incremental sketch)."""
+    v, b = flat_to_packed_bits(flat, ids, valid, n_rows=n_rows, k=k,
+                               mode=mode)
+    return scatter_or_bits(jnp.zeros((n_rows, k // 32), jnp.uint32), v, b)
 
 
 @functools.partial(jax.jit, static_argnames=("n", "k", "mode"))
 def sketch_from_flat(flat, ids, valid, *, n, k, mode):
-    """Build the (n+1, k) occupancy sketch from an existing flat pool (for
-    stores created without an incremental sketch)."""
+    """Bool (n+1, k) occupancy from a flat pool — the PR-3 reference fold.
+
+    Kept as the *test oracle* for the packed-word fold (the property suite
+    asserts ``pack_sketch(sketch_from_flat(...)) == packed fold`` bit for
+    bit); no production path materializes this buffer anymore.
+    """
     b = bucket_of(ids, k, mode)
     v = jnp.where(valid, flat, n + 1)            # OOB -> dropped
     return jnp.zeros((n + 1, k), bool).at[v, b].set(True, mode="drop")
@@ -129,6 +185,21 @@ def union_gains(sk_words, cov_words):
     from repro.kernels import ops as kops
     return _minus_base(kops.sketch_union_popcount(sk_words, cov_words),
                        cov_words)
+
+
+def union_gains_stripe(sk_words, cov_words, stripe_start, stripe_rows: int):
+    """Δocc for one contiguous stripe of sketch rows — the shard-local body
+    of the mesh-parallel sweep (each device scores its stripe of candidates
+    against its sketch replica; a psum of the disjoint stripes yields the
+    full replicated vector).  The stripe runs through the Pallas
+    union-popcount kernel, so the mesh=1 sweep is exactly the historical
+    single-device kernel sweep.
+    """
+    from repro.kernels import ops as kops
+    rows = jax.lax.dynamic_slice(
+        sk_words, (stripe_start, 0), (stripe_rows, sk_words.shape[1]))
+    occ = kops.sketch_union_popcount(rows, cov_words)
+    return occ - _popcount(cov_words).sum(dtype=jnp.int32)
 
 
 def linear_count(occupied, k: int):

@@ -10,6 +10,13 @@ that plumbing:
   the inner product of the CELF sketch estimate: the union-cardinality proxy
   for ``|rows(v) ∪ rows(S)|`` evaluated for *all* nodes in one cross-row
   popcount sweep (grid over node blocks, SWAR popcount per word).
+* :func:`sketch_scatter_or` — scatter-OR of (row, bucket) bit pairs into
+  the packed (R, k/32) occupancy words, the sketch *fold*.  XLA has no
+  scatter-or, so the portable fold (``core/sketch.scatter_or_bits``)
+  lexsorts + dedups + scatter-adds; this kernel is the accelerator-native
+  alternative — a serial read-modify-write loop per block, the moral
+  equivalent of gIM's ``atomicOr`` — and is property-tested bit-identical
+  to the sort-based fold.
 
 The matching ``popcount(covered)`` baseline is one :func:`_popcount` call on
 a (W,) vector — not worth a kernel.  Estimation (linear counting) happens in
@@ -56,3 +63,41 @@ def sketch_union_popcount(words, cov, *, block_b: int = 256,
         out_shape=jax.ShapeDtypeStruct((r,), jnp.int32),
         interpret=interpret,
     )(words, cov.reshape(1, w))
+
+
+def _scatter_or_kernel(words_ref, v_ref, w_ref, bit_ref, out_ref):
+    out_ref[...] = words_ref[...]
+
+    def body(e, carry):
+        vv = v_ref[e]
+        wi = w_ref[e]
+        cur = pl.load(out_ref, (vv, wi))
+        pl.store(out_ref, (vv, wi), cur | bit_ref[e])
+        return carry
+
+    jax.lax.fori_loop(0, v_ref.shape[0], body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sketch_scatter_or(words, v, bucket, *, interpret: bool = True):
+    """``out[v[e], bucket[e]//32] |= 1 << (bucket[e] % 32)`` for every pair.
+
+    ``words``: (R, W) uint32 packed occupancy; ``v``/``bucket``: (E,) int32.
+    Pairs with ``v`` out of ``[0, R)`` are dropped.  OR is idempotent, so
+    duplicates need no dedup — this is the scatter-OR the sort-based fold
+    (``core/sketch.scatter_or_bits``) emulates; a serial RMW loop stands in
+    for the GPU's ``atomicOr`` (one pallas block owns the whole matrix, so
+    the loop is race-free by construction).
+    """
+    r, w = words.shape
+    valid = (v >= 0) & (v < r)
+    v_safe = jnp.where(valid, v, 0).astype(jnp.int32)
+    wi = jnp.where(valid, bucket >> 5, 0).astype(jnp.int32)
+    bit = jnp.where(
+        valid, jnp.uint32(1) << (bucket & 31).astype(jnp.uint32),
+        jnp.uint32(0))
+    return pl.pallas_call(
+        _scatter_or_kernel,
+        out_shape=jax.ShapeDtypeStruct((r, w), jnp.uint32),
+        interpret=interpret,
+    )(words, v_safe, wi, bit)

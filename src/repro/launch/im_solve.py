@@ -27,6 +27,7 @@ from repro.graph import csr, generators, weights
 from repro.core import rrset
 from repro.core.engine import RRBatch, register_engine, resolve_qcap
 from repro.core.imm import IMMSolver
+from repro.launch.mesh import make_sample_mesh
 
 
 @register_engine("queue_sharded")
@@ -95,18 +96,21 @@ class ShardedQueueEngine:
             in_specs=(P(), P(), P(), P()),
             out_specs=(P(axis), P(axis), P(axis), P(axis))))
 
-    def sample(self, key) -> RRBatch:
+    def _sample_raw(self, key):
         if self._fn is None:
             self._fn = self._build()
-        # the key broadcast and the per-round result gather onto the
-        # store's device are the fan-out's inherent data movement — done
-        # as *explicit* device_puts (permitted under the transfer guard)
+        # the key broadcast is the fan-out's inherent data movement — an
+        # *explicit* device_put (permitted under the transfer guard)
         keydata = jax.device_put(jax.random.key_data(key),
                                  self._rep_sharding)
-        nodes, lengths, overflow, steps = self._fn(*self._replicated,
-                                                   keydata)
+        return self._fn(*self._replicated, keydata)
+
+    def sample(self, key) -> RRBatch:
+        nodes, lengths, overflow, steps = self._sample_raw(key)
         n_dev = self.mesh.devices.size
         dev0 = self.mesh.devices.reshape(-1)[0]
+        # gather the per-device rows onto one device for a single-device
+        # consumer (explicit device_puts, guard-legal)
         nodes, lengths, overflow, steps = (
             jax.device_put(x, dev0)
             for x in (nodes, lengths, overflow, steps))
@@ -116,17 +120,46 @@ class ShardedQueueEngine:
                             lengths.reshape(-1), overflow.reshape(-1),
                             steps.max())
 
+    def sample_sharded(self, key) -> RRBatch:
+        """Mesh-native sample: the batch's *pool* arrays (nodes/lengths)
+        stay sharded over the mesh — each device's rows resident where they
+        were sampled, no dev0 gather.  A
+        :class:`~repro.core.coverage.ShardedDeviceRRStore` on the same mesh
+        re-lays them out with one explicit device_put.  Only the per-round
+        *stats* (the steps scalar and the per-lane overflow flags) are
+        explicitly gathered to one device for the solver's accumulators —
+        O(lanes) bools instead of the O(rows·width) node gather ``sample``
+        performs."""
+        nodes, lengths, overflow, steps = self._sample_raw(key)
+        n_dev = self.mesh.devices.size
+        dev0 = self.mesh.devices.reshape(-1)[0]
+        overflow, steps = (jax.device_put(x, dev0)
+                           for x in (overflow, steps))
+        return RRBatch.make(nodes.reshape(n_dev * self.config.batch, -1),
+                            lengths.reshape(-1), overflow.reshape(-1),
+                            steps.max())
+
 
 def solve(g, k: int, eps: float, *, batch_per_dev: int = 128, seed: int = 0,
-          selection: str = "auto"):
+          selection: str = "auto", mesh=None):
+    """Distributed IMM solve: sampler fan-out AND pool/selection sharing one
+    mesh.  ``mesh=None`` builds a mesh over every local device; the engine
+    samples on it, the solver's pool is sharded over it (``samples`` axis),
+    and the per-device rows never leave the device that sampled them
+    (``sample_sharded``)."""
+    mesh = mesh if mesh is not None else make_sample_mesh(None)
     g_rev = csr.reverse(g)
     engine = ShardedQueueEngine(
-        g_rev, ShardedQueueEngine.Config(batch=batch_per_dev))
-    solver = IMMSolver(g, engine=engine, seed=seed, selection=selection)
+        g_rev, ShardedQueueEngine.Config(batch=batch_per_dev), mesh=mesh)
+    solver = IMMSolver(g, engine=engine, seed=seed, selection=selection,
+                       mesh=mesh)
     seeds, est, stats = solver.solve(k, eps)
     return seeds, est, dict(theta=stats.theta, sampled=stats.n_rr_sampled,
                             selection=stats.selection,
-                            devices=engine.mesh.devices.size)
+                            devices=engine.mesh.devices.size,
+                            mesh_shape=stats.mesh_shape,
+                            pool_sharding=stats.pool_sharding,
+                            per_device_pool_bytes=stats.per_device_pool_bytes)
 
 
 def main():
@@ -138,14 +171,19 @@ def main():
     ap.add_argument("--selection", default="auto",
                     choices=("auto", "fused", "bitset", "celf-sketch"),
                     help="seed-selection backend (DESIGN.md §3)")
+    ap.add_argument("--mesh", default=None,
+                    help="device count or axis spec for the sampling mesh "
+                         "(e.g. '4' or 'samples:8'; default: all devices)")
     args = ap.parse_args()
     src, dst = generators.barabasi_albert(args.n, args.r, seed=0)
     g = weights.wc_weights(csr.from_edges(src, dst, args.n))
     t0 = time.time()
-    seeds, est, stats = solve(g, args.k, args.eps, selection=args.selection)
-    print(f"devices={stats['devices']} theta={stats['theta']} "
-          f"sampled={stats['sampled']} selection={stats['selection']} "
-          f"time={time.time() - t0:.2f}s")
+    seeds, est, stats = solve(g, args.k, args.eps, selection=args.selection,
+                              mesh=make_sample_mesh(args.mesh))
+    print(f"devices={stats['devices']} mesh={stats['pool_sharding']} "
+          f"pool_bytes/dev={stats['per_device_pool_bytes']} "
+          f"theta={stats['theta']} sampled={stats['sampled']} "
+          f"selection={stats['selection']} time={time.time() - t0:.2f}s")
     print(f"seeds={sorted(seeds.tolist())} estimate={est:.1f}")
 
 

@@ -5,6 +5,30 @@ from __future__ import annotations
 import jax
 
 
+def make_sample_mesh(spec=None, *, axis: str = "samples"):
+    """Mesh for the RR-sampling pipeline from a ``--mesh`` style spec.
+
+    ``spec``: ``None``/``""``/``0`` -> all local devices; an int (or int
+    string) N -> the first N devices; ``"name:N"`` -> N devices on a custom
+    axis name.  The returned 1-axis mesh is what ``ShardedDeviceRRStore``
+    shards the pool's ``samples`` dimension over — a 1-device spec yields
+    the mesh=1 special case, not a different code path.
+    """
+    import numpy as np
+    devs = jax.devices()
+    if spec in (None, "", 0, "0"):
+        n = len(devs)
+    else:
+        s = str(spec)
+        if ":" in s:
+            axis, s = s.split(":", 1)
+        n = int(s)
+    if not 1 <= n <= len(devs):
+        raise ValueError(f"mesh spec {spec!r} wants {n} devices; "
+                         f"{len(devs)} available")
+    return jax.sharding.Mesh(np.asarray(devs[:n]), (axis,))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips for the multi-pod run."""
     shape = (2, 16, 16) if multi_pod else (16, 16)

@@ -140,6 +140,156 @@ def test_ks_power_control_rejects_wrong_law():
     assert res.pvalue < P_MIN, res
 
 
+# ---------------------- spread-estimate conformance (Eq. 3, per engine)
+#
+# The KS suite above checks RR-set *size* laws; an engine can pass it while
+# biasing *membership* (which nodes land in a set).  Eq. 3 turns membership
+# into the spread estimate sigma_hat(S) = n * Pr[S hits a random RR set], so
+# here every engine's hit-fraction for a fixed seed set is compared against
+# an independent oracle sampler with a two-sample Bernoulli concentration
+# bound (5 sigma of the pooled standard error — deterministic with fixed
+# RNGs, false-alarm probability < 1e-6 per test).
+
+SPREAD_T = 1024
+SPREAD_SIGMA = 5.0
+
+
+def _fixed_seed_set(g_rev, size=3):
+    """Deterministic seed set (top row-degree of the reverse graph) — any
+    fixed set works for the two-sample bound; this one just guarantees a
+    hit fraction away from 0."""
+    deg = np.diff(np.asarray(g_rev.offsets))
+    return np.argsort(-deg, kind="stable")[:size].tolist()
+
+
+def _engine_hit_fraction(name, g_rev, seed_set, count, *, key_seed=500,
+                         **opts):
+    """Fraction of engine-sampled RR sets intersecting ``seed_set``."""
+    eng = make_engine(name, g_rev, **opts)
+    s = np.asarray(seed_set)
+    hits = total = 0
+    i = 0
+    while total < count:
+        b = eng.sample(jax.random.key(key_seed + i))
+        i += 1
+        nodes, lens = np.asarray(b.nodes), np.asarray(b.lengths)
+        mask = np.arange(nodes.shape[1])[None, :] < \
+            np.clip(lens, 0, nodes.shape[1])[:, None]
+        x = (np.isin(nodes, s) & mask).any(axis=1)
+        keep = lens > 0
+        take = min(int(keep.sum()), count - total)
+        hits += int(x[keep][:take].sum())
+        total += take
+    return hits / count
+
+
+def _oracle_hit_fraction(g_rev, seed_set, count, *, model="ic", seed=901):
+    rng = np.random.default_rng(seed)
+    offs = np.asarray(g_rev.offsets)
+    idx = np.asarray(g_rev.indices)
+    w = np.asarray(g_rev.weights)
+    n = g_rev.n_nodes
+    sampler = oracle.rr_set_ic if model == "ic" else oracle.rr_set_lt
+    s = set(seed_set)
+    hits = 0
+    for _ in range(count):
+        rr = sampler(offs, idx, w, int(rng.integers(n)), rng)
+        hits += bool(s & set(rr))
+    return hits / count
+
+
+def _assert_within_concentration(p1, t1, p2, t2, label):
+    pool = (p1 * t1 + p2 * t2) / (t1 + t2)
+    se = np.sqrt(max(pool * (1.0 - pool), 1e-12) * (1.0 / t1 + 1.0 / t2))
+    assert abs(p1 - p2) <= SPREAD_SIGMA * se + 1e-12, \
+        (label, p1, p2, se, abs(p1 - p2) / max(se, 1e-12))
+    return se
+
+
+@pytest.mark.parametrize("engine", ("queue", "dense", "refill",
+                                    "queue_sharded"))
+def test_spread_estimate_ic_engines_within_concentration(engine):
+    g_rev = csr_mod.reverse(_graph())
+    seed_set = _fixed_seed_set(g_rev)
+    p_e = _engine_hit_fraction(engine, g_rev, seed_set, SPREAD_T, batch=64)
+    p_o = _oracle_hit_fraction(g_rev, seed_set, SPREAD_T, model="ic")
+    _assert_within_concentration(p_e, SPREAD_T, p_o, SPREAD_T, engine)
+
+
+def test_spread_estimate_lt_engine_within_concentration():
+    g_rev = csr_mod.reverse(_graph())
+    seed_set = _fixed_seed_set(g_rev)
+    p_e = _engine_hit_fraction("lt", g_rev, seed_set, SPREAD_T, batch=64)
+    p_o = _oracle_hit_fraction(g_rev, seed_set, SPREAD_T, model="lt")
+    _assert_within_concentration(p_e, SPREAD_T, p_o, SPREAD_T, "lt")
+
+
+def test_spread_estimate_mrim_within_concentration():
+    """MRIM spread law on the tagged item space: a (node, round) seed set
+    hits a sample iff round r's BFS from the shared root reaches the node —
+    engine fraction vs an oracle running T tagged BFS per sample."""
+    t_rounds = 2
+    g_rev = csr_mod.reverse(_graph())
+    base = _fixed_seed_set(g_rev)
+    n = g_rev.n_nodes
+    tagged = [0 * n + base[0], 0 * n + base[1], 1 * n + base[2]]
+    p_e = _engine_hit_fraction("mrim", g_rev, tagged, SPREAD_T,
+                               batch=32, t_rounds=t_rounds)
+    rng = np.random.default_rng(903)
+    offs = np.asarray(g_rev.offsets)
+    idx = np.asarray(g_rev.indices)
+    w = np.asarray(g_rev.weights)
+    s = set(tagged)
+    hits = 0
+    for _ in range(SPREAD_T):
+        root = int(rng.integers(n))
+        enc = set()
+        for r in range(t_rounds):
+            enc |= {r * n + v
+                    for v in oracle.rr_set_ic(offs, idx, w, root, rng)}
+        hits += bool(s & enc)
+    _assert_within_concentration(p_e, SPREAD_T, hits / SPREAD_T, SPREAD_T,
+                                 "mrim")
+
+
+def test_spread_estimate_anchor_vs_forward_mc():
+    """Absolute anchor: the oracle RIS estimate n*p (Eq. 3) agrees with a
+    forward Monte-Carlo spread of the same seed set, pinning the *scale* of
+    every estimate above (per-simulation spread lies in [0, n], so the MC
+    standard error is bounded by n / (2 sqrt(sims)))."""
+    from repro.core import forward
+    g = _graph()
+    g_rev = csr_mod.reverse(g)
+    n = g.n_nodes
+    seed_set = _fixed_seed_set(g_rev)
+    t = 1536
+    p_o = _oracle_hit_fraction(g_rev, seed_set, t, model="ic", seed=905)
+    sims = 3072
+    mc = forward.ic_spread(jax.random.key(7), g, seed_set, n_sims=sims)
+    se_ris = n * np.sqrt(max(p_o * (1 - p_o), 1e-12) / t)
+    se_mc = n / (2.0 * np.sqrt(sims))
+    assert abs(n * p_o - mc) <= SPREAD_SIGMA * (se_ris + se_mc), \
+        (n * p_o, mc, se_ris, se_mc)
+
+
+def test_spread_estimate_power_control_rejects_weak_seed_set():
+    """The concentration bound must be able to fail: the hit fraction of
+    the most influential seed set (top *out*-degree of the forward graph —
+    RR sets are reverse-reachable, so out-edges drive membership) vs the
+    least influential one must differ by far more than the two-sample
+    bound."""
+    g = _graph()
+    g_rev = csr_mod.reverse(g)
+    deg = np.diff(np.asarray(g.offsets))             # forward out-degree
+    strong = np.argsort(-deg, kind="stable")[:3].tolist()
+    weak = np.argsort(deg, kind="stable")[:3].tolist()
+    p_s = _oracle_hit_fraction(g_rev, strong, SPREAD_T, model="ic", seed=907)
+    p_w = _oracle_hit_fraction(g_rev, weak, SPREAD_T, model="ic", seed=908)
+    pool = (p_s + p_w) / 2
+    se = np.sqrt(max(pool * (1 - pool), 1e-12) * (2.0 / SPREAD_T))
+    assert abs(p_s - p_w) > SPREAD_SIGMA * se, (p_s, p_w, se)
+
+
 # ------------------------------- micro-step conformance (deterministic)
 
 def _dense_first_occurrence(nbr, cand):

@@ -113,7 +113,7 @@ def test_sketch_from_flat_matches_incremental():
     rng = np.random.default_rng(9)
     n, k = 35, 64
     dev, _ = _random_pool(rng, n, batches=3, count=20, sketch_k=k)
-    occ = sk.sketch_from_flat(dev._flat, dev._ids, dev._valid,
+    occ = sk.sketch_from_flat(dev._flat[0], dev._ids[0], dev._valid[0],
                               n=n, k=dev.sketch_k, mode="mod")
     rebuilt = sk.pack_sketch(occ, words=dev.sketch_k // 32)
     np.testing.assert_array_equal(np.asarray(rebuilt),
@@ -136,7 +136,7 @@ def test_celf_identical_with_mix_hash_mode():
     res_c = cov.select_seeds_celf(dev, k)
     res_f = dev.select(k, method="flat")
     assert np.asarray(res_c.seeds).tolist() == np.asarray(res_f.seeds).tolist()
-    occ = sk.sketch_from_flat(dev._flat, dev._ids, dev._valid,
+    occ = sk.sketch_from_flat(dev._flat[0], dev._ids[0], dev._valid[0],
                               n=n, k=dev.sketch_k, mode="mix")
     np.testing.assert_array_equal(
         np.asarray(sk.pack_sketch(occ, words=dev.sketch_k // 32)),
