@@ -183,6 +183,67 @@ def bench_sharded(n=100_000, rows=1 << 20, k=10, sketch_k=1024,
     return out
 
 
+def bench_variants(n=2000, r=4, k=8, eps=0.4, max_theta=2048, batch=256,
+                   seed=0):
+    """End-to-end ``IMMSolver.solve(IMProblem)`` across the problem variants
+    (plain / weighted / budgeted / candidate-restricted / MRIM) on one
+    graph: wall time, θ, seed count, spread on each variant's scale, and
+    budget spent.  Writes ``experiments/bench/BENCH_variants.json``.
+
+    Weights are integer-valued so weighted solves stay bit-reproducible
+    across mesh sizes (float32 sums exact — DESIGN.md §6).
+    """
+    from repro.core.imm import IMMSolver
+    from repro.core.problem import IMProblem
+    g = ba_graph(n, r)
+    rng = np.random.default_rng(seed)
+    w = rng.integers(1, 9, n).astype(np.float32)
+    costs = rng.integers(1, 5, n).astype(np.float32)
+    deg = np.diff(np.asarray(g.offsets))
+    cand = np.argsort(-deg, kind="stable")[:max(n // 10, k)]
+    problems = {
+        "plain": IMProblem(k=k, eps=eps, max_theta=max_theta),
+        "weighted": IMProblem(k=k, eps=eps, max_theta=max_theta,
+                              node_weights=w),
+        "budgeted": IMProblem(eps=eps, max_theta=max_theta, costs=costs,
+                              budget=float(2 * k)),
+        "weighted+budgeted": IMProblem(eps=eps, max_theta=max_theta,
+                                       node_weights=w, costs=costs,
+                                       budget=float(2 * k)),
+        "candidates": IMProblem(k=k, eps=eps, max_theta=max_theta,
+                                candidates=cand),
+        "mrim": IMProblem(k=max(k // 2, 1), t_rounds=2, theta=max_theta),
+    }
+    out = {"graph": {"kind": "barabasi_albert", "n": n, "r": r,
+                     "weights": "wc"},
+           "params": {"k": k, "eps": eps, "max_theta": max_theta,
+                      "batch": batch, "seed": seed,
+                      "budget": float(2 * k)},
+           "variants": {}}
+    for name, problem in problems.items():
+        t0 = time.perf_counter()
+        res = IMMSolver(g, batch=batch, seed=seed).solve(problem)
+        dt = time.perf_counter() - t0
+        out["variants"][name] = {
+            "wall_s": round(dt, 3),
+            "theta": res.stats.theta,
+            "rr_sets": res.stats.n_rr_sampled,
+            "n_seeds": int(len(res.seeds)),
+            "seeds": np.asarray(res.seeds).tolist(),
+            "spread_estimate": round(float(res.spread), 1),
+            "scale": ("sum_w" if problem.node_weights is not None else "n"),
+            "cost": round(float(res.cost), 3),
+        }
+        report(f"perf_im/variants/{name}", dt * 1e6,
+               f"wall={dt:.2f}s;seeds={len(res.seeds)};"
+               f"spread={res.spread:.0f}")
+    assert out["variants"]["budgeted"]["cost"] <= 2 * k + 1e-6
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, "BENCH_variants.json"), "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
 def bench_pipeline(n=N, r=R, k=10, eps=0.4, max_theta=4096, batch=512,
                    engines=PIPELINE_ENGINES, seed=0):
     """Time end-to-end ``imm()`` per engine; returns the result dict."""
@@ -287,6 +348,9 @@ if __name__ == "__main__":
     ap.add_argument("--sharded", action="store_true",
                     help="mesh-sharded selection sweep past the bitset-"
                          "matrix limit (writes BENCH_sharded.json)")
+    ap.add_argument("--variants", action="store_true",
+                    help="IMProblem variant sweep: plain/weighted/budgeted/"
+                         "candidates/mrim (writes BENCH_variants.json)")
     ap.add_argument("--pool-rows", type=int, default=2048,
                     help="RR pool size for --selection-only")
     ap.add_argument("--rows", type=int, default=None,
@@ -299,7 +363,10 @@ if __name__ == "__main__":
                batch=args.batch, engines=tuple(args.engines.split(",")))
     skw = dict(n=args.n, r=args.r, k=args.k, pool_rows=args.pool_rows,
                batch=args.batch, sketch_k=args.sketch_k)
-    if args.sharded:
+    if args.variants:
+        bench_variants(n=args.n, r=args.r, k=args.k, eps=args.eps,
+                       max_theta=args.max_theta, batch=args.batch)
+    elif args.sharded:
         rows = args.rows if args.rows is not None else 1 << 20
         bench_sharded(n=args.n, rows=rows, k=args.k,
                       sketch_k=args.sketch_k, mesh_spec=args.mesh)

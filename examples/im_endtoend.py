@@ -16,6 +16,7 @@ import jax
 
 from repro.graph import csr, generators, weights
 from repro.core.imm import IMMSolver
+from repro.core.problem import IMProblem
 from repro.core import forward
 from repro.ckpt import checkpoint as ckpt
 
@@ -36,10 +37,10 @@ def main():
     g = weights.wc_weights(csr.from_edges(src, dst, n))
     print(f"[graph] epinions-like stand-in n={g.n_nodes} m={g.n_edges}")
 
-    solver = IMMSolver(g, engine=args.engine, model=args.model,
-                       batch=512, seed=0)
+    solver = IMMSolver(g, engine=args.engine, batch=512, seed=0)
     t0 = time.time()
-    seeds, est, stats = solver.solve(args.k, args.eps)
+    res = solver.solve(IMProblem(k=args.k, eps=args.eps, model=args.model))
+    seeds, est, stats = res.seeds, res.spread, res.stats
     dt = time.time() - t0
     print(f"[solve] {dt:.2f}s  theta={stats.theta} "
           f"sampled={stats.n_rr_sampled} rounds={stats.rounds} "

@@ -187,6 +187,12 @@ def _pad_batch_rows(nodes, lens, *, pad, n):
             jnp.concatenate([lens, jnp.zeros((pad,), lens.dtype)]))
 
 
+@functools.partial(jax.jit, static_argnames=("pad",))
+def _pad_row_weights(roww, *, pad):
+    """Zero-weight sentinel rows matching :func:`_pad_batch_rows`."""
+    return jnp.concatenate([roww, jnp.zeros((pad,), roww.dtype)])
+
+
 @functools.partial(jax.jit, static_argnames=("d", "width"))
 def _shard_counts(lens, *, d, width):
     """Per-shard (elements, valid rows) of one padded batch: (D, 2) int32."""
@@ -196,12 +202,19 @@ def _shard_counts(lens, *, d, width):
                       (l > 0).sum(axis=1, dtype=jnp.int32)], axis=1)
 
 
-def _append_scatter_local(flat, ids, valid, t, n_rr, nodes, lens):
+def _append_scatter_local(flat, ids, valid, t, n_rr, nodes, lens,
+                          ew=None, wsum=None, roww=None):
     """Rank-scatter one padded batch into one shard's live buffers.
 
     Element ranks are a row-major prefix sum of the validity mask (rows stay
     contiguous, matching the host compaction order exactly); rows with
     length 0 are padding and receive no row id.  Row ids are shard-*local*.
+
+    Row-weighted stores pass ``ew``/``wsum``/``roww`` (all three or none):
+    the row weight lands on every element of its row (weighted Occur is
+    then one scatter-add of ``ew``) and the shard's total valid-row weight
+    accumulates into ``wsum`` (the weighted F_R denominator).  The
+    unweighted trace is unchanged by the extra parameters.
     """
     cap = flat.shape[0]
     r, w = nodes.shape
@@ -216,11 +229,19 @@ def _append_scatter_local(flat, ids, valid, t, n_rr, nodes, lens):
     rid = n_rr + jnp.cumsum(row_valid, dtype=jnp.int32) - 1
     ids = ids.at[dest].set(
         jnp.broadcast_to(rid[:, None], (r, w)).reshape(-1), mode="drop")
-    return (flat, ids, valid, t + fm.sum(dtype=jnp.int32),
-            n_rr + row_valid.sum(dtype=jnp.int32))
+    t_out = t + fm.sum(dtype=jnp.int32)
+    nrr_out = n_rr + row_valid.sum(dtype=jnp.int32)
+    if ew is None:
+        return flat, ids, valid, t_out, nrr_out
+    roww = roww.astype(jnp.float32)
+    ew = ew.at[dest].set(
+        jnp.broadcast_to(roww[:, None], (r, w)).reshape(-1), mode="drop")
+    wsum = wsum + jnp.where(row_valid, roww, 0.0).sum(dtype=jnp.float32)
+    return flat, ids, valid, ew, t_out, nrr_out, wsum
 
 
-def _append_packed_local(flat, ids, valid, t, n_rr, nodes, lens, *, pack, n):
+def _append_packed_local(flat, ids, valid, t, n_rr, nodes, lens, *, pack, n,
+                         ew=None, wsum=None, roww=None):
     """Rank-scatter append, packed variant for wide batches (one shard).
 
     XLA:CPU lowers scatter to a serial per-update loop, so the plain
@@ -231,6 +252,9 @@ def _append_packed_local(flat, ids, valid, t, n_rr, nodes, lens, *, pack, n):
     ``dynamic_update_slice`` ops; positions past the batch's element count
     get the virgin-buffer values (sentinel/0/False), which the next append
     overwrites.  Host picks this path whenever R·W ≫ elements ≤ pack.
+
+    ``ew``/``wsum``/``roww`` (all three or none) are the row-weighted
+    extension — see :func:`_append_scatter_local`.
     """
     r, w = nodes.shape
     lens = jnp.minimum(jnp.maximum(lens.astype(jnp.int32), 0), w)
@@ -249,8 +273,15 @@ def _append_packed_local(flat, ids, valid, t, n_rr, nodes, lens, *, pack, n):
     flat = jax.lax.dynamic_update_slice(flat, upd_flat, (t,))
     ids = jax.lax.dynamic_update_slice(ids, upd_ids, (t,))
     valid = jax.lax.dynamic_update_slice(valid, jvalid, (t,))
-    return (flat, ids, valid, t + total,
-            n_rr + row_valid.sum(dtype=jnp.int32))
+    t_out = t + total
+    nrr_out = n_rr + row_valid.sum(dtype=jnp.int32)
+    if ew is None:
+        return flat, ids, valid, t_out, nrr_out
+    roww = roww.astype(jnp.float32)
+    ew = jax.lax.dynamic_update_slice(
+        ew, jnp.where(jvalid, roww[src // w], 0.0), (t,))
+    wsum = wsum + jnp.where(row_valid, roww, 0.0).sum(dtype=jnp.float32)
+    return flat, ids, valid, ew, t_out, nrr_out, wsum
 
 
 def _bitset_from_flat_local(flat, ids, valid, *, num_rows, n_words):
@@ -299,6 +330,40 @@ def _mesh_store_fns(mesh: Mesh):
         return _wrap_append(functools.partial(
             _append_packed_local, pack=pack, n=n))(
             flat, ids, valid, t, nrr, nodes, lens)
+
+    def _wrap_append_w(local_fn):
+        def local(flat, ids, valid, ew, t, nrr, wsum, nodes, lens, roww):
+            out = local_fn(flat[0], ids[0], valid[0], t[0], nrr[0],
+                           nodes[0], lens[0], ew=ew[0], wsum=wsum[0],
+                           roww=roww[0])
+            return tuple(x[None] for x in out)
+        return shard_map_unchecked(
+            local, mesh=mesh,
+            in_specs=(buf, buf, buf, buf, vec, vec, vec, b3, buf, buf),
+            out_specs=(buf, buf, buf, buf, vec, vec, vec))
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3, 4, 5, 6))
+    def append_scatter_w(flat, ids, valid, ew, t, nrr, wsum, nodes, lens,
+                         roww):
+        return _wrap_append_w(_append_scatter_local)(
+            flat, ids, valid, ew, t, nrr, wsum, nodes, lens, roww)
+
+    @functools.partial(jax.jit, static_argnames=("pack", "n"),
+                       donate_argnums=(0, 1, 2, 3, 4, 5, 6))
+    def append_packed_w(flat, ids, valid, ew, t, nrr, wsum, nodes, lens,
+                        roww, *, pack, n):
+        return _wrap_append_w(functools.partial(
+            _append_packed_local, pack=pack, n=n))(
+            flat, ids, valid, ew, t, nrr, wsum, nodes, lens, roww)
+
+    @functools.partial(jax.jit, static_argnames=("newcap",))
+    def grow_ew(ew, *, newcap):
+        def local(e):
+            pad = newcap - e.shape[1]
+            return jnp.concatenate(
+                [e, jnp.zeros((1, pad), jnp.float32)], 1)
+        return shard_map_unchecked(
+            local, mesh=mesh, in_specs=(buf,), out_specs=buf)(ew)
 
     @functools.partial(jax.jit, static_argnames=("newcap", "n"))
     def grow(flat, ids, valid, *, newcap, n):
@@ -361,7 +426,10 @@ def _mesh_store_fns(mesh: Mesh):
     fns = Fns()
     fns.append_scatter = append_scatter
     fns.append_packed = append_packed
+    fns.append_scatter_w = append_scatter_w
+    fns.append_packed_w = append_packed_w
     fns.grow = grow
+    fns.grow_ew = grow_ew
     fns.sketch_fold = sketch_fold
     fns.bitset_build = bitset_build
     fns.sketch_from_pool = sketch_from_pool
@@ -403,10 +471,11 @@ class ShardedDeviceRRStore:
 
     def __init__(self, n_nodes: int, capacity: int = 4096,
                  sketch_k: int | None = None, sketch_mode: str = "mod",
-                 mesh: Mesh | None = None):
+                 mesh: Mesh | None = None, row_weighted: bool = False):
         if n_nodes >= np.iinfo(np.int32).max:
             raise ValueError("item space must fit int32")
         self.n_nodes = n_nodes
+        self.row_weighted = row_weighted
         self.mesh = mesh if mesh is not None else _default_mesh()
         self.axis = self.mesh.axis_names[0]
         self.n_shards = d = int(self.mesh.devices.size)
@@ -423,6 +492,14 @@ class ShardedDeviceRRStore:
         self._nrr_dev = jax.device_put(np.zeros(d, np.int32), self._sh_vec)
         self._t_loc = np.zeros(d, np.int64)      # host mirrors (exact)
         self._nrr_loc = np.zeros(d, np.int64)
+        # weighted rows (weighted IM, importance-weighted estimator): ew is
+        # the per-*element* row weight (weighted Occur = one scatter-add of
+        # ew), _w_dev the per-shard total valid-row weight (the weighted
+        # F_R denominator, psum'd at selection)
+        self._ew = (jax.device_put(np.zeros((d, cap), np.float32),
+                                   self._sh_buf) if row_weighted else None)
+        self._w_dev = (jax.device_put(np.zeros(d, np.float32), self._sh_vec)
+                       if row_weighted else None)
         self._cache: RRStore | None = None
         self._bitset = None              # (D, num_rows, n_words) cache
         self.sketch_mode = sketch_mode
@@ -458,8 +535,9 @@ class ShardedDeviceRRStore:
         return self._nrr_dev
 
     def per_device_pool_bytes(self) -> int:
-        """Live pool bytes on each device: flat + ids + valid buffers."""
-        return self.capacity * (4 + 4 + 1)
+        """Live pool bytes on each device: flat + ids + valid buffers
+        (+ the element-weight buffer on row-weighted stores)."""
+        return self.capacity * (4 + 4 + 1 + (4 if self.row_weighted else 0))
 
     def sketch_bytes(self) -> int:
         """Per-replica packed sketch bytes (0 without an incremental
@@ -469,12 +547,17 @@ class ShardedDeviceRRStore:
         return self.sketch_rows * (self.sketch_k // 32) * 4
 
     # -- append ------------------------------------------------------------
-    def append_batch(self, batch) -> None:
+    def append_batch(self, batch, row_w=None) -> None:
         """Compact one batch (``RRBatch`` or ``(nodes, lengths)``) into the
         sharded pool.  Zero-length rows are padding (fixed-shape device
         engine paths emit them) and are dropped.  Rows are dealt to shards
         in contiguous blocks; the tail shard absorbs the divisibility
-        padding."""
+        padding.
+
+        ``row_w`` — (R,) per-row weights, required on ``row_weighted``
+        stores (ignored entries on padding rows): the weight lands on every
+        element of the row (``ew``), making weighted Occur one scatter-add.
+        """
         nodes, lens = (batch.nodes, batch.lengths) if hasattr(batch, "nodes") \
             else batch
         nodes = jnp.asarray(nodes)
@@ -482,6 +565,15 @@ class ShardedDeviceRRStore:
         if nodes.ndim != 2 or lens.shape != (nodes.shape[0],):
             raise ValueError("append_batch wants padded (R, W) nodes + (R,) "
                              "lengths")
+        if self.row_weighted:
+            if row_w is None:
+                raise ValueError("row_weighted store needs row_w= per append")
+            roww = jnp.asarray(row_w, jnp.float32)
+            if roww.shape != (nodes.shape[0],):
+                raise ValueError("row_w must be (R,) aligned with the batch")
+        elif row_w is not None:
+            raise ValueError("row_w given but the store was built without "
+                             "row_weighted=True")
         r, w = nodes.shape
         d = self.n_shards
         rloc = -(-r // d)
@@ -489,6 +581,8 @@ class ShardedDeviceRRStore:
         if pad:
             nodes, lens = _pad_batch_rows(nodes, lens, pad=pad,
                                           n=self.n_nodes)
+            if self.row_weighted:
+                roww = _pad_row_weights(roww, pad=pad)
         counts = np.asarray(jax.device_get(
             _shard_counts(lens, d=d, width=w)), np.int64)
         elems_l, rows_l = counts[:, 0], counts[:, 1]
@@ -515,9 +609,20 @@ class ShardedDeviceRRStore:
             self._flat, self._ids, self._valid = self._fns.grow(
                 self._flat, self._ids, self._valid,
                 newcap=newcap, n=self.n_nodes)
+            if self.row_weighted:
+                self._ew = self._fns.grow_ew(self._ew, newcap=newcap)
         nodes_sh = jax.device_put(nodes.reshape(d, rloc, w), self._sh_b3)
         lens_sh = jax.device_put(lens.reshape(d, rloc), self._sh_buf)
-        if packed:
+        if self.row_weighted:
+            roww_sh = jax.device_put(roww.reshape(d, rloc), self._sh_buf)
+            fn = (functools.partial(self._fns.append_packed_w, pack=_PACK,
+                                    n=self.n_nodes)
+                  if packed else self._fns.append_scatter_w)
+            (self._flat, self._ids, self._valid, self._ew, self._t_dev,
+             self._nrr_dev, self._w_dev) = fn(
+                self._flat, self._ids, self._valid, self._ew, self._t_dev,
+                self._nrr_dev, self._w_dev, nodes_sh, lens_sh, roww_sh)
+        elif packed:
             (self._flat, self._ids, self._valid, self._t_dev,
              self._nrr_dev) = self._fns.append_packed(
                 self._flat, self._ids, self._valid, self._t_dev,
@@ -620,9 +725,12 @@ class ShardedDeviceRRStore:
         identical on any mesh size)."""
         return _slice_extent(self.sketch_words_mesh(k), t=self.n_nodes + 1)
 
-    def select(self, k: int, method: str = "auto") -> "CoverageResult":
+    def select(self, k: int, method: str = "auto",
+               spec: "SelectionSpec | None" = None) -> "CoverageResult":
         if method in ("celf", "celf-sketch"):
-            return select_seeds_celf(self, k)
+            return select_seeds_celf(self, k, spec=spec)
+        if spec is not None:
+            return select_variant(self, spec, method=method)
         return select_seeds_device(self, k, method=method)
 
 
@@ -882,6 +990,230 @@ def _mesh_select_fns(mesh: Mesh):
             local, mesh=mesh, in_specs=(buf, buf, buf, buf, P()),
             out_specs=(buf, P()))(flat, ids, valid, cov_words, u)
 
+    # -- variant programs (weighted Occur / candidate mask / cost-ratio /
+    # group budgets) — the generalized Alg. 7 all four IM variants share.
+    # Plain problems never route here (they keep the bit-identical fast
+    # paths above); every variant knob composes inside one scan.
+
+    def _variant_locals(weighted):
+        """Shared scan body pieces for the fused/bitset variant programs."""
+
+        def occur_init(flat, ids, valid, ew, *, n, num_rows):
+            if weighted:
+                ew_l = jnp.where(valid, ew, 0.0)
+                occ = jnp.zeros(n + 1, jnp.float32).at[flat].add(
+                    ew_l, mode="drop")[:n]
+                # per-row weight for gains: every element of a row carries
+                # the row weight, so a segment max recovers it (>= 0 floors
+                # the -inf of element-less padding rows)
+                roww = jnp.maximum(jax.ops.segment_max(
+                    ew_l, jnp.clip(ids, 0, num_rows - 1),
+                    num_segments=num_rows), 0.0)
+                return occ, ew_l, roww
+            occ = jnp.zeros(n + 1, jnp.int32).at[flat].add(
+                valid.astype(jnp.int32), mode="drop")[:n]
+            return occ, None, None
+
+        def pick(occur, feas, costs, budget, spent, *, n, use_costs):
+            """Argmax of the variant score; returns (u, ok) with u == n (the
+            sentinel, matching nothing) when no feasible pick exists.  Ties
+            resolve to the lowest id (jnp.argmax), exactly like the plain
+            scan."""
+            if use_costs:
+                feas = feas & (costs <= budget - spent) & (occur > 0)
+                score = jnp.where(feas, occur.astype(jnp.float32) / costs,
+                                  -jnp.inf)
+                best = jnp.argmax(score).astype(jnp.int32)
+                ok = score[best] > -jnp.inf
+            else:
+                zero = jnp.float32(-1.0) if weighted else jnp.int32(-1)
+                masked = jnp.where(feas, occur, zero)
+                best = jnp.argmax(masked).astype(jnp.int32)
+                ok = masked[best] >= 0
+            return jnp.where(ok, best, n).astype(jnp.int32), ok
+
+        def gain_of(newly, new_words, roww):
+            if weighted:
+                return jnp.where(newly, roww, 0.0).sum(dtype=jnp.float32)
+            return _popcount(new_words).sum(dtype=jnp.int32)
+
+        def dec_of(flat, ids, valid, ew_l, newly, *, n, num_rows):
+            elem_newly = newly[jnp.clip(ids, 0, num_rows - 1)] & valid
+            if weighted:
+                return jnp.zeros(n + 1, jnp.float32).at[flat].add(
+                    jnp.where(elem_newly, ew_l, 0.0), mode="drop")[:n]
+            return jnp.zeros(n + 1, jnp.int32).at[flat].add(
+                elem_newly.astype(jnp.int32), mode="drop")[:n]
+
+        return occur_init, pick, gain_of, dec_of
+
+    def _make_variant(weighted, use_bitset):
+        occur_init, pick, gain_of, dec_of = _variant_locals(weighted)
+        statics = ("num_rows", "n", "k_steps", "n_group", "n_groups",
+                   "group_quota", "use_costs")
+
+        def program(flat, ids, valid, nrr, wvec, m_words, ew, cand, costs,
+                    budget, *, num_rows, n, k_steps, n_group, n_groups,
+                    group_quota, use_costs):
+            def local(flat, ids, valid, nrr, wvec, m_words, ew, cand, costs,
+                      budget):
+                flat, ids, valid = flat[0], ids[0], valid[0]
+                ew_sh = ew[0] if weighted else None
+                m = m_words[0] if use_bitset else None
+                occur0, ew_l, roww = occur_init(flat, ids, valid, ew_sh,
+                                                n=n, num_rows=num_rows)
+                occur0 = jax.lax.psum(occur0, ax)
+                nrr_tot = jax.lax.psum(nrr[0], ax)
+                denom = (jax.lax.psum(wvec[0], ax) if weighted
+                         else nrr_tot.astype(jnp.float32))
+                group_of = jnp.arange(n, dtype=jnp.int32) // n_group
+
+                def step(carry, _):
+                    occur, cov_words, spent, gbud, picked = carry
+                    # ~picked: a seed is never re-selected — once chosen its
+                    # marginal is 0 forever (submodularity), so re-picking
+                    # could only pad the result with duplicates (the plain
+                    # scan tolerates that; the variant result must not)
+                    feas = (gbud[group_of] > 0) & cand & ~picked
+                    u, ok = pick(occur, feas, costs, budget, spent,
+                                 n=n, use_costs=use_costs)
+                    covered = _unpack_covered(cov_words)
+                    if use_bitset:
+                        col = m[:, jnp.minimum(u >> 5, m.shape[1] - 1)]
+                        hit = ((col >> (u & 31).astype(jnp.uint32))
+                               & jnp.uint32(1)) != 0
+                        newly = hit & ~covered & (u < n)
+                    else:
+                        newly = _newly_rows(flat, ids, valid, covered, u)
+                    new_words = _pack_covered(newly)
+                    gain = jax.lax.psum(gain_of(newly, new_words, roww), ax)
+                    dec = jax.lax.psum(
+                        dec_of(flat, ids, valid, ew_l, newly,
+                               n=n, num_rows=num_rows), ax)
+                    if use_costs:
+                        spent = spent + jnp.where(
+                            ok, costs[jnp.minimum(u, n - 1)], 0.0)
+                    gbud = gbud.at[jnp.where(ok, u // n_group, n_groups)].add(
+                        -1, mode="drop")
+                    picked = picked.at[u].set(True, mode="drop")
+                    occur = occur - dec
+                    if weighted:
+                        # f32 decrement chains can drift a saturated node's
+                        # marginal to ~-1ulp; clamping keeps the feasibility
+                        # test (occur >= 0 / > 0) aligned with CELF's fresh
+                        # exact sums, which are never negative
+                        occur = jnp.maximum(occur, 0.0)
+                    return ((occur, cov_words | new_words, spent, gbud,
+                             picked), (u, gain))
+
+                cov0 = pvary(jnp.zeros(num_rows // 32, jnp.uint32), ax)
+                carry0 = (occur0, cov0, jnp.float32(0.0),
+                          jnp.full((n_groups,), group_quota, jnp.int32),
+                          jnp.zeros(n, bool))
+                (_, _, spent, _, _), (seeds, gains) = jax.lax.scan(
+                    step, carry0, None, length=k_steps)
+                frac = (gains.sum(dtype=gains.dtype)
+                        / jnp.maximum(denom, jnp.float32(1e-30))
+                        ).astype(jnp.float32)
+                return seeds, gains, frac, spent
+
+            dummy = P()
+            return shard_map_unchecked(
+                local, mesh=mesh,
+                in_specs=(buf, buf, buf, vec,
+                          vec if weighted else dummy,
+                          b3 if use_bitset else dummy,
+                          buf if weighted else dummy,
+                          dummy, dummy, dummy),
+                out_specs=(P(), P(), P(), P()))(
+                flat, ids, valid, nrr, wvec, m_words, ew, cand, costs,
+                budget)
+
+        return jax.jit(program, static_argnames=statics)
+
+    fused_variant = _make_variant(weighted=False, use_bitset=False)
+    fused_variant_w = _make_variant(weighted=True, use_bitset=False)
+    bitset_variant = _make_variant(weighted=False, use_bitset=True)
+    bitset_variant_w = _make_variant(weighted=True, use_bitset=True)
+
+    @functools.partial(jax.jit, static_argnames=("n",))
+    def occur_weighted(flat, valid, ew, *, n):
+        """Weighted Occur histogram (CELF's upper-bound init): one
+        psum-reduced scatter-add of the element weights."""
+        def local(flat, valid, ew):
+            h = jnp.zeros(n + 1, jnp.float32).at[flat[0]].add(
+                jnp.where(valid[0], ew[0], 0.0), mode="drop")[:n]
+            return jax.lax.psum(h, ax)
+        return shard_map_unchecked(
+            local, mesh=mesh, in_specs=(buf, buf, buf),
+            out_specs=P())(flat, valid, ew)
+
+    @functools.partial(jax.jit, static_argnames=("num_rows",))
+    def row_weights(ids, valid, ew, *, num_rows):
+        """Per-shard (D, num_rows) row-weight vectors from the element
+        weights — computed once per CELF selection (it only changes on
+        append), then fed to ``eval_batch_w``/``apply_seed_w`` as an
+        operand instead of being re-derived per call."""
+        def local(ids, valid, ew):
+            ew_l = jnp.where(valid[0], ew[0], 0.0)
+            return jnp.maximum(jax.ops.segment_max(
+                ew_l, jnp.clip(ids[0], 0, num_rows - 1),
+                num_segments=num_rows), 0.0)[None]
+        return shard_map_unchecked(
+            local, mesh=mesh, in_specs=(buf, buf, buf),
+            out_specs=buf)(ids, valid, ew)
+
+    @jax.jit
+    def eval_batch_w(flat, ids, valid, roww, cov_words, cands):
+        """Weighted twin of ``eval_batch``: per-candidate marginal *covered
+        weight* (sum of row weights over newly covered rows), psum-reduced.
+        Same per-shard accumulation as the weighted fused scan, so the
+        celf==fused parity holds bit for bit."""
+        def local(flat, ids, valid, roww, cov_words, cands):
+            flat, ids, valid, roww = flat[0], ids[0], valid[0], roww[0]
+            covered = _unpack_covered(cov_words[0])
+            c = cands.shape[0]
+            pad = (-c) % _EVAL_CHUNK
+            cs = jnp.concatenate(
+                [cands, jnp.full((pad,), -1, cands.dtype)]) if pad else cands
+
+            def chunk(cc):
+                newly = jax.vmap(
+                    lambda u: _newly_rows(flat, ids, valid, covered, u))(cc)
+                return jnp.where(newly, roww[None, :], 0.0).sum(
+                    axis=1, dtype=jnp.float32)
+
+            gains = jax.lax.map(chunk, cs.reshape(-1, _EVAL_CHUNK))
+            return jax.lax.psum(gains.reshape(-1)[:c], ax)
+
+        return shard_map_unchecked(
+            local, mesh=mesh, in_specs=(buf, buf, buf, buf, buf, P()),
+            out_specs=P())(flat, ids, valid, roww, cov_words, cands)
+
+    @jax.jit
+    def apply_seed_w(flat, ids, valid, roww, cov_words, u):
+        """Weighted twin of ``apply_seed``: commit + weighted gain psum."""
+        def local(flat, ids, valid, roww, cov_words, u):
+            flat, ids, valid = flat[0], ids[0], valid[0]
+            newly = _newly_rows(flat, ids, valid,
+                                _unpack_covered(cov_words[0]), u)
+            new_words = _pack_covered(newly)
+            gain = jax.lax.psum(
+                jnp.where(newly, roww[0], 0.0).sum(dtype=jnp.float32), ax)
+            return (cov_words[0] | new_words)[None], gain
+        return shard_map_unchecked(
+            local, mesh=mesh, in_specs=(buf, buf, buf, buf, buf, P()),
+            out_specs=(buf, P()))(flat, ids, valid, roww, cov_words, u)
+
+    @jax.jit
+    def total_weight(wvec):
+        """psum of the per-shard valid-row weight sums (weighted F_R
+        denominator), as a replicated device scalar."""
+        def local(wvec):
+            return jax.lax.psum(wvec[0], ax)
+        return shard_map_unchecked(
+            local, mesh=mesh, in_specs=(vec,), out_specs=P())(wvec)
+
     @functools.partial(jax.jit, static_argnames=("stripe",))
     def sweep(sk, cov_sk, *, stripe):
         """Δocc lower bounds for every node in one mesh-parallel sweep:
@@ -921,6 +1253,15 @@ def _mesh_select_fns(mesh: Mesh):
     fns.apply_seed = apply_seed
     fns.sweep = sweep
     fns.union = union
+    fns.fused_variant = fused_variant
+    fns.fused_variant_w = fused_variant_w
+    fns.bitset_variant = bitset_variant
+    fns.bitset_variant_w = bitset_variant_w
+    fns.occur_weighted = occur_weighted
+    fns.row_weights = row_weights
+    fns.eval_batch_w = eval_batch_w
+    fns.apply_seed_w = apply_seed_w
+    fns.total_weight = total_weight
     return fns
 
 
@@ -953,8 +1294,100 @@ def select_seeds_device(store: "ShardedDeviceRRStore", k: int,
     return CoverageResult(seeds=seeds, gains=gains, frac=frac)
 
 
+class SelectionSpec(NamedTuple):
+    """Variant knobs for the generalized Alg. 7 (host-side; numpy arrays).
+
+    ``n_group``/``n_groups``/``group_quota`` express partition-budget
+    constraints over the item space (MRIM: groups are rounds, quota is the
+    per-round k; plain variants: one group of quota ``k_steps``).  ``cand``
+    masks the argmax to a candidate set; ``costs``+``budget`` switch the
+    greedy to cost-ratio (argmax marginal-gain/cost among affordable
+    nodes); ``weighted`` reads the store's per-row weights into Occur and
+    the gains (the importance-weighted estimator).  Plain top-k problems
+    never build a spec — they keep the untouched bit-identical fast paths.
+    """
+    k_steps: int                       # scan length / max seeds
+    n_group: int                       # group width over the item space
+    n_groups: int = 1
+    group_quota: int = 1
+    cand: object = None                # (n_items,) bool or None
+    costs: object = None               # (n_items,) float32 or None
+    budget: object = None              # float or None
+    weighted: bool = False
+
+
+class VariantResult(NamedTuple):
+    """CoverageResult + the budget actually spent.  ``seeds`` may contain
+    the sentinel ``n_items`` on steps where no feasible pick existed
+    (budget exhausted) — callers trim them (gain 0, no state change)."""
+    seeds: jnp.ndarray
+    gains: jnp.ndarray    # int32 rows covered, or float32 covered weight
+    frac: jnp.ndarray     # () float32 — covered rows (or weight) fraction
+    spent: jnp.ndarray    # () float32 — total cost of the picked seeds
+
+
+def _spec_operands(store: "ShardedDeviceRRStore", spec: SelectionSpec):
+    """Normalize a spec's host arrays into replicated device operands (+
+    defaults for the unused slots — explicit device_puts, guard-legal)."""
+    n = store.n_nodes
+    rep = store._sh_rep
+    cand = jax.device_put(
+        np.ones(n, bool) if spec.cand is None else
+        np.asarray(spec.cand, bool), rep)
+    costs = jax.device_put(
+        np.ones(n, np.float32) if spec.costs is None else
+        np.asarray(spec.costs, np.float32), rep)
+    budget = jax.device_put(
+        np.float32(np.inf if spec.budget is None else spec.budget), rep)
+    return cand, costs, budget
+
+
+def select_variant(store: "ShardedDeviceRRStore", spec: SelectionSpec,
+                   method: str = "flat") -> VariantResult:
+    """Generalized greedy (weighted / candidate-masked / cost-ratio /
+    group-budgeted) over the sharded pool — the scan twin of
+    :func:`select_seeds_device` for non-plain :class:`SelectionSpec`.
+
+    Runs as the same shard_map protocol as the plain backends (Occur psum,
+    replicated argmax, shard-local Covered), so results are bit-identical
+    across mesh sizes whenever the weight sums are exact in float32 (always
+    for unweighted specs; for weighted ones use integer-valued weights if
+    bit-parity across meshes matters — float psum association differs).
+    """
+    if spec.weighted and store._ew is None:
+        raise ValueError("weighted selection needs a row_weighted store")
+    fns = _mesh_select_fns(store.mesh)
+    num_rows = store.row_capacity()
+    n = store.n_nodes
+    cand, costs, budget = _spec_operands(store, spec)
+    dummy = jax.device_put(np.zeros(1, np.float32), store._sh_rep)
+    wvec = store._w_dev if spec.weighted else dummy
+    ew = store._ew if spec.weighted else dummy
+    if method == "auto":
+        method = "flat"
+    if method == "bitset":
+        m_words = store.bitset_matrix()
+        program = (fns.bitset_variant_w if spec.weighted
+                   else fns.bitset_variant)
+    elif method == "flat":
+        m_words = dummy
+        program = (fns.fused_variant_w if spec.weighted
+                   else fns.fused_variant)
+    else:
+        raise ValueError(f"unknown selection method {method!r}")
+    seeds, gains, frac, spent = program(
+        store._flat, store._ids, store._valid, store.n_rr_dev, wvec,
+        m_words, ew, cand, costs, budget,
+        num_rows=num_rows, n=n, k_steps=spec.k_steps,
+        n_group=spec.n_group, n_groups=spec.n_groups,
+        group_quota=spec.group_quota,
+        use_costs=spec.budget is not None)
+    return VariantResult(seeds=seeds, gains=gains, frac=frac, spent=spent)
+
+
 def select_seeds_celf(store: "ShardedDeviceRRStore", k: int, *,
                       eval_batch: int = 32, use_sketch: bool = True,
+                      spec: SelectionSpec | None = None,
                       stats_out: dict | None = None) -> CoverageResult:
     """CELF lazy greedy selection with sketch-first candidate ordering.
 
@@ -989,7 +1422,14 @@ def select_seeds_celf(store: "ShardedDeviceRRStore", k: int, *,
     the call is legal under ``jax.transfer_guard("disallow")``; shapes are
     the pool's capacity buffers (compiles only at doublings, like the fused
     path) plus the fixed-size sketch.
+
+    ``spec`` switches to the generalized variant loop (weighted gains,
+    candidate mask, cost-ratio lazy greedy, group budgets) — see
+    :func:`_celf_variant`; the plain path below is untouched.
     """
+    if spec is not None:
+        return _celf_variant(store, spec, eval_batch=eval_batch,
+                             use_sketch=use_sketch, stats_out=stats_out)
     n = store.n_nodes
     num_rows = store.row_capacity()
     nw = num_rows // 32
@@ -1072,6 +1512,178 @@ def select_seeds_celf(store: "ShardedDeviceRRStore", k: int, *,
         seeds=jax.device_put(np.asarray(seeds, np.int32)),
         gains=jax.device_put(np.asarray(gains, np.int32)),
         frac=jax.device_put(np.float32(frac)))
+
+
+def _celf_variant(store: "ShardedDeviceRRStore", spec: SelectionSpec, *,
+                  eval_batch: int = 32, use_sketch: bool = True,
+                  stats_out: dict | None = None) -> VariantResult:
+    """CELF lazy greedy generalized to the variant spec.
+
+    The acceptance logic is the plain path's, applied to the variant score
+    (``ub`` for cardinality specs, ``ub/cost`` for budgeted ones, both
+    masked to feasible candidates): a node is accepted only when its
+    *fresh* exact score is the argmax of all remaining upper-bound scores
+    (ties -> lowest id), so the returned seeds are identical to
+    :func:`select_variant`'s fused scan for any sketch size — submodularity
+    makes ``ub >= exact`` an invariant, and positive costs preserve it
+    under division.  Feasibility (candidate mask, group budgets, remaining
+    budget) only ever shrinks, so masked-out nodes never need their bounds
+    refreshed.
+
+    Weighted caveat: the fused scan maintains Occur by f32 decrement chains
+    while CELF re-sums fresh gains, so with *fractional* row weights the
+    two can disagree on ulp-level near-ties (the scan clamps drift at 0, so
+    seed counts still match); weights whose partial sums are exact in
+    float32 — integer-valued weights below 2^24 — make the parity exact,
+    and are what the conformance suite pins.
+    """
+    if spec.weighted and store._ew is None:
+        raise ValueError("weighted selection needs a row_weighted store")
+    n = store.n_nodes
+    num_rows = store.row_capacity()
+    nw = num_rows // 32
+    d = store.n_shards
+    fns = _mesh_select_fns(store.mesh)
+    flat, ids, valid = store._flat, store._ids, store._valid
+    c = max(1, min(eval_batch, n))
+    weighted = spec.weighted
+    use_costs = spec.budget is not None
+    # costs/budget bookkeeping in float32, mirroring the fused scan's
+    # device arithmetic exactly (same rounding -> same feasibility set and
+    # the same cost-ratio ordering, keeping the celf==fused seed contract)
+    costs = (np.asarray(spec.costs, np.float32) if spec.costs is not None
+             else np.ones(n, np.float32))
+    cand = (np.asarray(spec.cand, bool) if spec.cand is not None
+            else np.ones(n, bool))
+    group_of = np.arange(n) // spec.n_group
+    gbud = np.full(spec.n_groups, spec.group_quota, np.int64)
+    budget32 = np.float32(spec.budget) if use_costs else np.float32(np.inf)
+    spent32 = np.float32(0.0)
+
+    if weighted:
+        ub = np.asarray(jax.device_get(fns.occur_weighted(
+            flat, valid, store._ew, n=n)), np.float64).copy()
+        denom = float(jax.device_get(fns.total_weight(store._w_dev)))
+        roww_dev = fns.row_weights(ids, valid, store._ew, num_rows=num_rows)
+    else:
+        ub = np.asarray(jax.device_get(
+            fns.occur(flat, valid, n=n)), np.float64).copy()
+        denom = float(max(store.n_rr, 1))
+    fresh = np.zeros(n, bool)
+    cov_words = jax.device_put(np.zeros((d, nw), np.uint32), store._sh_buf)
+    if use_sketch:
+        sk_words = store.sketch_words_mesh()
+        sk_k = int(sk_words.shape[2]) * 32
+        stripe = store.sketch_rows // d
+        cov_sk = jax.device_put(
+            np.zeros((d, sk_words.shape[2]), np.uint32), store._sh_buf)
+    n_evals = 0
+    n_eval_calls = 0
+    node_ids = np.arange(n)
+
+    def eval_exact(cands):
+        nonlocal n_evals, n_eval_calls
+        cands = np.asarray(cands, np.int32)
+        pad = np.full(c, -1, np.int32)
+        pad[:len(cands)] = cands
+        pad_dev = jax.device_put(pad, store._sh_rep)
+        if weighted:
+            g = np.asarray(jax.device_get(fns.eval_batch_w(
+                flat, ids, valid, roww_dev, cov_words, pad_dev)))
+        else:
+            g = np.asarray(jax.device_get(fns.eval_batch(
+                flat, ids, valid, cov_words, pad_dev)))
+        ub[cands] = g[:len(cands)]
+        fresh[cands] = True
+        n_evals += len(cands)
+        n_eval_calls += 1
+
+    def scores(feas):
+        if use_costs:
+            # float32 division, bit-identical to the device scan's
+            # occur.astype(f32) / costs (ub holds exact gains: int counts
+            # or f32-representable weighted sums, so the f32 cast is exact)
+            return np.where(feas & (ub > 0),
+                            ub.astype(np.float32) / costs, -np.inf)
+        return np.where(feas, ub, -np.inf)
+
+    def top_stale(feas, sc, k_top):
+        """Highest-score stale feasible candidates, lowest id first on
+        ties (float scores -> lexsort instead of the plain path's int
+        composite key)."""
+        idx = node_ids[~fresh & feas & (sc > -np.inf)]
+        order = np.lexsort((idx, -sc[idx]))
+        return idx[order[:k_top]]
+
+    seeds, gains_out = [], []
+    picked = np.zeros(n, bool)
+    for _ in range(spec.k_steps):
+        # ~picked mirrors the fused variant scan: seeds are never
+        # re-selected (their marginal is 0 forever under submodularity)
+        feas = cand & (gbud[group_of] > 0) & ~picked
+        if use_costs:
+            feas = feas & (costs <= budget32 - spent32)
+        if not feas.any():
+            break
+        fresh[:] = False
+        if use_sketch:
+            deltas = np.asarray(jax.device_get(
+                fns.sweep(sk_words, cov_sk, stripe=stripe)))[:n]
+            est = np.where(feas, deltas / costs if use_costs
+                           else deltas.astype(np.float64), -np.inf)
+            order = np.lexsort((node_ids, -est))
+            eval_exact(order[:c])
+        accepted = None
+        while True:
+            sc = scores(feas)
+            u = int(np.argmax(sc))       # first max == lowest id on ties
+            if sc[u] == -np.inf:
+                # only reachable for budgeted specs (ub > 0 filter): every
+                # remaining affordable candidate has zero gain, exactly
+                # where the fused scan starts emitting sentinels.  For
+                # cardinality specs feas.any() guarantees a >= 0 score
+                # (ub is a non-negative coverage bound), so the lazy loop
+                # always accepts — zero-gain lowest-id picks included,
+                # matching the fused argmax semantics.
+                break
+            if fresh[u]:
+                accepted = u
+                break
+            stale = top_stale(feas, sc, c)
+            eval_exact(stale)
+        if accepted is None:
+            break
+        u = accepted
+        u_dev = jax.device_put(np.int32(u), store._sh_rep)
+        if weighted:
+            cov_words, gain_dev = fns.apply_seed_w(flat, ids, valid,
+                                                   roww_dev, cov_words,
+                                                   u_dev)
+        else:
+            cov_words, gain_dev = fns.apply_seed(flat, ids, valid, cov_words,
+                                                 u_dev)
+        if use_sketch:
+            cov_sk = fns.union(cov_sk, sk_words, u_dev)
+        gain = jax.device_get(gain_dev)
+        ub[u] = 0.0
+        picked[u] = True
+        gbud[group_of[u]] -= 1
+        if use_costs:
+            spent32 = np.float32(spent32 + costs[u])
+        seeds.append(u)
+        gains_out.append(gain)
+
+    if stats_out is not None:
+        stats_out.update(n_exact_evals=n_evals, n_eval_calls=n_eval_calls,
+                         sketch_k=(sk_k if use_sketch else 0),
+                         n_rr=store.n_rr)
+    gdtype = np.float32 if weighted else np.int32
+    frac = float(np.asarray(gains_out, np.float64).sum()) / max(denom, 1e-30)
+    return VariantResult(
+        seeds=jax.device_put(np.asarray(seeds, np.int32)),
+        gains=jax.device_put(np.asarray(gains_out, gdtype)),
+        frac=jax.device_put(np.float32(frac)),
+        spent=jax.device_put(np.float32(spent32 if use_costs else 0.0)))
 
 
 class PaddedStore(NamedTuple):

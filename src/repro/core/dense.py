@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.graph.csr import CSRGraph
 from repro.core.packing import pack_rows, pack_rows_device
+from repro.core.roots import draw_roots
 
 
 class DenseSample(NamedTuple):
@@ -61,13 +62,14 @@ def _sample_dense(key, edge_src, edge_dst, edge_w, roots, *, batch, n, m):
 
 
 @functools.partial(jax.jit, static_argnames=("batch", "n", "m"))
-def _dense_round(key, edge_src, edge_dst, edge_w, *, batch, n, m):
+def _dense_round(key, edge_src, edge_dst, edge_w, root_table, *, batch, n, m):
     """Root draw + frontier BFS + padded conversion as ONE jit — the
     device-resident engine path (``edge_src`` precomputed once at engine
     construction, no per-round host work).  Key-split structure matches
-    :func:`sample_rrsets_dense` exactly."""
+    :func:`sample_rrsets_dense` exactly (``root_table=None`` -> the
+    identical uniform randint; weighted IM passes an alias table)."""
     key, sub = jax.random.split(key)
-    roots = jax.random.randint(sub, (batch,), 0, n, dtype=jnp.int32)
+    roots = draw_roots(sub, batch, n, root_table)
     membership, levels = _sample_dense(key, edge_src, edge_dst, edge_w, roots,
                                        batch=batch, n=n, m=m)
     cols = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (batch, n))

@@ -33,6 +33,9 @@ from repro.core import rrset as rr_queue
 from repro.core import dense as rr_dense
 from repro.core import lt as rr_lt
 from repro.core.packing import pack_rows_device
+from repro.core.roots import (AliasTable, ONE_UNIFORM_MAX_N,  # noqa: F401
+                              build_alias_table, draw_roots,
+                              roots_from_uniform)
 
 
 @jax.jit
@@ -43,6 +46,11 @@ def split_key(key):
     solvers (imm, mrim)."""
     ks = jax.random.split(key)
     return ks[0], ks[1]
+
+
+# Weighted root sampling (weighted IM: roots drawn ∝ node_weights).  The
+# implementation lives one layer down in ``core/roots.py`` (the samplers
+# import it without a cycle); this module is the engine-facing surface.
 
 
 class RRBatch(NamedTuple):
@@ -64,21 +72,30 @@ class RRBatch(NamedTuple):
     under ``jax.transfer_guard("disallow")``) may additionally emit *padding
     rows* with ``lengths[i] == 0`` — no RR set at all — which the stores
     drop without assigning a row id.
+
+    ``roots`` (optional) is the *base-space* root node of each row —
+    undefined for padding rows.  Engines that know their roots report them
+    so the solver can weight rows by ``node_weights[root]`` (the
+    importance-weighted fallback for weighted problems on engines without
+    weight-proportional root sampling); ``None`` is a valid value for
+    third-party adapters.
     """
     nodes: jnp.ndarray       # (R, W) int32/int64, padded per-set node ids
     lengths: jnp.ndarray     # (R,) int — RR-set sizes (>= 1)
     overflowed: jnp.ndarray  # (L,) bool — per-lane truncation flags
     steps: jnp.ndarray       # () int — lockstep micro-steps executed
+    roots: Optional[jnp.ndarray] = None  # (R,) int32 base-node root per row
 
     @property
     def n_sets(self) -> int:
         return int(self.lengths.shape[0])
 
     @classmethod
-    def make(cls, nodes, lengths, overflowed, steps) -> "RRBatch":
+    def make(cls, nodes, lengths, overflowed, steps, roots=None) -> "RRBatch":
         return cls(nodes=jnp.asarray(nodes), lengths=jnp.asarray(lengths),
                    overflowed=jnp.asarray(overflowed),
-                   steps=jnp.asarray(steps))
+                   steps=jnp.asarray(steps),
+                   roots=None if roots is None else jnp.asarray(roots))
 
 
 @runtime_checkable
@@ -151,18 +168,26 @@ def list_engines() -> list[str]:
     return sorted(set(_ENGINES) | set(_LAZY_ENGINES))
 
 
-def make_engine(name: str, g_rev: CSRGraph, **opts) -> "SamplerEngine":
+def make_engine(name: str, g_rev: CSRGraph, root_weights=None,
+                **opts) -> "SamplerEngine":
     """Instantiate a registered engine on the reverse graph.
 
     ``opts`` may be a superset of the engine's ``Config`` fields — unknown
     keys and ``None`` values are dropped, so callers (``IMMSolver``) can pass
     one uniform option set (batch/qcap/ec/...) to any engine.
+
+    ``root_weights`` (weighted IM) is forwarded to every registered engine:
+    roots come out ∝ the weights through the shared alias table
+    (:func:`draw_roots`); ``None`` keeps the historical uniform draw,
+    bit-identical streams included.
     """
     cls = get_engine(name)
     fields = {f.name for f in dataclasses.fields(cls.Config)}
     cfg = cls.Config(**{k: v for k, v in opts.items()
                         if k in fields and v is not None})
-    return cls(g_rev, cfg)
+    if root_weights is None:
+        return cls(g_rev, cfg)
+    return cls(g_rev, cfg, root_weights=root_weights)
 
 
 def resolve_engine_name(engine: str, model: str = "ic") -> str:
@@ -182,6 +207,22 @@ def resolve_qcap(qcap: Optional[int], g_rev: CSRGraph) -> int:
 # Engine adapters
 # ---------------------------------------------------------------------------
 
+@jax.jit
+def _row_roots(nodes):
+    """First column of a root-first padded batch = per-row roots.  Jitted so
+    the slice indices never cross host->device (legal under
+    ``jax.transfer_guard("disallow")``)."""
+    return nodes[:, 0].astype(jnp.int32)
+
+
+def _resolve_root_table(root_weights):
+    """(weights or None) -> (weights np array or None, AliasTable or None)."""
+    if root_weights is None:
+        return None, None
+    w = np.asarray(root_weights, np.float32)
+    return w, build_alias_table(w)
+
+
 @register_engine("queue")
 class QueueEngine:
     """gIM-faithful work-efficient sampler (paper Alg. 3/6; core/rrset.py).
@@ -195,13 +236,15 @@ class QueueEngine:
         qcap: Optional[int] = None   # default: n_nodes
         ec: int = rr_queue.EC_DEFAULT
 
-    def __init__(self, g_rev: CSRGraph, config: Optional[Config] = None):
+    def __init__(self, g_rev: CSRGraph, config: Optional[Config] = None,
+                 root_weights=None):
         # IC equivalence: parallel edges merge to p' = 1-∏(1-p), making the
         # rows simple and the chunk dedup a no-op (detect returns "none")
         self.g_rev = coalesce_ic(g_rev)
         self.config = config if config is not None else self.Config()
         self.qcap = resolve_qcap(self.config.qcap, self.g_rev)
         self._dedup = rr_queue.detect_dedup_mode(self.g_rev)
+        self.root_weights, self._root_table = _resolve_root_table(root_weights)
 
     @property
     def item_space(self) -> int:
@@ -210,8 +253,10 @@ class QueueEngine:
     def sample(self, key) -> RRBatch:
         s = rr_queue.sample_rrsets_queue(key, self.g_rev, self.config.batch,
                                          self.qcap, self.config.ec,
-                                         dedup=self._dedup)
-        return RRBatch.make(s.nodes, s.lengths, s.overflowed, s.steps)
+                                         dedup=self._dedup,
+                                         root_table=self._root_table)
+        return RRBatch.make(s.nodes, s.lengths, s.overflowed, s.steps,
+                            roots=s.roots)
 
 
 @register_engine("dense")
@@ -226,10 +271,12 @@ class DenseEngine:
     class Config:
         batch: int = 256
 
-    def __init__(self, g_rev: CSRGraph, config: Optional[Config] = None):
+    def __init__(self, g_rev: CSRGraph, config: Optional[Config] = None,
+                 root_weights=None):
         self.g_rev = coalesce_ic(g_rev)      # exact for IC, fewer edges
         self.config = config if config is not None else self.Config()
         self._edge_src = rr_dense._edge_src(self.g_rev)
+        self.root_weights, self._root_table = _resolve_root_table(root_weights)
 
     @property
     def item_space(self) -> int:
@@ -237,10 +284,10 @@ class DenseEngine:
 
     def sample(self, key) -> RRBatch:
         g = self.g_rev
-        nodes, lens, _, overflow, levels = rr_dense._dense_round(
-            key, self._edge_src, g.indices, g.weights,
+        nodes, lens, roots, overflow, levels = rr_dense._dense_round(
+            key, self._edge_src, g.indices, g.weights, self._root_table,
             batch=self.config.batch, n=g.n_nodes, m=g.n_edges)
-        return RRBatch.make(nodes, lens, overflow, levels)
+        return RRBatch.make(nodes, lens, overflow, levels, roots=roots)
 
 
 @register_engine("refill")
@@ -258,7 +305,8 @@ class RefillEngine:
         out_cap: Optional[int] = None
         ec: int = rr_queue.EC_DEFAULT
 
-    def __init__(self, g_rev: CSRGraph, config: Optional[Config] = None):
+    def __init__(self, g_rev: CSRGraph, config: Optional[Config] = None,
+                 root_weights=None):
         self.g_rev = coalesce_ic(g_rev)
         cfg = config if config is not None else self.Config()
         self.config = cfg
@@ -270,6 +318,13 @@ class RefillEngine:
         self.out_cap = (cfg.out_cap if cfg.out_cap is not None
                         else min(8 * cfg.batch // self.lanes, 64) * 64)
         self._dedup = rr_queue.detect_dedup_mode(self.g_rev)
+        self.root_weights, self._root_table = _resolve_root_table(root_weights)
+        if (self._root_table is not None
+                and self.g_rev.n_nodes > ONE_UNIFORM_MAX_N):
+            raise ValueError(
+                "weighted refill roots use the one-uniform alias draw, "
+                f"which is only exact for n <= {ONE_UNIFORM_MAX_N}; use the "
+                "queue or dense engine for weighted IM on larger graphs")
 
     @property
     def item_space(self) -> int:
@@ -280,12 +335,16 @@ class RefillEngine:
                                              quota=self.config.batch,
                                              out_cap=self.out_cap,
                                              ec=self.config.ec,
-                                             dedup=self._dedup)
+                                             dedup=self._dedup,
+                                             root_table=self._root_table)
 
     def sample(self, key) -> RRBatch:
         s = self._sample_raw(key)
         nodes, lens = rr_queue.refill_to_padded(s)
-        return RRBatch.make(nodes, lens, s.overflowed, s.steps)
+        # refill rows are root-first (each set's segment starts with the
+        # root that seeded the lane), so the row root is column 0
+        return RRBatch.make(nodes, lens, s.overflowed, s.steps,
+                            roots=_row_roots(jnp.asarray(nodes)))
 
     def sample_device(self, key) -> RRBatch:
         """Fixed-shape device unpack: every (lane, slot) becomes a row,
@@ -295,7 +354,8 @@ class RefillEngine:
         s = self._sample_raw(key)
         nodes, lens = rr_queue.refill_to_padded_device(s.flat, s.lengths,
                                                        s.n_done)
-        return RRBatch.make(nodes, lens, s.overflowed, s.steps)
+        return RRBatch.make(nodes, lens, s.overflowed, s.steps,
+                            roots=_row_roots(nodes))
 
 
 @register_engine("lt")
@@ -311,11 +371,13 @@ class LTEngine:
         batch: int = 256
         qcap: Optional[int] = None
 
-    def __init__(self, g_rev: CSRGraph, config: Optional[Config] = None):
+    def __init__(self, g_rev: CSRGraph, config: Optional[Config] = None,
+                 root_weights=None):
         self.g_rev = g_rev
         self.config = config if config is not None else self.Config()
         self.qcap = resolve_qcap(self.config.qcap, g_rev)
         self._rowcum = rr_lt.row_cumweights(g_rev)
+        self.root_weights, self._root_table = _resolve_root_table(root_weights)
 
     @property
     def item_space(self) -> int:
@@ -323,23 +385,23 @@ class LTEngine:
 
     def sample(self, key) -> RRBatch:
         g = self.g_rev
-        nodes, lengths, _, overflowed, steps = rr_lt._lt_round(
-            key, g.offsets, g.indices, self._rowcum,
+        nodes, lengths, roots, overflowed, steps = rr_lt._lt_round(
+            key, g.offsets, g.indices, self._rowcum, self._root_table,
             batch=self.config.batch, qcap=self.qcap,
             n=g.n_nodes, m=g.n_edges)
-        return RRBatch.make(nodes, lengths, overflowed, steps)
+        return RRBatch.make(nodes, lengths, overflowed, steps, roots=roots)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("batch", "t", "qcap", "ec", "n", "m",
                                     "dedup"))
-def _mrim_round(key, offsets, indices, weights, *, batch, t, qcap, ec, n, m,
-                dedup="sort"):
+def _mrim_round(key, offsets, indices, weights, root_table, *, batch, t, qcap,
+                ec, n, m, dedup="sort"):
     """Root draw + T tagged BFS + segment merge as ONE jit (device path).
     Key-split structure matches the historical host implementation, keeping
     sample streams bit-identical."""
     key, kroot, ksample = jax.random.split(key, 3)
-    roots = jax.random.randint(kroot, (batch,), 0, n, dtype=jnp.int32)
+    roots = draw_roots(kroot, batch, n, root_table)
     tiled_roots = jnp.repeat(roots, t)                # lane b*T+r -> root b
     nodes, lengths, overflowed, steps = rr_queue._sample_queue(
         ksample, offsets, indices, weights, tiled_roots,
@@ -353,7 +415,7 @@ def _mrim_round(key, offsets, indices, weights, *, batch, t, qcap, ec, n, m,
     mask = pos[None, :] < lane_len[:, seg]
     out_nodes, out_lens = pack_rows_device(enc, mask)
     overflow = overflowed.reshape(batch, t).any(axis=1)
-    return out_nodes, out_lens, overflow, steps
+    return out_nodes, out_lens, roots, overflow, steps
 
 
 @register_engine("mrim")
@@ -373,11 +435,13 @@ class MRIMEngine:
         qcap: Optional[int] = None
         ec: int = rr_queue.EC_DEFAULT
 
-    def __init__(self, g_rev: CSRGraph, config: Optional[Config] = None):
+    def __init__(self, g_rev: CSRGraph, config: Optional[Config] = None,
+                 root_weights=None):
         self.g_rev = coalesce_ic(g_rev)
         self.config = config if config is not None else self.Config()
         self.qcap = resolve_qcap(self.config.qcap, self.g_rev)
         self._dedup = rr_queue.detect_dedup_mode(self.g_rev)
+        self.root_weights, self._root_table = _resolve_root_table(root_weights)
         if self.item_space >= np.iinfo(np.int32).max:
             raise ValueError("n_nodes * t_rounds must fit int32")
 
@@ -387,8 +451,8 @@ class MRIMEngine:
 
     def sample(self, key) -> RRBatch:
         g, cfg = self.g_rev, self.config
-        out_nodes, out_lens, overflow, steps = _mrim_round(
-            key, g.offsets, g.indices, g.weights,
+        out_nodes, out_lens, roots, overflow, steps = _mrim_round(
+            key, g.offsets, g.indices, g.weights, self._root_table,
             batch=cfg.batch, t=cfg.t_rounds, qcap=self.qcap, ec=cfg.ec,
             n=g.n_nodes, m=g.n_edges, dedup=self._dedup)
-        return RRBatch.make(out_nodes, out_lens, overflow, steps)
+        return RRBatch.make(out_nodes, out_lens, overflow, steps, roots=roots)

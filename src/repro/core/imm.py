@@ -8,28 +8,53 @@ or a caller-supplied engine instance (e.g. the sharded launcher's).  Every
 round is ``batch = engine.sample(key)`` → ``store.append_batch(batch)``; the
 solver never inspects engine internals.
 
+**One entry point, five problems** (DESIGN.md §6): the solver is driven by a
+declarative :class:`~repro.core.problem.IMProblem` —
+
+    IMMSolver(g).solve(IMProblem(k=10, eps=0.3))                  # plain
+    IMMSolver(g).solve(IMProblem(k=10, eps=0.3, node_weights=w))  # weighted
+    IMMSolver(g).solve(IMProblem(eps=0.3, costs=c, budget=B))     # budgeted
+    IMMSolver(g).solve(IMProblem(k=10, eps=0.3, candidates=ids))  # targeted
+    IMMSolver(g).solve(IMProblem(k=3, t_rounds=4, theta=4096))    # MRIM
+
+returning a typed :class:`~repro.core.problem.IMResult` (seeds, spread on
+the problem's scale, per-seed marginal gains, stats).  Plain problems take
+exactly the historical code paths — same RNG streams, same selection
+programs — so their seeds/gains/F_R are bit-identical to the old
+``solve(k, eps)`` form, which survives as a deprecation shim for one
+release (it still returns the old ``(seeds, spread, stats)`` tuple).
+
+Variants thread through every layer: weighted problems draw roots ∝
+``node_weights`` through the engines' shared alias table
+(:func:`~repro.core.engine.draw_roots`; engines without weighted-root
+support fall back to the importance-weighted row estimator on a
+``row_weighted`` store), and non-plain selection runs the generalized
+shard_map scan (:func:`~repro.core.coverage.select_variant` /
+``select_seeds_celf(spec=...)``) with candidate masks, cost-ratio lazy
+greedy and per-round (group) budgets — on a mesh of any size, under the
+same transfer guard.
+
 The hot loop is *mesh-resident*: the RR pool is a
 :class:`~repro.core.coverage.ShardedDeviceRRStore` sharded over the device
 mesh chosen once at solver construction (``mesh=`` — ``None`` is the
 1-device mesh, the same code path), selection is the capacity-stable
-psum-reduced greedy (:func:`~repro.core.coverage.select_seeds_device` /
-``select_seeds_celf``), and for engines that declare ``device_resident``
+psum-reduced greedy, and for engines that declare ``device_resident``
 the whole sampling+selection loop runs under
 ``jax.transfer_guard("disallow")`` on a mesh of any size.  The only
 host↔device traffic per round is the store's explicit per-shard count
 fetch — the same per-relaunch ``N_RR`` readback gIM's Alg. 6 host loop
-performs; per-round stats (micro-steps, overflow) accumulate as device
-scalars and materialize once per ``sample_until`` (or lazily on ``stats``
-access).  Engines sharing the solver's mesh and exposing
-``sample_sharded`` keep their rows on the device that sampled them.
+performs.
 
 All martingale math (λ', λ*, the Alg. 2 LB loop) follows IMM [Tang et al.'15]
 and is shared with the numpy oracle (core/oracle.py) so both sides compute
-identical θ schedules.
+identical θ schedules.  For non-plain variants the schedule is reused with
+the spread scale swapped in (``Σw`` for weighted problems) — a heuristic
+extension; the selection itself stays exact greedy on the sampled pool.
 """
 from __future__ import annotations
 
 import math
+import warnings
 from dataclasses import dataclass, field
 from typing import Optional, Union
 
@@ -39,7 +64,9 @@ import numpy as np
 
 from repro.graph.csr import CSRGraph, reverse
 from repro.core import coverage as cov
+from repro.core import sketch as sketch_mod
 from repro.core.oracle import imm_theta_params
+from repro.core.problem import IMProblem, IMResult, ResolvedProblem
 from repro.core.engine import (SamplerEngine, make_engine, resolve_engine_name,
                                split_key as _split_key)
 
@@ -50,6 +77,13 @@ def _accum_round_stats(steps_acc, ovf_acc, steps, overflowed):
     ``int(batch.steps)`` / ``np.asarray(batch.overflowed)`` syncs."""
     return (steps_acc + steps.astype(jnp.int32),
             ovf_acc + overflowed.sum(dtype=jnp.int32))
+
+
+@jax.jit
+def _gather_row_weights(w_dev, roots):
+    """Row weight of each batch row: its root's node weight (the
+    importance-weighted fallback estimator)."""
+    return w_dev[jnp.clip(roots.astype(jnp.int32), 0, w_dev.shape[0] - 1)]
 
 
 @dataclass
@@ -63,6 +97,9 @@ class IMMStats:
     frac_covered: float = 0.0
     sampling_steps: int = 0
     selection: str = "auto"
+    variant: str = "plain"
+    early_exit_skips: int = 0
+    budget_spent: float = 0.0
     mesh_shape: tuple = (1,)
     pool_sharding: str = "samples:1"
     per_device_pool_bytes: int = 0
@@ -84,7 +121,13 @@ class IMMSolver:
     ``engine`` is a registered engine name or a ready ``SamplerEngine``
     instance; ``batch``/``qcap``/``ec`` are forwarded to the engine's config
     (each engine takes the subset it understands).  ``model="lt"`` keeps its
-    historical meaning by resolving to the ``lt`` engine.
+    historical meaning by resolving to the ``lt`` engine (a problem's
+    ``model=`` field overrides it per solve).
+
+    The engine and the pool are rebuilt whenever a solve's problem changes
+    their *signature* (diffusion model, ``t_rounds``, ``node_weights``) —
+    repeated solves of same-signature problems keep reusing the pool, like
+    the historical solver did.
     """
 
     def __init__(self, g: CSRGraph, *,
@@ -95,12 +138,11 @@ class IMMSolver:
                  mesh=None, seed: int = 0):
         self.g = g
         self.n = g.n_nodes
+        self._engine_arg = engine
+        self._engine_opts = dict(batch=batch, qcap=qcap, ec=ec)
+        self._model_arg = model
         if isinstance(engine, str):
-            name = resolve_engine_name(engine, model or "ic")
             self.g_rev = reverse(g)
-            # None options fall through to each engine Config's own defaults
-            self.engine: SamplerEngine = make_engine(
-                name, self.g_rev, batch=batch, qcap=qcap, ec=ec)
         else:
             # engine instance passed in: it owns its graph + configuration,
             # so sampling options on the solver would be silently ignored
@@ -108,38 +150,153 @@ class IMMSolver:
                 raise ValueError(
                     "batch/qcap/ec/model have no effect when an engine "
                     "instance is passed; configure the engine instead")
-            self.engine = engine
             self.g_rev = getattr(engine, "g_rev", None)
-        if self.engine.item_space != self.n:
-            # e.g. engine="mrim": its ids are round*n+node encodings that
-            # would leak out of solve() as nonsense seeds — route those
-            # through their own solver (solve_mrim)
-            raise ValueError(
-                f"engine {getattr(self.engine, 'name', '?')!r} samples an "
-                f"item space of {self.engine.item_space}, not the graph's "
-                f"{self.n} nodes; IMMSolver needs a plain node-id engine "
-                "(tagged engines like 'mrim' have dedicated solvers)")
-        self.engine_name = getattr(self.engine, "name",
-                                   type(self.engine).__name__)
         if selection not in _SELECTION_METHODS:
             raise ValueError(f"unknown selection {selection!r}; one of "
                              f"{sorted(_SELECTION_METHODS)}")
         self.selection = selection
         self._sel_method = _SELECTION_METHODS[selection]
-        # the celf path estimates from the incremental coverage sketch, so
-        # the store maintains one from the first append on
-        if self._sel_method == "celf" and sketch_k is None:
-            sketch_k = cov.ShardedDeviceRRStore.DEFAULT_SKETCH_K
+        self._sketch_k_arg = sketch_k
+        self._mesh = mesh
         self.key = jax.random.key(seed)
+        self._engine_obj = None
+        self._store_obj = None
+        self._sig = None
+        self._row_weight_mode = False
+        self._node_w_dev = None
+        if isinstance(engine, str):
+            if engine == "mrim":
+                # fail fast like the historical API: the tagged engine's
+                # item space is n*t_rounds, not the graph's n nodes — MRIM
+                # goes through IMProblem(t_rounds=...), which picks the
+                # engine itself
+                raise ValueError(
+                    "engine 'mrim' samples a tagged item space, not the "
+                    "graph's nodes; set t_rounds= on the IMProblem instead "
+                    "(the solver resolves the mrim engine per problem)")
+            # eager default build: construction happens *outside* any
+            # caller transfer guard, so the graph uploads land here — a
+            # first solve with a different signature (weights/t_rounds)
+            # rebuilds once via prepare(), which callers holding an outer
+            # guard invoke explicitly before entering it
+            self._prepare(IMProblem(k=1, eps=0.5,
+                                    model=self._default_model()))
+        elif (engine.item_space == self.n
+              and getattr(engine, "root_weights", None) is None):
+            # engine instance on the plain node space: build eagerly —
+            # cheap (the instance is reused) and keeps `solver.engine is
+            # eng` true right after construction
+            self._prepare(IMProblem(k=1, eps=0.5,
+                                    model=self._default_model()))
+        # a tagged (item_space != n) or weighted-root engine INSTANCE
+        # defers instead — its first solve must carry the matching
+        # t_rounds / node_weights (callers holding an outer transfer guard
+        # call prepare(problem) explicitly first)
+
+    def _default_model(self) -> str:
+        return "lt" if self._model_arg == "lt" else "ic"
+
+    def _ensure_prepared(self):
+        if self._sig is None:
+            self._prepare(IMProblem(k=1, eps=0.5,
+                                    model=self._default_model()))
+
+    @property
+    def engine(self):
+        self._ensure_prepared()
+        return self._engine_obj
+
+    @property
+    def store(self) -> "cov.ShardedDeviceRRStore":
+        self._ensure_prepared()
+        return self._store_obj
+
+    # -- problem-driven engine/store lifecycle ------------------------------
+    def prepare(self, problem: IMProblem) -> ResolvedProblem:
+        """Pre-build the engine + pool for ``problem`` (idempotent per
+        signature).  ``solve(problem)`` calls this itself; call it
+        explicitly to do the host-side construction (reverse graph, alias
+        table, device placement) *before* entering an outer
+        ``jax.transfer_guard("disallow")`` region."""
+        return self._prepare(problem)
+
+    def _prepare(self, problem: IMProblem) -> ResolvedProblem:
+        r = problem.resolve(self.n)
+        # the constructor's model= survives as the default for problems that
+        # don't set one (IMProblem.model=None); an explicit model on the
+        # problem — including "ic" — always wins
+        model = problem.model or self._default_model()
+        if problem.t_rounds is not None and model == "lt":
+            raise ValueError("MRIM sampling is IC-only (paper §4.8); the "
+                             "solver's default model is 'lt'")
+        w = r.node_weights
+        wkey = None if w is None else hash(w.tobytes())
+        # the celf path estimates from the incremental coverage sketch, and
+        # the θ early-exit gate reads it (an incremental fold is required:
+        # its global row numbering keeps the occupancy==count identity on
+        # any mesh — the on-demand per-shard fold does not)
+        sketch_k = self._sketch_k_arg
+        if sketch_k is None and (self._sel_method == "celf"
+                                 or problem.early_exit):
+            sketch_k = cov.ShardedDeviceRRStore.DEFAULT_SKETCH_K
+        if isinstance(self._engine_arg, str):
+            name = ("mrim" if problem.t_rounds is not None
+                    else resolve_engine_name(self._engine_arg, model))
+            sig = ("name", name, problem.t_rounds, wkey, model, sketch_k)
+        else:
+            sig = ("inst", id(self._engine_arg), problem.t_rounds, wkey,
+                   sketch_k)
+        if sig == self._sig:
+            return r
+        # (re)build engine + pool for this problem signature
+        row_weight_mode = False
+        if isinstance(self._engine_arg, str):
+            opts = dict(self._engine_opts)
+            if problem.t_rounds is not None:
+                opts["t_rounds"] = problem.t_rounds
+            engine = make_engine(name, self.g_rev, root_weights=w, **opts)
+        else:
+            engine = self._engine_arg
+            eng_w = getattr(engine, "root_weights", None)
+            if w is None and eng_w is not None:
+                # converse mismatch: the engine samples roots ∝ its own
+                # weights, so a plain solve on it would silently return the
+                # weighted objective on the uniform scale — a wrong number
+                raise ValueError(
+                    "engine instance draws weighted roots (root_weights "
+                    "set) but the problem has no node_weights; set "
+                    "node_weights on the IMProblem (or use an unweighted "
+                    "engine)")
+            if w is not None and not (
+                    eng_w is not None
+                    and np.array_equal(np.asarray(eng_w, np.float32), w)):
+                # instance without matching weighted-root sampling: fall
+                # back to the importance-weighted row estimator (uniform
+                # roots, rows weighted by node_weights[root])
+                row_weight_mode = True
+        if engine.item_space != r.n_items:
+            raise ValueError(
+                f"engine {getattr(engine, 'name', '?')!r} samples an "
+                f"item space of {engine.item_space}, not the problem's "
+                f"{r.n_items} items; tagged engines need a matching "
+                f"t_rounds= on the IMProblem")
+        self._engine_obj = engine
+        self.engine_name = getattr(engine, "name", type(engine).__name__)
+        self._row_weight_mode = row_weight_mode
+        self._node_w_dev = (jax.device_put(w) if row_weight_mode else None)
         # mesh placement is decided exactly once, here: the pool, the
         # sketch, and every selection backend live on this mesh for the
         # solver's lifetime (mesh=None -> the 1-device mesh special case)
-        self.store = cov.ShardedDeviceRRStore(self.engine.item_space,
-                                              sketch_k=sketch_k, mesh=mesh)
+        self._store_obj = cov.ShardedDeviceRRStore(
+            engine.item_space, sketch_k=sketch_k, mesh=self._mesh,
+            row_weighted=row_weight_mode)
+        self._sig = sig
+        store = self._store_obj
         self._stats = IMMStats(
-            selection=selection,
-            mesh_shape=tuple(int(s) for s in self.store.mesh.devices.shape),
-            pool_sharding=f"{self.store.axis}:{self.store.n_shards}")
+            selection=self.selection,
+            variant=problem.variant,
+            mesh_shape=tuple(int(s) for s in store.mesh.devices.shape),
+            pool_sharding=f"{store.axis}:{store.n_shards}")
         self._stats_dirty = False
         # stats accumulate as device scalars; materialized once per
         # sample_until / on `stats` access, not per round
@@ -150,20 +307,21 @@ class IMMSolver:
         # transfer guard over the whole hot loop; host-path engines (e.g.
         # third-party adapters) fall back to unguarded execution
         self._guard = ("disallow"
-                       if getattr(self.engine, "device_resident", False)
+                       if getattr(engine, "device_resident", False)
                        else "allow")
-        self._sample = getattr(self.engine, "sample_device",
-                               self.engine.sample)
+        self._sample = getattr(engine, "sample_device", engine.sample)
         # a sharded engine on the *same* mesh hands the store rows that are
         # already resident on their sampling device — no dev0 gather
-        if (self.store.n_shards > 1
-                and getattr(self.engine, "mesh", None) == self.store.mesh
-                and hasattr(self.engine, "sample_sharded")):
-            self._sample = self.engine.sample_sharded
+        if (store.n_shards > 1
+                and getattr(engine, "mesh", None) == store.mesh
+                and hasattr(engine, "sample_sharded")):
+            self._sample = engine.sample_sharded
+        return r
 
     # -- stats -------------------------------------------------------------
     @property
     def stats(self) -> IMMStats:
+        self._ensure_prepared()
         self._materialize_stats()
         return self._stats
 
@@ -181,9 +339,20 @@ class IMMSolver:
 
     # -- sampling ----------------------------------------------------------
     def _round(self):
+        self._ensure_prepared()
         self.key, sub = _split_key(self.key)
         batch = self._sample(sub)
-        self.store.append_batch(batch)
+        if self._row_weight_mode:
+            if batch.roots is None:
+                raise ValueError(
+                    "weighted problem on an engine that neither supports "
+                    "root_weights nor reports batch roots — cannot form "
+                    "the importance-weighted estimator")
+            self.store.append_batch(
+                batch, row_w=_gather_row_weights(self._node_w_dev,
+                                                 batch.roots))
+        else:
+            self.store.append_batch(batch)
         self._steps_acc, self._ovf_acc = _accum_round_stats(
             self._steps_acc, self._ovf_acc, batch.steps, batch.overflowed)
         self._ovf_lanes += int(np.prod(batch.overflowed.shape))
@@ -201,46 +370,208 @@ class IMMSolver:
     def _store(self) -> cov.RRStore:
         return self.store.snapshot()
 
+    # -- variant plumbing --------------------------------------------------
+    def _selection_spec(self, r: ResolvedProblem):
+        """None for plain problems (the bit-identical fast paths); a
+        :class:`~repro.core.coverage.SelectionSpec` otherwise.  A weighted
+        problem whose engine samples roots ∝ w needs *no* selection change
+        (rows are equi-weighted by construction), so weights alone only
+        force a spec in row-weight fallback mode."""
+        p = r.problem
+        if p.is_plain and not self._row_weight_mode:
+            return None
+        if (p.node_weights is not None and not self._row_weight_mode
+                and p.budget is None and p.candidates is None
+                and p.t_rounds is None):
+            return None
+        if p.t_rounds is not None:
+            n_group, n_groups, quota = r.n_nodes, r.t_rounds, p.k
+        else:
+            n_group, n_groups, quota = r.n_items, 1, r.k_steps
+        costs = None
+        if r.costs is not None:
+            costs = np.tile(r.costs, r.t_rounds)
+        return cov.SelectionSpec(
+            k_steps=r.k_steps, n_group=n_group, n_groups=n_groups,
+            group_quota=quota, cand=r.cand_mask_items, costs=costs,
+            budget=p.budget, weighted=self._row_weight_mode)
+
+    def _early_exit_skip(self, r: ResolvedProblem, threshold: float) -> bool:
+        """Sketch-driven θ early exit (Alg. 2 LB gate): skip the exact
+        selection of one LB iteration when even an *upper bound* on the
+        achievable coverage cannot pass the ``est >= threshold`` check.
+
+        The bound is linear counting over the per-item sketch occupancy
+        (one mesh-parallel popcount sweep).  It is only applied in the
+        exact-safe regime ``n_rr <= sketch_k`` with ``"mod"`` bucketing,
+        where occupancy == exact per-item row count and linear counting can
+        only round *up* — so ``Σ top-k LC(occ) >= coverage of any k seeds``
+        and skipping provably never changes the loop's outcome (the exact
+        est would have failed the check too).  Weighted/budgeted problems
+        skip the gate (their objective is not a row count).
+        """
+        p = r.problem
+        st = self.store
+        if (not p.early_exit or st.sketch_k is None
+                or st.sketch_mode != "mod" or self._row_weight_mode
+                or r.node_weights is not None or p.budget is not None):
+            return False
+        n_rr = st.n_rr
+        if n_rr == 0 or n_rr > st.sketch_k:
+            return False
+        fns = cov._mesh_select_fns(st.mesh)
+        empty = jax.device_put(
+            np.zeros((st.n_shards, st.sketch_k // 32), np.uint32),
+            st._sh_buf)
+        occ = np.asarray(jax.device_get(fns.sweep(
+            st.sketch_words_mesh(), empty,
+            stripe=st.sketch_rows // st.n_shards)))[:r.n_items]
+        counts = sketch_mod.linear_count(occ, st.sketch_k)
+        mask = r.cand_mask_items
+        if mask is not None:
+            counts = counts[mask]
+        top = float(np.sort(counts)[::-1][:r.k_steps].sum())
+        est_ub = r.scale * min(float(n_rr), top) / max(n_rr, 1)
+        return est_ub < threshold
+
     # -- full IMM ----------------------------------------------------------
-    def solve(self, k: int, eps: float, ell: float = 1.0,
-              max_theta: Optional[int] = None):
-        n = self.n
-        lam_p, lam_star, eps_p, _ = imm_theta_params(n, k, eps, ell)
-        lb = 1.0
+    def solve(self, problem=None, eps: Optional[float] = None,
+              ell: float = 1.0, max_theta: Optional[int] = None, *,
+              k: Optional[int] = None):
+        """Solve an :class:`~repro.core.problem.IMProblem` -> ``IMResult``.
+
+        The historical positional form ``solve(k, eps, ell=, max_theta=)``
+        is deprecated (one release) and keeps returning the old
+        ``(seeds, spread_estimate, stats)`` tuple.
+        """
+        if isinstance(problem, IMProblem):
+            if (k is not None or eps is not None or max_theta is not None
+                    or ell != 1.0):
+                raise TypeError(
+                    "solve(problem) takes no extra arguments — set "
+                    "k/eps/ell/max_theta on the IMProblem itself")
+            return self.solve_problem(problem)
+        if k is None:
+            k = problem
+        if k is None or eps is None:
+            raise TypeError("solve() needs an IMProblem (or the deprecated "
+                            "k, eps pair)")
+        warnings.warn(
+            "IMMSolver.solve(k, eps) is deprecated; pass an IMProblem "
+            "(solve(IMProblem(k=..., eps=...))) — see DESIGN.md §6",
+            DeprecationWarning, stacklevel=2)
+        res = self.solve_problem(IMProblem(
+            k=int(k), eps=float(eps), ell=ell, max_theta=max_theta,
+            model=self._default_model()))
+        return res.seeds, res.spread, res.stats
+
+    def solve_problem(self, problem: IMProblem) -> IMResult:
+        r = self._prepare(problem)
+        spec = self._selection_spec(r)
+        scale = r.scale
+        p = problem
+        k_theta = p.k if p.k is not None else r.k_steps
+
+        def _select():
+            return self.store.select(r.k_steps, method=self._sel_method,
+                                     spec=spec)
+
         with jax.transfer_guard(self._guard):
-            for i in range(1, max(int(math.log2(n)), 2)):       # Alg. 2
-                x = n / (2.0 ** i)
-                theta_i = int(math.ceil(lam_p / x))
-                if max_theta:
-                    theta_i = min(theta_i, max_theta)
-                self.sample_until(theta_i)
-                res = self.store.select(k, method=self._sel_method)
-                # explicit scalar fetch: the Alg. 2 L7 break is host control
-                est = n * float(jax.device_get(res.frac))
-                self._stats.lb_iters = i
-                self._stats.history.append(("lb_iter", i, theta_i, est))
-                if est >= (1.0 + eps_p) * x:                     # Alg. 2 L7
-                    lb = est / (1.0 + eps_p)                     # Alg. 2 L8
-                    break
-            theta = int(math.ceil(lam_star / lb))
-            if max_theta:
-                theta = min(theta, max_theta)
-            self._stats.theta = theta
-            self._stats.lb = lb
-            self.sample_until(theta)
-            res = self.store.select(k, method=self._sel_method)
+            if p.theta is not None:
+                # fixed-θ mode (benchmarks, MRIM's Table-3 experiment):
+                # sample to θ, one selection, no LB loop
+                self._stats.theta = p.theta
+                self._stats.lb = 1.0
+                self.sample_until(p.theta)
+                res = _select()
+            else:
+                lam_p, lam_star, eps_p, _ = imm_theta_params(
+                    self.n, k_theta, p.eps, p.ell)
+                lb = 1.0
+                for i in range(1, max(int(math.log2(self.n)), 2)):  # Alg. 2
+                    x = scale / (2.0 ** i)
+                    theta_i = int(math.ceil(lam_p / x))
+                    if p.max_theta:
+                        theta_i = min(theta_i, p.max_theta)
+                    self.sample_until(theta_i)
+                    threshold = (1.0 + eps_p) * x
+                    if self._early_exit_skip(r, threshold):
+                        self._stats.early_exit_skips += 1
+                        self._stats.history.append(
+                            ("lb_skip", i, theta_i))
+                        continue
+                    res = _select()
+                    # explicit scalar fetch: Alg. 2 L7 break is host control
+                    est = scale * float(jax.device_get(res.frac))
+                    self._stats.lb_iters = i
+                    self._stats.history.append(("lb_iter", i, theta_i, est))
+                    if est >= threshold:                         # Alg. 2 L7
+                        lb = est / (1.0 + eps_p)                 # Alg. 2 L8
+                        break
+                theta = int(math.ceil(lam_star / lb))
+                if p.max_theta:
+                    theta = min(theta, p.max_theta)
+                self._stats.theta = theta
+                self._stats.lb = lb
+                self.sample_until(theta)
+                res = _select()
         # final result materialization — the loop's only bulk transfer
-        seeds, frac = jax.device_get((res.seeds, res.frac))
-        self._stats.frac_covered = float(frac)
-        spread_est = n * float(frac)                             # Eq. (3)
-        return np.asarray(seeds), spread_est, self.stats
+        spent_dev = getattr(res, "spent", None)
+        fetched = jax.device_get(
+            (res.seeds, res.gains, res.frac)
+            + ((spent_dev,) if spent_dev is not None else ()))
+        seeds, gains, frac = fetched[0], fetched[1], float(fetched[2])
+        spent = float(fetched[3]) if spent_dev is not None else 0.0
+        seeds = np.asarray(seeds)
+        gains = np.asarray(gains)
+        live = seeds < r.n_items          # budgeted scans pad with sentinels
+        seeds, gains = seeds[live], gains[live]
+        self._stats.frac_covered = frac
+        self._stats.variant = p.variant
+        self._stats.budget_spent = spent
+        spread = scale * frac                                    # Eq. (3)
+        return IMResult(seeds=seeds, spread=spread, gains=gains, frac=frac,
+                        stats=self.stats, problem=p, n_nodes=self.n,
+                        cost=spent)
 
 
-def imm(g: CSRGraph, k: int, eps: float, **kw):
-    """One-shot convenience wrapper; returns (seeds, spread_estimate, stats)."""
-    solver_kw = {k_: v for k_, v in kw.items()
-                 if k_ in ("engine", "batch", "qcap", "ec", "model", "seed",
-                           "selection", "sketch_k", "mesh")}
-    solve_kw = {k_: v for k_, v in kw.items() if k_ in ("ell", "max_theta")}
-    solver = IMMSolver(g, **solver_kw)
-    return solver.solve(k, eps, **solve_kw)
+_SOLVER_KEYS = frozenset(("engine", "batch", "qcap", "ec", "model", "seed",
+                          "selection", "sketch_k", "mesh"))
+_PROBLEM_KEYS = frozenset(("model", "ell", "max_theta", "node_weights",
+                           "costs", "budget", "candidates", "t_rounds",
+                           "theta", "early_exit"))
+
+
+def imm(g: CSRGraph, k: Optional[int] = None, eps: Optional[float] = None,
+        **kw):
+    """One-shot convenience wrapper; returns (seeds, spread_estimate, stats).
+
+    Keyword arguments split between the solver (engine/batch/selection/...)
+    and the problem (node_weights/costs/budget/candidates/t_rounds/...);
+    anything else raises ``TypeError`` — the historical whitelist filter
+    silently swallowed typos like ``sketchk=64``.
+    """
+    unknown = set(kw) - _SOLVER_KEYS - _PROBLEM_KEYS
+    if unknown:
+        raise TypeError("imm() got unexpected keyword argument(s): "
+                        + ", ".join(sorted(unknown)))
+    solver_kw = {k_: v for k_, v in kw.items() if k_ in _SOLVER_KEYS}
+    pkw = {k_: v for k_, v in kw.items()
+           if k_ in _PROBLEM_KEYS and k_ != "model" and v is not None}
+    if kw.get("model") is not None:
+        pkw["model"] = kw["model"]
+    if k is not None:
+        pkw["k"] = k
+    if eps is not None:
+        pkw["eps"] = eps
+    res = IMMSolver(g, **solver_kw).solve_problem(IMProblem(**pkw))
+    return res.seeds, res.spread, res.stats
+
+
+def imm_result(g: CSRGraph, problem: IMProblem, **solver_kw) -> IMResult:
+    """Typed one-shot: ``IMMSolver(g, **solver_kw).solve(problem)``."""
+    unknown = set(solver_kw) - _SOLVER_KEYS
+    if unknown:
+        raise TypeError("imm_result() got unexpected keyword argument(s): "
+                        + ", ".join(sorted(unknown)))
+    return IMMSolver(g, **solver_kw).solve_problem(problem)

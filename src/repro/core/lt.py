@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.graph.csr import CSRGraph
+from repro.core.roots import draw_roots
 
 
 class LTSample(NamedTuple):
@@ -108,24 +109,27 @@ def _sample_lt(key, offsets, indices, rowcum, roots, *, batch, qcap, n, m):
 
 
 @functools.partial(jax.jit, static_argnames=("batch", "qcap", "n", "m"))
-def _lt_round(key, offsets, indices, rowcum, *, batch, qcap, n, m):
+def _lt_round(key, offsets, indices, rowcum, root_table, *, batch, qcap, n,
+              m):
     """Root draw + LT walk as ONE jit — the device-resident engine path.
     ``rowcum`` is the precomputed segmented cumsum (engine-owned, computed
     once; the historical wrapper recomputed it on the host every round).
-    Key-split structure matches :func:`sample_rrsets_lt` exactly."""
+    Key-split structure matches :func:`sample_rrsets_lt` exactly
+    (``root_table=None`` -> the identical uniform randint)."""
     key, sub = jax.random.split(key)
-    roots = jax.random.randint(sub, (batch,), 0, n, dtype=jnp.int32)
+    roots = draw_roots(sub, batch, n, root_table)
     nodes, lengths, overflowed, steps = _sample_lt(
         key, offsets, indices, rowcum, roots,
         batch=batch, qcap=qcap, n=n, m=m)
     return nodes, lengths, roots, overflowed, steps
 
 
-def sample_rrsets_lt(key, g_rev: CSRGraph, batch: int, qcap: int) -> LTSample:
+def sample_rrsets_lt(key, g_rev: CSRGraph, batch: int, qcap: int,
+                     root_table=None) -> LTSample:
     n, m = g_rev.n_nodes, g_rev.n_edges
     rowcum = row_cumweights(g_rev)
     nodes, lengths, roots, overflowed, steps = _lt_round(
-        key, g_rev.offsets, g_rev.indices, rowcum,
+        key, g_rev.offsets, g_rev.indices, rowcum, root_table,
         batch=batch, qcap=qcap, n=n, m=m)
     return LTSample(nodes=nodes, lengths=lengths, roots=roots,
                     overflowed=overflowed, steps=steps)

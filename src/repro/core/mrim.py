@@ -1,31 +1,33 @@
 """Multi-round influence maximization (paper §4.8; CR-NAIMM of Sun et al.'18).
 
-Influence propagates over T independent rounds; we pick k seeds *per round* to
-maximize the number of nodes influenced at least once.  Per the paper: "after
-selecting a random node, we initiate a random BFS originating from the
-selected node as many times as the number of rounds.  Each element in a random
-RR set is a tuple of node-id and round number."
+Influence propagates over T independent rounds; we pick k seeds *per round*
+to maximize the number of nodes influenced at least once.  Per the paper:
+"after selecting a random node, we initiate a random BFS originating from
+the selected node as many times as the number of rounds.  Each element in a
+random RR set is a tuple of node-id and round number."
 
 Implementation: the T per-round BFS of one RR sample run as T adjacent lanes
 of the queue engine sharing one root; elements are encoded as
 ``round * n + node`` so the whole coverage machinery (occur histogram,
-membership scan, decrement) is reused verbatim on an item space of size n·T —
-with one addition: the greedy argmax masks out rounds whose per-round budget k
-is exhausted (cross-round greedy of CR-NAIMM).
+membership scan, decrement) is reused verbatim on an item space of size n·T.
+The cross-round greedy of CR-NAIMM — mask rounds whose per-round budget k is
+exhausted — is a *group budget* on the unified selection backends
+(``SelectionSpec(n_group=n, n_groups=T, group_quota=k)``), so MRIM is just
+``IMMSolver.solve(IMProblem(k=k, t_rounds=T, ...))``: the dedicated
+``_greedy_mrim`` scan of earlier revisions is gone, and all three selection
+backends (fused scan, Pallas bitset, CELF-sketch) solve MRIM on any mesh.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.graph.csr import CSRGraph, reverse
+from repro.graph.csr import CSRGraph
 from repro.core import rrset as rr_queue
-from repro.core import coverage as cov
-from repro.core.engine import MRIMEngine, make_engine, split_key as _split_key
+from repro.core.engine import MRIMEngine
+from repro.core.imm import IMMSolver
+from repro.core.problem import IMProblem
 
 
 def sample_mrim_round(key, g_rev: CSRGraph, batch: int, t_rounds: int,
@@ -41,37 +43,6 @@ def sample_mrim_round(key, g_rev: CSRGraph, batch: int, t_rounds: int,
     return np.asarray(b.nodes), np.asarray(b.lengths), np.asarray(b.overflowed)
 
 
-@functools.partial(jax.jit, static_argnames=("n_rr", "n", "t_rounds", "k"))
-def _greedy_mrim(rr_flat, rr_ids, valid, occur0, *, n_rr, n, t_rounds, k):
-    items = n * t_rounds
-
-    def step(carry, _):
-        occur, covered, budget = carry
-        # mask rounds with exhausted budget
-        round_of = jnp.arange(items, dtype=jnp.int32) // n
-        ok = budget[round_of] > 0
-        masked = jnp.where(ok, occur, -1)
-        u = jnp.argmax(masked).astype(jnp.int32)
-        match = (rr_flat == u) & valid
-        row_has = jax.ops.segment_max(match.astype(jnp.int32), rr_ids,
-                                      num_segments=n_rr + 1,
-                                      indices_are_sorted=True)[:n_rr] > 0
-        newly = row_has & ~covered
-        elem_newly = jnp.concatenate([newly, jnp.zeros(1, bool)])[
-            jnp.clip(rr_ids, 0, n_rr)] & valid
-        dec = jnp.zeros(items + 1, jnp.int32).at[rr_flat].add(
-            elem_newly.astype(jnp.int32), mode="drop")[:items]
-        budget = budget.at[u // n].add(-1)
-        gain = newly.sum(dtype=jnp.int32)
-        return (occur - dec, covered | row_has, budget), (u, gain)
-
-    budget0 = jnp.full((t_rounds,), k, jnp.int32)
-    covered0 = jnp.zeros(n_rr, bool)
-    (_, covered, _), (seeds, gains) = jax.lax.scan(
-        step, (occur0, covered0, budget0), None, length=k * t_rounds)
-    return seeds, gains
-
-
 class MRIMResult(NamedTuple):
     seeds_per_round: list    # T lists of k node ids
     spread_estimate: float
@@ -79,27 +50,17 @@ class MRIMResult(NamedTuple):
 
 
 def solve_mrim(g: CSRGraph, k: int, t_rounds: int, n_rr: int, *,
-               qcap: int | None = None, batch: int = 64, seed: int = 0):
-    """Fixed-θ MRIM solve (the paper's Table-3 experiment uses fixed ε; the
-    IMM θ machinery composes identically — see IMMSolver — so the benchmark
-    isolates the sampling/selection engines)."""
-    g_rev = reverse(g)
-    n = g.n_nodes
-    key = jax.random.key(seed)
-    eng = make_engine("mrim", g_rev, batch=batch, t_rounds=t_rounds, qcap=qcap)
-    inc = cov.DeviceRRStore(eng.item_space)
-    with jax.transfer_guard("disallow"):     # device-resident sampling loop
-        while inc.n_rr < n_rr:
-            key, sub = _split_key(key)
-            inc.append_batch(eng.sample(sub))
-    store = inc.snapshot()
-    occur0 = cov.occur_histogram(store)
-    seeds, gains = _greedy_mrim(store.rr_flat, store.rr_ids, store.valid,
-                                occur0, n_rr=store.n_rr, n=n,
-                                t_rounds=t_rounds, k=k)
-    seeds = np.asarray(seeds)
-    per_round = [sorted((seeds[seeds // n == t] % n).tolist())
-                 for t in range(t_rounds)]
-    frac = float(np.asarray(gains).sum()) / max(store.n_rr, 1)
-    return MRIMResult(seeds_per_round=per_round, spread_estimate=n * frac,
-                      n_rr=store.n_rr)
+               qcap: int | None = None, batch: int = 64, seed: int = 0,
+               selection: str = "auto") -> MRIMResult:
+    """Fixed-θ MRIM solve — a thin wrapper over the unified problem API:
+    ``IMMSolver(g, engine=...).solve(IMProblem(k=k, t_rounds=T, theta=n_rr))``
+    (the paper's Table-3 experiment uses fixed ε; the IMM θ machinery
+    composes identically — drop ``theta=`` from the problem to run the full
+    Alg. 2 schedule)."""
+    solver = IMMSolver(g, batch=batch, qcap=qcap, seed=seed,
+                       selection=selection)
+    res = solver.solve(IMProblem(k=k, t_rounds=t_rounds, theta=n_rr))
+    frac = res.frac
+    return MRIMResult(seeds_per_round=res.seeds_per_round(),
+                      spread_estimate=g.n_nodes * frac,
+                      n_rr=res.stats.n_rr_sampled)

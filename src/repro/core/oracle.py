@@ -81,6 +81,72 @@ def greedy_max_coverage(rr_sets: list[list[int]], n: int, k: int):
     return seeds, frac
 
 
+def greedy_max_coverage_weighted(rr_sets: list[list[int]], n: int, k: int,
+                                 row_weights):
+    """Weighted greedy reference: each RR row carries a weight (its root's
+    node weight under the importance-weighted estimator); greedy maximizes
+    the covered *weight* (ties -> lowest node id, matching the JAX argmax).
+    Returns (seeds, covered_weight / total_weight)."""
+    w = np.asarray(row_weights, dtype=np.float64)
+    occur = np.zeros(n, dtype=np.float64)
+    node_to_rr: dict[int, list[int]] = {}
+    for i, rr in enumerate(rr_sets):
+        for v in rr:
+            occur[v] += w[i]
+            node_to_rr.setdefault(v, []).append(i)
+    covered = np.zeros(len(rr_sets), dtype=bool)
+    seeds = []
+    w_covered = 0.0
+    for _ in range(k):
+        u = int(np.argmax(occur))
+        seeds.append(u)
+        for i in node_to_rr.get(u, []):
+            if not covered[i]:
+                covered[i] = True
+                w_covered += w[i]
+                for v in rr_sets[i]:
+                    occur[v] -= w[i]
+    total = float(w.sum())
+    return seeds, w_covered / max(total, 1e-300)
+
+
+def budgeted_greedy_cost_ratio(rr_sets: list[list[int]], n: int, costs,
+                               budget: float, candidates=None):
+    """Budgeted IM reference: lazy-free cost-ratio greedy.  Picks the
+    affordable candidate maximizing marginal-coverage / cost (ties ->
+    lowest node id) until nothing affordable with positive gain remains.
+    Returns (seeds, frac_covered, total_cost)."""
+    costs = np.asarray(costs, dtype=np.float64)
+    cand = (np.ones(n, bool) if candidates is None
+            else np.asarray(candidates, bool))
+    occur = np.zeros(n, dtype=np.float64)
+    node_to_rr: dict[int, list[int]] = {}
+    for i, rr in enumerate(rr_sets):
+        for v in rr:
+            occur[v] += 1.0
+            node_to_rr.setdefault(v, []).append(i)
+    covered = np.zeros(len(rr_sets), dtype=bool)
+    seeds = []
+    spent = 0.0
+    n_covered = 0
+    while True:
+        feas = cand & (costs <= budget - spent) & (occur > 0)
+        if not feas.any():
+            break
+        score = np.where(feas, occur / costs, -np.inf)
+        u = int(np.argmax(score))
+        seeds.append(u)
+        spent += float(costs[u])
+        for i in node_to_rr.get(u, []):
+            if not covered[i]:
+                covered[i] = True
+                n_covered += 1
+                for v in rr_sets[i]:
+                    occur[v] -= 1.0
+    frac = n_covered / max(len(rr_sets), 1)
+    return seeds, frac, spent
+
+
 def log_cnk(n: int, k: int) -> float:
     return math.lgamma(n + 1) - math.lgamma(k + 1) - math.lgamma(n - k + 1)
 
@@ -132,10 +198,18 @@ def imm_oracle(offsets_rev, indices_rev, weights_rev, n: int, k: int, eps: float
     return seeds, rr_sets, theta
 
 
-def forward_ic_spread(offsets, indices, weights, seeds, rng, n_sims: int = 200):
-    """Forward Monte-Carlo E[I(S)] under IC on the *forward* CSR (oracle)."""
+def forward_ic_spread(offsets, indices, weights, seeds, rng,
+                      n_sims: int = 200, node_weights=None):
+    """Forward Monte-Carlo spread under IC on the *forward* CSR (oracle).
+
+    Unweighted: E[|I(S)|].  With ``node_weights``: the weight-aware spread
+    ``E[Σ_{v ∈ I(S)} w_v]`` — the objective of weighted IM, used as the
+    conformance reference for the weight-proportional RIS estimator.
+    """
     n = len(offsets) - 1
-    total = 0
+    w = None if node_weights is None else np.asarray(node_weights,
+                                                     dtype=np.float64)
+    total = 0.0
     for _ in range(n_sims):
         active = set(int(s) for s in seeds)
         queue = list(active)
@@ -151,5 +225,6 @@ def forward_ic_spread(offsets, indices, weights, seeds, rng, n_sims: int = 200):
                     if v not in active:
                         active.add(v)
                         queue.append(v)
-        total += len(active)
+        total += (len(active) if w is None
+                  else float(w[np.fromiter(active, int)].sum()))
     return total / n_sims

@@ -1,0 +1,109 @@
+"""Weighted root sampling: Walker alias tables for weighted IM.
+
+Weighted influence maximization (Cohen et al., sketch-based IM) weights each
+node's contribution to the objective: ``Σ_v w_v · P[v influenced]``.  Under
+RIS this is *one* change to the pipeline — draw RR roots ∝ ``w`` instead of
+uniformly — after which the unchanged coverage machinery estimates the
+weighted spread as ``(Σ w) · F_R(S)`` (Eq. 3 with the root distribution
+swapped).
+
+The draw must be O(1) per root, jit/shard_map-safe, and — crucially for the
+repo's bit-parity contracts — *exactly* the historical uniform draw when no
+weights are given.  A Walker alias table delivers all three: construction
+is O(n) on the host, every draw is one gather + one compare, and the
+one-uniform variant (bucket from ``floor(u·n)``, accept-vs-alias from the
+fractional part) degenerates to ``min(floor(u·n), n-1)`` — byte-for-byte
+the uniform refill draw — when every bucket has acceptance probability 1.
+
+This module sits *below* the samplers (``rrset``/``dense``/``lt`` import
+it); ``core/engine.py`` re-exports everything as the engine-facing surface.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class AliasTable(NamedTuple):
+    """Walker alias table for O(1) weighted categorical draws on device.
+
+    ``prob[i]`` is the acceptance probability of bucket i, ``alias[i]`` the
+    fallback node.  A plain pytree of device arrays, so it passes straight
+    through jit and shard_map.
+    """
+    prob: jnp.ndarray     # (n,) float32 in [0, 1]
+    alias: jnp.ndarray    # (n,) int32
+
+
+def build_alias_table(weights) -> AliasTable:
+    """Host-side Walker alias construction (O(n)) from non-negative weights."""
+    w = np.asarray(weights, np.float64)
+    if w.ndim != 1:
+        raise ValueError("root weights must be a 1-D vector")
+    if (w < 0).any() or not np.isfinite(w).all() or w.sum() <= 0:
+        raise ValueError("root weights must be non-negative, finite, and "
+                         "not all zero")
+    n = w.shape[0]
+    p = w * (n / w.sum())
+    prob = np.ones(n)
+    alias = np.arange(n, dtype=np.int64)
+    small = [i for i in range(n) if p[i] < 1.0]
+    large = [i for i in range(n) if p[i] >= 1.0]
+    while small and large:
+        s, l = small.pop(), large.pop()
+        prob[s] = p[s]
+        alias[s] = l
+        p[l] -= 1.0 - p[s]
+        (small if p[l] < 1.0 else large).append(l)
+    # numerical leftovers: both queues drain to probability-1 buckets
+    for i in large + small:
+        prob[i] = 1.0
+        alias[i] = i
+    return AliasTable(prob=jnp.asarray(prob, jnp.float32),
+                      alias=jnp.asarray(alias, jnp.int32))
+
+
+# One float32 uniform carries ~24 bits: splitting it into a bucket index
+# AND an accept fraction is only sound while n << 2^24 (past that the
+# fraction degenerates and the alias decision biases).  The one-uniform
+# trick is therefore reserved for the refill worker's in-loop draw (which
+# has exactly one spare uniform column) and guarded by this bound; the
+# batch draw (:func:`draw_roots`) spends two draws and is exact at any n.
+ONE_UNIFORM_MAX_N = 1 << 22
+
+
+def roots_from_uniform(u, n: int, table: Optional[AliasTable] = None):
+    """Map uniforms in [0, 1) to root ids — uniformly over ``[0, n)`` when
+    ``table`` is None, else ∝ the table's weights via the one-uniform alias
+    trick (``floor(u·n)`` picks the bucket, the fractional part decides
+    accept-vs-alias; callers must keep ``n <= ONE_UNIFORM_MAX_N`` — see
+    above).  With ``table=None`` this is *exactly* the historical
+    ``min(floor(u·n), n-1)`` refill-root draw, keeping uniform sample
+    streams bit-identical."""
+    scaled = u * n
+    idx = jnp.minimum(scaled.astype(jnp.int32), n - 1)
+    if table is None:
+        return idx
+    frac = scaled - idx.astype(scaled.dtype)
+    return jnp.where(frac < table.prob[idx], idx, table.alias[idx]).astype(
+        jnp.int32)
+
+
+def draw_roots(key, batch: int, n: int, table: Optional[AliasTable] = None):
+    """Draw one batch of root ids — the shared root-sampling helper every
+    engine routes through.  ``table=None`` is the historical uniform
+    ``randint`` call (bit-identical streams for plain problems); with a
+    table the roots come out ∝ its weights (one randint for the bucket +
+    one uniform for the alias accept — exact at any n, unlike scaling a
+    single float32 uniform), so Eq. 3's hit fraction estimates
+    ``Σ_v w_v·P[v influenced] / Σ_v w_v``."""
+    if table is None:
+        return jax.random.randint(key, (batch,), 0, n, dtype=jnp.int32)
+    ki, ka = jax.random.split(key)
+    idx = jax.random.randint(ki, (batch,), 0, n, dtype=jnp.int32)
+    accept = jax.random.uniform(ka, (batch,))
+    return jnp.where(accept < table.prob[idx], idx, table.alias[idx]).astype(
+        jnp.int32)

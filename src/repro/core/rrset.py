@@ -46,6 +46,7 @@ import numpy as np
 
 from repro.graph.csr import CSRGraph
 from repro.core.packing import rank_positions
+from repro.core.roots import draw_roots, roots_from_uniform
 
 EC_DEFAULT = 128  # edge-chunk width (the paper's N_th=32, scaled to VPU lanes)
 
@@ -288,14 +289,15 @@ def _sample_queue(key, offsets, indices, weights, roots, *,
 @functools.partial(jax.jit,
                    static_argnames=("batch", "qcap", "ec", "n", "m",
                                     "dedup"))
-def _queue_round(key, offsets, indices, weights, *, batch, qcap, ec, n, m,
-                 dedup="sort"):
+def _queue_round(key, offsets, indices, weights, root_table, *, batch, qcap,
+                 ec, n, m, dedup="sort"):
     """Root draw + queue BFS as ONE jit: every operand is a device array, so
     a round triggers no host↔device traffic (runs under
     ``jax.transfer_guard("disallow")``).  The key-split structure matches the
-    historical host wrapper exactly, keeping sample streams bit-identical."""
+    historical host wrapper exactly, keeping sample streams bit-identical
+    (``root_table=None`` -> the identical uniform randint)."""
     key, sub = jax.random.split(key)
-    roots = jax.random.randint(sub, (batch,), 0, n, dtype=jnp.int32)
+    roots = draw_roots(sub, batch, n, root_table)
     nodes, lengths, overflowed, steps = _sample_queue(
         key, offsets, indices, weights, roots,
         batch=batch, qcap=qcap, ec=ec, n=n, m=m, dedup=dedup)
@@ -304,16 +306,19 @@ def _queue_round(key, offsets, indices, weights, *, batch, qcap, ec, n, m,
 
 def sample_rrsets_queue(key, g_rev: CSRGraph, batch: int, qcap: int,
                         ec: int = EC_DEFAULT,
-                        dedup: str | None = None) -> QueueSample:
+                        dedup: str | None = None,
+                        root_table=None) -> QueueSample:
     """Sample ``batch`` RR sets (one round) on the reverse CSR.
 
     ``dedup=None`` runs :func:`detect_dedup_mode` on the host once per call
-    (engines cache the detection at construction)."""
+    (engines cache the detection at construction).  ``root_table`` (an
+    :class:`~repro.core.roots.AliasTable`) switches the root draw to
+    weight-proportional sampling (weighted IM)."""
     n, m = g_rev.n_nodes, g_rev.n_edges
     if dedup is None:
         dedup = detect_dedup_mode(g_rev)
     nodes, lengths, roots, overflowed, steps = _queue_round(
-        key, g_rev.offsets, g_rev.indices, g_rev.weights,
+        key, g_rev.offsets, g_rev.indices, g_rev.weights, root_table,
         batch=batch, qcap=qcap, ec=ec, n=n, m=m, dedup=dedup)
     return QueueSample(nodes=nodes, lengths=lengths, roots=roots,
                        overflowed=overflowed, steps=steps)
@@ -348,7 +353,7 @@ class RefillSample(NamedTuple):
                    static_argnames=("batch", "out_cap", "quota",
                                     "max_sets_per_lane", "ec", "n", "m",
                                     "dedup"))
-def _sample_refill(key, offsets, indices, weights, roots0, *,
+def _sample_refill(key, offsets, indices, weights, roots0, root_table, *,
                    batch, out_cap, quota, max_sets_per_lane, ec, n, m,
                    dedup="sort"):
     n_words = (n + 31) // 32
@@ -423,7 +428,10 @@ def _sample_refill(key, offsets, indices, weights, roots0, *,
         has_room = tail < out_cap
         overflow = overflow | (more & ~has_room)
         start_new = more & has_room
-        new_roots = jnp.minimum((urand[:, ec] * n).astype(jnp.int32), n - 1)
+        # refill roots from the step's spare uniform column: uniform when
+        # root_table is None (bit-identical to the historical floor(u*n)),
+        # weight-proportional through the alias table otherwise
+        new_roots = roots_from_uniform(urand[:, ec], n, root_table)
         # clear this lane's visited set and seed the new root
         visited = jnp.where(start_new[:, None], jnp.uint32(0), visited)
         visited = visited.at[
@@ -453,13 +461,13 @@ def _sample_refill(key, offsets, indices, weights, roots0, *,
                    static_argnames=("batch", "out_cap", "quota",
                                     "max_sets_per_lane", "ec", "n", "m",
                                     "dedup"))
-def _refill_round(key, offsets, indices, weights, *, batch, out_cap, quota,
-                  max_sets_per_lane, ec, n, m, dedup="sort"):
+def _refill_round(key, offsets, indices, weights, root_table, *, batch,
+                  out_cap, quota, max_sets_per_lane, ec, n, m, dedup="sort"):
     """Root draw + persistent-lane worker as ONE jit (see ``_queue_round``)."""
     key, sub = jax.random.split(key)
-    roots = jax.random.randint(sub, (batch,), 0, n, dtype=jnp.int32)
+    roots = draw_roots(sub, batch, n, root_table)
     return _sample_refill(
-        key, offsets, indices, weights, roots,
+        key, offsets, indices, weights, roots, root_table,
         batch=batch, out_cap=out_cap, quota=quota,
         max_sets_per_lane=max_sets_per_lane, ec=ec, n=n, m=m, dedup=dedup)
 
@@ -468,7 +476,8 @@ def sample_rrsets_refill(key, g_rev: CSRGraph, batch: int,
                          quota: int, out_cap: int,
                          max_sets_per_lane: int | None = None,
                          ec: int = EC_DEFAULT,
-                         dedup: str | None = None) -> RefillSample:
+                         dedup: str | None = None,
+                         root_table=None) -> RefillSample:
     """Persistent-lane sampling with a global quota: lanes refill with new
     roots until >= ``quota`` RR sets are complete across all lanes (the
     paper's Alg. 6 worker loop); in-flight sets always finish (unbiased)."""
@@ -478,7 +487,7 @@ def sample_rrsets_refill(key, g_rev: CSRGraph, batch: int,
     if dedup is None:
         dedup = detect_dedup_mode(g_rev)
     flat, lengths, n_done, overflow, steps = _refill_round(
-        key, g_rev.offsets, g_rev.indices, g_rev.weights,
+        key, g_rev.offsets, g_rev.indices, g_rev.weights, root_table,
         batch=batch, out_cap=out_cap, quota=quota,
         max_sets_per_lane=max_sets_per_lane, ec=ec, n=n, m=m, dedup=dedup)
     return RefillSample(flat=flat, lengths=lengths, n_done=n_done,

@@ -25,8 +25,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.compat import shard_map_unchecked
 from repro.graph import csr, generators, weights
 from repro.core import rrset
-from repro.core.engine import RRBatch, register_engine, resolve_qcap
+from repro.core.engine import (RRBatch, build_alias_table, draw_roots,
+                               register_engine, resolve_qcap)
 from repro.core.imm import IMMSolver
+from repro.core.problem import IMProblem
 from repro.launch.mesh import make_sample_mesh
 
 
@@ -48,13 +50,17 @@ class ShardedQueueEngine:
         ec: int = rrset.EC_DEFAULT
 
     def __init__(self, g_rev, config: Optional[Config] = None,
-                 mesh: Optional[Mesh] = None):
+                 mesh: Optional[Mesh] = None, root_weights=None):
         self.g_rev = csr.coalesce_ic(g_rev)
         self.config = config if config is not None else self.Config()
         self.qcap = resolve_qcap(self.config.qcap, self.g_rev)
         self._dedup = rrset.detect_dedup_mode(self.g_rev)
         self.mesh = mesh if mesh is not None else Mesh(
             np.asarray(jax.devices()), ("dev",))
+        self.root_weights = (None if root_weights is None
+                             else np.asarray(root_weights, np.float32))
+        self._table = (None if root_weights is None
+                       else build_alias_table(self.root_weights))
         self._fn = None
 
     @property
@@ -68,6 +74,14 @@ class ShardedQueueEngine:
         bpd, qcap, ec = self.config.batch, self.qcap, self.config.ec
         dedup = self._dedup
 
+        # the alias table joins the pre-placed replicated operands (graph
+        # arrays below get the same treatment): closing over explicitly
+        # replicated arrays keeps the per-round call free of implicit
+        # cross-device transfers under the solver's transfer guard
+        rep0 = NamedSharding(self.mesh, P())
+        table = (None if self._table is None else type(self._table)(
+            *(jax.device_put(x, rep0) for x in self._table)))
+
         def local(offsets, indices, w, keydata):
             # full 128-bit key state travels as raw uint32 data (typed keys
             # don't cross shard_map on older jax); fold_in(dev) gives each
@@ -76,7 +90,9 @@ class ShardedQueueEngine:
             dev = jax.lax.axis_index(axis).astype(jnp.uint32)
             key = jax.random.fold_in(jax.random.wrap_key_data(keydata), dev)
             key, sub = jax.random.split(key)
-            roots = jax.random.randint(sub, (bpd,), 0, n, dtype=jnp.int32)
+            # uniform (table=None) is the historical randint, bit-identical;
+            # weighted IM draws ∝ node_weights through the alias table
+            roots = draw_roots(sub, bpd, n, table)
             nodes, lengths, overflow, steps = rrset._sample_queue(
                 key, offsets, indices, w, roots,
                 batch=bpd, qcap=qcap, ec=ec, n=n, m=m, dedup=dedup)
@@ -140,26 +156,69 @@ class ShardedQueueEngine:
                             steps.max())
 
 
-def solve(g, k: int, eps: float, *, batch_per_dev: int = 128, seed: int = 0,
-          selection: str = "auto", mesh=None):
-    """Distributed IMM solve: sampler fan-out AND pool/selection sharing one
+def solve(g, k: int | None = None, eps: float | None = None, *,
+          batch_per_dev: int = 128, seed: int = 0, selection: str = "auto",
+          mesh=None, problem: IMProblem | None = None):
+    """Distributed IM solve: sampler fan-out AND pool/selection sharing one
     mesh.  ``mesh=None`` builds a mesh over every local device; the engine
     samples on it, the solver's pool is sharded over it (``samples`` axis),
     and the per-device rows never leave the device that sampled them
-    (``sample_sharded``)."""
+    (``sample_sharded``).
+
+    ``problem`` routes any :class:`~repro.core.problem.IMProblem` variant
+    through the same mesh (weighted problems hand the engine their alias
+    table; MRIM needs the tagged engine and is served by ``imm()`` /
+    ``IMMSolver`` directly, not the sharded queue fan-out).
+    """
     mesh = mesh if mesh is not None else make_sample_mesh(None)
+    if problem is None:
+        if k is None or eps is None:
+            raise TypeError("solve() needs either problem= or the (k, eps) "
+                            "pair")
+        problem = IMProblem(k=k, eps=eps)
+    if problem.t_rounds is not None:
+        raise ValueError("the sharded queue engine samples the plain node "
+                         "space; solve MRIM via IMMSolver(g).solve(problem)")
     g_rev = csr.reverse(g)
     engine = ShardedQueueEngine(
-        g_rev, ShardedQueueEngine.Config(batch=batch_per_dev), mesh=mesh)
+        g_rev, ShardedQueueEngine.Config(batch=batch_per_dev), mesh=mesh,
+        root_weights=problem.node_weights)
     solver = IMMSolver(g, engine=engine, seed=seed, selection=selection,
                        mesh=mesh)
-    seeds, est, stats = solver.solve(k, eps)
-    return seeds, est, dict(theta=stats.theta, sampled=stats.n_rr_sampled,
-                            selection=stats.selection,
-                            devices=engine.mesh.devices.size,
-                            mesh_shape=stats.mesh_shape,
-                            pool_sharding=stats.pool_sharding,
-                            per_device_pool_bytes=stats.per_device_pool_bytes)
+    res = solver.solve_problem(problem)
+    stats = res.stats
+    return res.seeds, res.spread, dict(
+        theta=stats.theta, sampled=stats.n_rr_sampled,
+        selection=stats.selection, variant=stats.variant,
+        n_seeds=len(res.seeds), cost=res.cost,
+        devices=engine.mesh.devices.size,
+        mesh_shape=stats.mesh_shape,
+        pool_sharding=stats.pool_sharding,
+        per_device_pool_bytes=stats.per_device_pool_bytes)
+
+
+def _node_vector(spec: str, g, *, seed: int, name: str):
+    """CLI node-vector spec -> (n,) float array: 'degree' (out-degree + 1),
+    'random' (uniform [1, 2)), or a comma-separated list of n floats."""
+    n = g.n_nodes
+    if spec == "degree":
+        return (np.diff(np.asarray(g.offsets)) + 1.0).astype(np.float32)
+    if spec == "random":
+        rng = np.random.default_rng(seed)
+        return (1.0 + rng.random(n)).astype(np.float32)
+    vals = np.asarray([float(x) for x in spec.split(",")], np.float32)
+    if vals.shape != (n,):
+        raise SystemExit(f"--{name} list must have n={n} entries")
+    return vals
+
+
+def _candidate_ids(spec: str, g):
+    """CLI candidate spec -> id array: 'top:N' (highest out-degree) or a
+    comma-separated id list."""
+    if spec.startswith("top:"):
+        deg = np.diff(np.asarray(g.offsets))
+        return np.argsort(-deg, kind="stable")[:int(spec[4:])]
+    return np.asarray([int(x) for x in spec.split(",")])
 
 
 def main():
@@ -174,16 +233,53 @@ def main():
     ap.add_argument("--mesh", default=None,
                     help="device count or axis spec for the sampling mesh "
                          "(e.g. '4' or 'samples:8'; default: all devices)")
+    ap.add_argument("--weights", default=None, metavar="SPEC",
+                    help="weighted IM node weights: 'degree', 'random', or "
+                         "a comma-separated list (DESIGN.md §6)")
+    ap.add_argument("--costs", default=None, metavar="SPEC",
+                    help="budgeted IM per-node costs (same specs as "
+                         "--weights); requires --budget")
+    ap.add_argument("--budget", type=float, default=None,
+                    help="budgeted IM total budget (replaces --k)")
+    ap.add_argument("--candidates", default=None, metavar="SPEC",
+                    help="candidate restriction: 'top:N' (by out-degree) "
+                         "or comma-separated node ids")
+    ap.add_argument("--t-rounds", type=int, default=None,
+                    help="MRIM round count (solved on the tagged mrim "
+                         "engine, single-device pool)")
     args = ap.parse_args()
     src, dst = generators.barabasi_albert(args.n, args.r, seed=0)
     g = weights.wc_weights(csr.from_edges(src, dst, args.n))
+    problem = IMProblem(
+        k=None if args.budget is not None else args.k,
+        eps=args.eps,
+        node_weights=(None if args.weights is None
+                      else _node_vector(args.weights, g, seed=1,
+                                        name="weights")),
+        costs=(None if args.costs is None
+               else _node_vector(args.costs, g, seed=2, name="costs")),
+        budget=args.budget,
+        candidates=(None if args.candidates is None
+                    else _candidate_ids(args.candidates, g)),
+        t_rounds=args.t_rounds)
     t0 = time.time()
-    seeds, est, stats = solve(g, args.k, args.eps, selection=args.selection,
-                              mesh=make_sample_mesh(args.mesh))
+    if args.t_rounds is not None:
+        from repro.core.imm import imm_result
+        res = imm_result(g, problem, selection=args.selection)
+        print(f"variant={res.stats.variant} theta={res.stats.theta} "
+              f"sampled={res.stats.n_rr_sampled} "
+              f"selection={res.stats.selection} time={time.time() - t0:.2f}s")
+        print(f"seeds_per_round={res.seeds_per_round()} "
+              f"estimate={res.spread:.1f}")
+        return
+    seeds, est, stats = solve(g, selection=args.selection,
+                              mesh=make_sample_mesh(args.mesh),
+                              problem=problem)
     print(f"devices={stats['devices']} mesh={stats['pool_sharding']} "
           f"pool_bytes/dev={stats['per_device_pool_bytes']} "
           f"theta={stats['theta']} sampled={stats['sampled']} "
-          f"selection={stats['selection']} time={time.time() - t0:.2f}s")
+          f"selection={stats['selection']} variant={stats['variant']} "
+          f"cost={stats['cost']:.1f} time={time.time() - t0:.2f}s")
     print(f"seeds={sorted(seeds.tolist())} estimate={est:.1f}")
 
 

@@ -290,6 +290,160 @@ def test_spread_estimate_power_control_rejects_weak_seed_set():
     assert abs(p_s - p_w) > SPREAD_SIGMA * se, (p_s, p_w, se)
 
 
+# ------------------- weighted / budgeted variant conformance (ISSUE 5)
+#
+# Weighted IM draws RR roots ∝ node_weights through the engines' shared
+# alias table; Eq. 3 then estimates the *weighted* spread
+# Σ_v w_v·P[v influenced] = W · Pr[S hits a weighted-root RR set].  The
+# tests hold the weighted sampler to the same standards as the plain one:
+# a two-sample 5-sigma concentration check against an independent
+# weighted-root oracle sampler, and an absolute anchor against a
+# weight-aware forward Monte-Carlo spread.  Budgeted selection is checked
+# deterministically against the numpy cost-ratio greedy on the same pool.
+
+def _oracle_hit_fraction_weighted(g_rev, seed_set, count, node_w, *,
+                                  seed=911):
+    """Oracle hit fraction with roots drawn ∝ node_w (numpy choice)."""
+    rng = np.random.default_rng(seed)
+    offs = np.asarray(g_rev.offsets)
+    idx = np.asarray(g_rev.indices)
+    w = np.asarray(g_rev.weights)
+    p = np.asarray(node_w, np.float64)
+    p = p / p.sum()
+    s = set(seed_set)
+    hits = 0
+    for _ in range(count):
+        rr = oracle.rr_set_ic(offs, idx, w, int(rng.choice(len(p), p=p)),
+                              rng)
+        hits += bool(s & set(rr))
+    return hits / count
+
+
+def test_weighted_root_engines_match_weighted_oracle():
+    """Engine hit fractions under weight-proportional root sampling agree
+    with the independent weighted-root oracle (5-sigma two-sample bound)
+    for the queue and dense engines."""
+    g_rev = csr_mod.reverse(_graph())
+    n = g_rev.n_nodes
+    node_w = (np.arange(n) % 5 + 1).astype(np.float32)
+    seed_set = _fixed_seed_set(g_rev)
+    p_o = _oracle_hit_fraction_weighted(g_rev, seed_set, SPREAD_T, node_w)
+    for engine in ("queue", "dense"):
+        p_e = _engine_hit_fraction(engine, g_rev, seed_set, SPREAD_T,
+                                   batch=64, root_weights=node_w)
+        _assert_within_concentration(p_e, SPREAD_T, p_o, SPREAD_T,
+                                     f"weighted-{engine}")
+
+
+def test_weighted_spread_anchor_vs_weight_aware_forward_mc():
+    """Absolute anchor for the weighted estimator: W · Pr[S hits a
+    weighted-root RR set] agrees with the weight-aware forward Monte-Carlo
+    spread E[Σ_{v∈I(S)} w_v] (per-simulation spread lies in [0, W], so the
+    MC standard error is bounded by W / (2 sqrt(sims)))."""
+    g = _graph()
+    g_rev = csr_mod.reverse(g)
+    n = g.n_nodes
+    node_w = (np.arange(n) % 5 + 1).astype(np.float64)
+    W = float(node_w.sum())
+    seed_set = _fixed_seed_set(g_rev)
+    t = 1536
+    p_o = _oracle_hit_fraction_weighted(g_rev, seed_set, t, node_w, seed=913)
+    sims = 3072
+    rng = np.random.default_rng(915)
+    mc = oracle.forward_ic_spread(
+        np.asarray(g.offsets), np.asarray(g.indices),
+        np.asarray(g.weights), seed_set, rng, n_sims=sims,
+        node_weights=node_w)
+    se_ris = W * np.sqrt(max(p_o * (1 - p_o), 1e-12) / t)
+    se_mc = W / (2.0 * np.sqrt(sims))
+    assert abs(W * p_o - mc) <= SPREAD_SIGMA * (se_ris + se_mc), \
+        (W * p_o, mc, se_ris, se_mc)
+
+
+def test_budgeted_selection_matches_numpy_cost_ratio_reference():
+    """Budgeted greedy (cost-ratio lazy greedy in the variant backends) ==
+    the serial numpy reference on the identical RR pool, and never
+    overspends."""
+    from repro.core.imm import IMMSolver
+    from repro.core.problem import IMProblem
+    g = _graph(n=40, m=200, seed=5)
+    rng = np.random.default_rng(7)
+    costs = rng.integers(1, 5, 40).astype(np.float32)
+    budget = 6.0
+    solver = IMMSolver(g, batch=64, seed=11)
+    res = solver.solve(IMProblem(eps=0.5, theta=768, costs=costs,
+                                 budget=budget))
+    snap = solver.store.snapshot()
+    flat = np.asarray(snap.rr_flat)[np.asarray(snap.valid)]
+    ids = np.asarray(snap.rr_ids)[np.asarray(snap.valid)]
+    rr = [flat[ids == i].tolist() for i in range(snap.n_rr)]
+    ref_seeds, ref_frac, ref_spent = oracle.budgeted_greedy_cost_ratio(
+        rr, 40, costs, budget)
+    assert res.seeds.tolist() == ref_seeds
+    assert res.frac == pytest.approx(ref_frac, abs=1e-6)
+    assert res.cost == pytest.approx(ref_spent) and res.cost <= budget
+
+
+# ------------------ 8-fake-device variant parity (subprocess, ISSUE 5)
+
+VARIANT_PARITY_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax
+from jax.sharding import Mesh
+from repro.graph import csr as csr_mod, generators, weights
+from repro.core.imm import IMMSolver
+from repro.core.problem import IMProblem
+
+assert len(jax.devices()) == 8
+mesh8 = Mesh(np.asarray(jax.devices()), ("samples",))
+src, dst = generators.erdos_renyi(60, 300, seed=6)
+g = weights.wc_weights(csr_mod.from_edges(src, dst, 60))
+# integer-valued weights/costs: float32 partial sums are exact, so the
+# psum association difference between mesh sizes cannot flip a bit
+w = (np.arange(60) % 8 + 1).astype(np.float32)
+costs = (np.arange(60) % 4 + 1).astype(np.float32)
+problems = {
+    "weighted": IMProblem(k=4, eps=0.5, max_theta=256, node_weights=w),
+    "budgeted": IMProblem(eps=0.5, max_theta=256, costs=costs, budget=6.0),
+    "candidates": IMProblem(k=4, eps=0.5, max_theta=256,
+                            candidates=np.arange(0, 60, 2)),
+    "mrim": IMProblem(k=2, t_rounds=2, theta=256),
+}
+for name, problem in problems.items():
+    res = {}
+    for mesh in (None, mesh8):
+        solver = IMMSolver(g, engine="queue", batch=64, seed=3, mesh=mesh)
+        solver.prepare(problem)
+        with jax.transfer_guard("disallow"):
+            r = solver.solve(problem)
+        res[r.stats.pool_sharding] = (r.seeds.tolist(),
+                                      np.asarray(r.gains).tolist(),
+                                      round(float(r.spread), 6),
+                                      round(float(r.cost), 6))
+    assert res["samples:1"] == res["samples:8"], (name, res)
+    print("OK", name, res["samples:8"][0])
+print("ALL-OK")
+"""
+
+
+def test_variant_solves_bit_identical_across_mesh_sizes():
+    """Weighted/budgeted/candidate/MRIM solves on a forced 8-way host mesh
+    return seeds/gains/spread/cost bit-identical to the 1-device mesh,
+    under the transfer guard (device count is locked at first jax init, so
+    this runs in a subprocess like the plain-parity suite)."""
+    import os
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run([sys.executable, "-c", VARIANT_PARITY_SCRIPT],
+                       env=env, capture_output=True, text=True,
+                       cwd="/root/repo", timeout=900)
+    assert r.returncode == 0, (r.stdout[-1500:], r.stderr[-3000:])
+    assert "ALL-OK" in r.stdout
+
+
 # ------------------------------- micro-step conformance (deterministic)
 
 def _dense_first_occurrence(nbr, cand):
