@@ -1,0 +1,195 @@
+"""§Perf/Serving: load test for the IM-as-a-service front (DESIGN.md §7).
+
+An asyncio open-loop load generator drives the micro-batched request front
+with a mixed θ-pinned workload — varying ``k``, candidate restrictions, and
+repeated requests (the cache's food) — at ≥2 offered QPS levels, and
+records per-level:
+
+* latency percentiles (p50/p95/p99) and mean, measured submit→response;
+* achieved throughput (served requests / wall time);
+* batch occupancy (mean/max requests per executed micro-batch);
+* cache-hit rate and shed/expired counts.
+
+Before the load levels run, a **parity gate** solves a probe subset of the
+workload on *fresh single-request solvers* (same solver_opts) and asserts
+the served seeds/gains/spread are bit-identical — the θ-in-key contract
+the registry guarantees (ISSUE 6 acceptance criterion).
+
+Writes ``experiments/bench/BENCH_serving.json``.
+
+``--smoke`` (CI's serve-smoke job): small graph, ~50 requests, asserts
+nonzero cache hits and zero shed requests, then exits 0.
+
+CPU-container scaling note (benchmarks/common.py): offered QPS here
+exercises the *front* (admission, batching, cache) — per-request solve cost
+on this single scalar core is milliseconds, so the interesting numbers are
+occupancy and hit-rate, not absolute latency.
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import OUT_DIR, ba_graph
+from repro.core.imm import IMMSolver
+from repro.core.problem import IMProblem
+from repro.serve import ServeConfig, build_service
+
+SOLVER_OPTS = {"batch": 64, "seed": 0}
+
+
+def make_workload(g, requests: int, theta: int, seed: int = 0):
+    """Mixed θ-pinned request stream: varying k, two candidate pools, and a
+    zipf-ish repeat pattern so the cache sees realistic re-asks."""
+    deg = np.diff(np.asarray(g.offsets))
+    top = np.argsort(-deg, kind="stable")
+    distinct = [IMProblem(k=k, theta=theta) for k in (1, 2, 5, 10)]
+    distinct += [IMProblem(k=1, theta=theta, candidates=top[:m])
+                 for m in (g.n_nodes // 4, g.n_nodes // 2)]
+    distinct += [IMProblem(k=3, theta=theta,
+                           candidates=top[:g.n_nodes // 4])]
+    rng = np.random.default_rng(seed)
+    # zipf-like popularity: low indices re-asked often
+    idx = np.minimum(rng.zipf(1.5, size=requests) - 1, len(distinct) - 1)
+    return [distinct[i] for i in idx], distinct
+
+
+def parity_gate(g, probe, served_by_digest):
+    """Assert serving answers == fresh single-request cold solves."""
+    for p in probe:
+        fresh = IMMSolver(g, **SOLVER_OPTS).solve(p)
+        got = served_by_digest[p.signature_digest()]
+        np.testing.assert_array_equal(fresh.seeds, got.seeds)
+        np.testing.assert_array_equal(fresh.gains, got.gains)
+        assert fresh.frac == got.frac
+        assert fresh.spread == got.spread
+    return len(probe)
+
+
+async def run_level(g, workload, qps: float, *, max_batch: int,
+                    deadline_s=None, queue_cap: int = 256):
+    """Open-loop load: submit at the offered rate regardless of completion
+    (closed-loop load generators hide queueing collapse)."""
+    svc = build_service({"g": g}, ServeConfig(
+        max_batch=max_batch, queue_cap=queue_cap, batch_window_s=0.002,
+        default_deadline_s=deadline_s, solver_opts=SOLVER_OPTS))
+    lat, shed, results = [], 0, {}
+
+    async def one(p):
+        nonlocal shed
+        t0 = time.perf_counter()
+        try:
+            resp = await svc.submit("g", p)
+        except Exception:
+            shed += 1
+            return
+        lat.append(time.perf_counter() - t0)
+        results[p.signature_digest()] = resp.result
+
+    interval = 1.0 / qps
+    t_start = time.perf_counter()
+    async with svc:
+        tasks = []
+        for i, p in enumerate(workload):
+            # open loop: sleep to the scheduled submit time, don't await
+            lag = t_start + i * interval - time.perf_counter()
+            if lag > 0:
+                await asyncio.sleep(lag)
+            tasks.append(asyncio.ensure_future(one(p)))
+        await asyncio.gather(*tasks)
+        wall = time.perf_counter() - t_start
+        st = svc.stats()
+    lat_ms = np.asarray(sorted(lat)) * 1e3
+    pct = (lambda q: float(np.percentile(lat_ms, q)) if lat_ms.size else 0.0)
+    return {
+        "offered_qps": qps,
+        "requests": len(workload),
+        "served": st.served,
+        "shed": st.shed,
+        "expired": st.expired,
+        "achieved_qps": st.served / wall if wall > 0 else 0.0,
+        "latency_ms": {"p50": pct(50), "p95": pct(95), "p99": pct(99),
+                       "mean": float(lat_ms.mean()) if lat_ms.size else 0.0},
+        "batches": st.batches,
+        "batch_occupancy_mean": st.batch_occupancy_mean,
+        "batch_occupancy_max": st.batch_occupancy_max,
+        "occur_fastpath": st.occur_fastpath,
+        "cache_hit_rate": st.cache.hit_rate,
+        "cache_hits": st.cache_hits,
+        "registry_solvers": st.registry.solvers,
+        "registry_bytes": st.registry.bytes_in_use,
+    }, results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: small graph, ~50 requests, assert "
+                         "cache hits > 0 and shed == 0")
+    ap.add_argument("--n", type=int, default=None)
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--theta", type=int, default=None)
+    ap.add_argument("--qps", type=float, nargs="+", default=None,
+                    help="offered load levels (default: two levels)")
+    ap.add_argument("--max-batch", type=int, default=8)
+    args = ap.parse_args()
+
+    n = args.n or (300 if args.smoke else 2000)
+    requests = args.requests or (50 if args.smoke else 200)
+    theta = args.theta or (1024 if args.smoke else 4096)
+    qps_levels = args.qps or ([200.0, 1000.0] if args.smoke
+                              else [100.0, 500.0])
+
+    g = ba_graph(n, 4)
+    workload, distinct = make_workload(g, requests, theta)
+
+    levels = []
+    results = {}
+    for qps in qps_levels:
+        level, res = asyncio.run(run_level(
+            g, workload, qps, max_batch=args.max_batch))
+        results.update(res)
+        levels.append(level)
+        print(f"serving qps={qps:g}: "
+              f"p50={level['latency_ms']['p50']:.1f}ms "
+              f"p99={level['latency_ms']['p99']:.1f}ms "
+              f"achieved={level['achieved_qps']:.0f}/s "
+              f"occ={level['batch_occupancy_mean']:.2f} "
+              f"hit={level['cache_hit_rate']:.2f} shed={level['shed']}")
+
+    # bit-identity parity gate: every distinct problem that was actually
+    # served vs a fresh cold solver
+    probe = [p for p in distinct if p.signature_digest() in results]
+    n_checked = parity_gate(g, probe, results)
+    print(f"serving parity: {n_checked}/{len(distinct)} distinct requests "
+          "bit-identical to fresh solvers")
+
+    out = {
+        "config": {"n": n, "r": 4, "theta": theta, "requests": requests,
+                   "max_batch": args.max_batch, "solver_opts": SOLVER_OPTS,
+                   "distinct_problems": len(distinct)},
+        "levels": levels,
+        "parity": {"checked": n_checked, "bit_identical": True},
+    }
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, "BENCH_serving.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {os.path.relpath(path)}")
+
+    if args.smoke:
+        total_hits = sum(l["cache_hits"] for l in levels)
+        total_shed = sum(l["shed"] for l in levels)
+        assert total_hits > 0, "smoke: expected nonzero cache hits"
+        assert total_shed == 0, f"smoke: {total_shed} requests shed"
+        print(f"smoke OK: cache_hits={total_hits} shed=0 "
+              f"parity={n_checked}")
+
+
+if __name__ == "__main__":
+    main()

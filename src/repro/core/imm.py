@@ -20,9 +20,9 @@ declarative :class:`~repro.core.problem.IMProblem` —
 returning a typed :class:`~repro.core.problem.IMResult` (seeds, spread on
 the problem's scale, per-seed marginal gains, stats).  Plain problems take
 exactly the historical code paths — same RNG streams, same selection
-programs — so their seeds/gains/F_R are bit-identical to the old
-``solve(k, eps)`` form, which survives as a deprecation shim for one
-release (it still returns the old ``(seeds, spread, stats)`` tuple).
+programs — so their seeds/gains/F_R are bit-identical to the historical
+``solve(k, eps)`` form (removed after its deprecation window; DESIGN.md §6
+has the migration notes).
 
 Variants thread through every layer: weighted problems draw roots ∝
 ``node_weights`` through the engines' shared alias table
@@ -54,7 +54,6 @@ extension; the selection itself stays exact greedy on the sampled pool.
 from __future__ import annotations
 
 import math
-import warnings
 from dataclasses import dataclass, field
 from typing import Optional, Union
 
@@ -104,6 +103,32 @@ class IMMStats:
     pool_sharding: str = "samples:1"
     per_device_pool_bytes: int = 0
     history: list = field(default_factory=list)
+
+
+@dataclass
+class PoolLease:
+    """Explicit ownership of a prepared solver's sampled state.
+
+    ``IMMSolver.export_pool()`` detaches the RR pool — plus everything that
+    makes it *resumable*: the signature-defining problem, the RNG cursor,
+    and the stat accumulators — and hands it to the caller;
+    ``adopt_pool(lease)`` installs it into a (same-graph, same-options)
+    solver, which then continues bit-identically to the exporter.  The
+    serving registry (``repro.serve``) uses this to own pool memory
+    outside any solver: an evicted lease is *the* reference to the device
+    buffers, so dropping it frees them accountably.
+    """
+    problem: IMProblem                 # pool-signature template
+    store: "cov.ShardedDeviceRRStore"
+    key: jax.Array                     # RNG cursor (sampling resumes here)
+    stats: IMMStats
+    steps_acc: jax.Array
+    ovf_acc: jax.Array
+    ovf_lanes: int
+
+    def pool_bytes(self) -> int:
+        s = self.store
+        return s.n_shards * (s.per_device_pool_bytes() + s.sketch_bytes())
 
 
 # user-facing selection knob -> DeviceRRStore.select method.  "fused" is the
@@ -162,6 +187,7 @@ class IMMSolver:
         self._engine_obj = None
         self._store_obj = None
         self._sig = None
+        self._sig_problem = None
         self._row_weight_mode = False
         self._node_w_dev = None
         if isinstance(engine, str):
@@ -220,7 +246,9 @@ class IMMSolver:
         ``jax.transfer_guard("disallow")`` region."""
         return self._prepare(problem)
 
-    def _prepare(self, problem: IMProblem) -> ResolvedProblem:
+    def _prepare(self, problem: IMProblem,
+                 _store: "cov.ShardedDeviceRRStore | None" = None
+                 ) -> ResolvedProblem:
         r = problem.resolve(self.n)
         # the constructor's model= survives as the default for problems that
         # don't set one (IMProblem.model=None); an explicit model on the
@@ -230,7 +258,6 @@ class IMMSolver:
             raise ValueError("MRIM sampling is IC-only (paper §4.8); the "
                              "solver's default model is 'lt'")
         w = r.node_weights
-        wkey = None if w is None else hash(w.tobytes())
         # the celf path estimates from the incremental coverage sketch, and
         # the θ early-exit gate reads it (an incremental fold is required:
         # its global row numbering keeps the occupancy==count identity on
@@ -239,12 +266,16 @@ class IMMSolver:
         if sketch_k is None and (self._sel_method == "celf"
                                  or problem.early_exit):
             sketch_k = cov.ShardedDeviceRRStore.DEFAULT_SKETCH_K
+        # engine/pool lifecycle is keyed on the problem's canonical pool
+        # signature (content hash of model/t_rounds/node_weights — see
+        # IMProblem.pool_digest): problems differing only in weight *values*
+        # can never alias one pool, unlike the old hash(tobytes) tuple key
         if isinstance(self._engine_arg, str):
             name = ("mrim" if problem.t_rounds is not None
                     else resolve_engine_name(self._engine_arg, model))
-            sig = ("name", name, problem.t_rounds, wkey, model, sketch_k)
+            sig = ("name", name, problem.pool_digest(model=model), sketch_k)
         else:
-            sig = ("inst", id(self._engine_arg), problem.t_rounds, wkey,
+            sig = ("inst", id(self._engine_arg), problem.pool_digest(),
                    sketch_k)
         if sig == self._sig:
             return r
@@ -287,10 +318,28 @@ class IMMSolver:
         # mesh placement is decided exactly once, here: the pool, the
         # sketch, and every selection backend live on this mesh for the
         # solver's lifetime (mesh=None -> the 1-device mesh special case)
-        self._store_obj = cov.ShardedDeviceRRStore(
-            engine.item_space, sketch_k=sketch_k, mesh=self._mesh,
-            row_weighted=row_weight_mode)
+        if _store is not None:                   # adopt_pool() hand-off
+            want_k = (sketch_mod.resolve_sketch_k(sketch_k)
+                      if sketch_k is not None else None)
+            if (_store.n_nodes != engine.item_space
+                    or _store.row_weighted != row_weight_mode
+                    or _store.sketch_k != want_k):
+                raise ValueError(
+                    "adopted pool does not match the problem signature: "
+                    f"store (n={_store.n_nodes}, row_weighted="
+                    f"{_store.row_weighted}, sketch_k={_store.sketch_k}) "
+                    f"vs engine (n={engine.item_space}, row_weighted="
+                    f"{row_weight_mode}, sketch_k={want_k})")
+            if self._mesh is not None and _store.mesh != self._mesh:
+                raise ValueError("adopted pool lives on a different mesh "
+                                 "than the solver's mesh= argument")
+            self._store_obj = _store
+        else:
+            self._store_obj = cov.ShardedDeviceRRStore(
+                engine.item_space, sketch_k=sketch_k, mesh=self._mesh,
+                row_weighted=row_weight_mode)
         self._sig = sig
+        self._sig_problem = problem
         store = self._store_obj
         self._stats = IMMStats(
             selection=self.selection,
@@ -317,6 +366,52 @@ class IMMSolver:
                 and hasattr(engine, "sample_sharded")):
             self._sample = engine.sample_sharded
         return r
+
+    # -- pool ownership (serving registry lifecycle) -----------------------
+    def pool_bytes(self) -> int:
+        """Total live device bytes of the solver's pool + sketch across all
+        shards (0 when unprepared) — the serving registry's memory-budget
+        accounting unit."""
+        if self._store_obj is None:
+            return 0
+        s = self._store_obj
+        return s.n_shards * (s.per_device_pool_bytes() + s.sketch_bytes())
+
+    def export_pool(self) -> PoolLease:
+        """Transfer ownership of the prepared pool *out* of the solver.
+
+        Returns a :class:`PoolLease` holding the store, the RNG cursor and
+        the stat accumulators; the solver reverts to the unprepared state
+        (its next solve builds a fresh pool).  The lease is the only
+        remaining reference to the device buffers — dropping it frees
+        them; handing it to :meth:`adopt_pool` on a same-graph solver
+        resumes sampling/selection bit-identically to this solver.
+        """
+        if self._sig is None:
+            raise RuntimeError("export_pool() needs a prepared solver — "
+                               "nothing to export")
+        self._materialize_stats()
+        lease = PoolLease(
+            problem=self._sig_problem, store=self._store_obj, key=self.key,
+            stats=self._stats, steps_acc=self._steps_acc,
+            ovf_acc=self._ovf_acc, ovf_lanes=self._ovf_lanes)
+        self._store_obj = None
+        self._engine_obj = None
+        self._sig = None
+        self._sig_problem = None
+        return lease
+
+    def adopt_pool(self, lease: PoolLease) -> None:
+        """Install an exported pool (same graph, matching signature/options)
+        and resume from the lease's RNG cursor and stats."""
+        self._sig = None                       # force the rebuild path
+        self._prepare(lease.problem, _store=lease.store)
+        self.key = lease.key
+        self._stats = lease.stats
+        self._steps_acc = lease.steps_acc
+        self._ovf_acc = lease.ovf_acc
+        self._ovf_lanes = lease.ovf_lanes
+        self._stats_dirty = True
 
     # -- stats -------------------------------------------------------------
     @property
@@ -435,35 +530,21 @@ class IMMSolver:
         return est_ub < threshold
 
     # -- full IMM ----------------------------------------------------------
-    def solve(self, problem=None, eps: Optional[float] = None,
-              ell: float = 1.0, max_theta: Optional[int] = None, *,
-              k: Optional[int] = None):
+    def solve(self, problem: Optional[IMProblem] = None,
+              *_args, **_kw) -> IMResult:
         """Solve an :class:`~repro.core.problem.IMProblem` -> ``IMResult``.
 
-        The historical positional form ``solve(k, eps, ell=, max_theta=)``
-        is deprecated (one release) and keeps returning the old
-        ``(seeds, spread_estimate, stats)`` tuple.
+        The pre-problem positional form ``solve(k, eps)`` was removed after
+        its one-release deprecation window (DESIGN.md §6): construct an
+        ``IMProblem`` and read ``res.seeds / res.spread / res.stats``.
         """
-        if isinstance(problem, IMProblem):
-            if (k is not None or eps is not None or max_theta is not None
-                    or ell != 1.0):
-                raise TypeError(
-                    "solve(problem) takes no extra arguments — set "
-                    "k/eps/ell/max_theta on the IMProblem itself")
-            return self.solve_problem(problem)
-        if k is None:
-            k = problem
-        if k is None or eps is None:
-            raise TypeError("solve() needs an IMProblem (or the deprecated "
-                            "k, eps pair)")
-        warnings.warn(
-            "IMMSolver.solve(k, eps) is deprecated; pass an IMProblem "
-            "(solve(IMProblem(k=..., eps=...))) — see DESIGN.md §6",
-            DeprecationWarning, stacklevel=2)
-        res = self.solve_problem(IMProblem(
-            k=int(k), eps=float(eps), ell=ell, max_theta=max_theta,
-            model=self._default_model()))
-        return res.seeds, res.spread, res.stats
+        if not isinstance(problem, IMProblem) or _args or _kw:
+            raise TypeError(
+                "IMMSolver.solve() takes exactly one IMProblem; the "
+                "deprecated solve(k, eps) form was removed — write "
+                "solve(IMProblem(k=..., eps=..., max_theta=...)) and set "
+                "ell/max_theta on the problem (DESIGN.md §6)")
+        return self.solve_problem(problem)
 
     def solve_problem(self, problem: IMProblem) -> IMResult:
         r = self._prepare(problem)

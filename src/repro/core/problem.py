@@ -33,7 +33,8 @@ normalized numpy arrays.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import hashlib
+from dataclasses import dataclass, fields
 from typing import Any, Optional
 
 import numpy as np
@@ -66,6 +67,37 @@ def candidates_mask(candidates, n: int) -> np.ndarray:
     if not mask.any():
         raise ValueError("candidates must select at least one node")
     return mask
+
+
+def _digest_value(h: "hashlib._Hash", name: str, value) -> None:
+    """Fold one field into a content hash, collision-safely.
+
+    Arrays contribute dtype + shape + raw bytes (two weight vectors with
+    equal python ``hash`` of their id, or equal repr, still hash apart);
+    scalars contribute their repr; every field is framed by its name and a
+    terminator so adjacent fields can never alias.
+    """
+    h.update(name.encode())
+    h.update(b"=")
+    if value is None:
+        h.update(b"None")
+    elif isinstance(value, np.ndarray) or hasattr(value, "__array__") or \
+            isinstance(value, (list, tuple)):
+        a = np.asarray(value)
+        h.update(str(a.dtype).encode())
+        h.update(repr(a.shape).encode())
+        h.update(a.tobytes())
+    else:
+        h.update(repr(value).encode())
+    h.update(b";")
+
+
+# fields whose value changes what the *sampler* produces (and therefore
+# which engine + RR pool a solve needs): the diffusion model picks the
+# engine, t_rounds the tagged item space, node_weights the root
+# distribution.  Everything else (k, eps, candidates, costs, budget, theta,
+# ...) only changes selection / the θ schedule and can share a pool.
+_POOL_FIELDS = ("model", "t_rounds", "node_weights")
 
 
 @dataclass(frozen=True)
@@ -138,6 +170,37 @@ class IMProblem:
         if self.t_rounds is not None:
             knobs.append("mrim")
         return "+".join(knobs) if knobs else "plain"
+
+    # -- canonical signatures ----------------------------------------------
+    def signature_digest(self) -> str:
+        """Frozen content hash of the *whole* problem — every field, arrays
+        by dtype+shape+bytes.  Two problems share a digest iff they are the
+        same problem, so this is the result-cache key (``repro.serve``) and
+        the base of :meth:`pool_digest`.  Stable across processes (sha256,
+        no python ``hash``)."""
+        h = hashlib.sha256(b"IMProblem:")
+        for f in fields(self):
+            _digest_value(h, f.name, getattr(self, f.name))
+        return h.hexdigest()
+
+    def pool_digest(self, model: Optional[str] = None) -> str:
+        """Content hash of the fields that determine the engine + RR pool
+        a solve needs (``_POOL_FIELDS``: diffusion model, ``t_rounds``,
+        ``node_weights``).  Problems with equal pool digests can share a
+        warm solver's sampled pool; ``IMMSolver._prepare`` keys its
+        engine/pool lifecycle on this (replacing the ad-hoc tuple key).
+
+        ``model=`` supplies the solver-resolved model when the problem
+        leaves ``model=None`` (inherit), so an explicit ``model="ic"`` and
+        an inherited ic default share a pool.
+        """
+        h = hashlib.sha256(b"IMPool:")
+        vals = {f: getattr(self, f) for f in _POOL_FIELDS}
+        if vals["model"] is None:
+            vals["model"] = model
+        for f in _POOL_FIELDS:
+            _digest_value(h, f, vals[f])
+        return h.hexdigest()
 
     def resolve(self, n: int) -> "ResolvedProblem":
         """Validate against a concrete graph size and normalize every array

@@ -199,26 +199,97 @@ def solve(g, k: int | None = None, eps: float | None = None, *,
 
 def _node_vector(spec: str, g, *, seed: int, name: str):
     """CLI node-vector spec -> (n,) float array: 'degree' (out-degree + 1),
-    'random' (uniform [1, 2)), or a comma-separated list of n floats."""
+    'random' (uniform [1, 2)), or a comma-separated list of n floats.
+    Validated here, at parse time, so a bad spec is a one-line error
+    instead of a traceback from deep inside the solver."""
     n = g.n_nodes
     if spec == "degree":
         return (np.diff(np.asarray(g.offsets)) + 1.0).astype(np.float32)
     if spec == "random":
         rng = np.random.default_rng(seed)
         return (1.0 + rng.random(n)).astype(np.float32)
-    vals = np.asarray([float(x) for x in spec.split(",")], np.float32)
+    try:
+        vals = np.asarray([float(x) for x in spec.split(",")], np.float32)
+    except ValueError:
+        raise SystemExit(
+            f"--{name}: expected 'degree', 'random', or a comma-separated "
+            f"list of floats, got {spec!r}") from None
     if vals.shape != (n,):
-        raise SystemExit(f"--{name} list must have n={n} entries")
+        raise SystemExit(
+            f"--{name}: list has {vals.shape[0]} entries but the graph has "
+            f"n={n} nodes — the vector must give one value per node")
     return vals
 
 
 def _candidate_ids(spec: str, g):
     """CLI candidate spec -> id array: 'top:N' (highest out-degree) or a
-    comma-separated id list."""
+    comma-separated id list.  Ids are range-checked against the graph at
+    parse time (out-of-range ids used to surface as an opaque traceback
+    from the selection kernels)."""
+    n = g.n_nodes
     if spec.startswith("top:"):
+        try:
+            top = int(spec[4:])
+        except ValueError:
+            raise SystemExit(
+                f"--candidates: 'top:N' needs an integer N, got "
+                f"{spec!r}") from None
+        if not 1 <= top <= n:
+            raise SystemExit(
+                f"--candidates: top:{top} out of range for a graph with "
+                f"n={n} nodes (need 1 <= N <= n)")
         deg = np.diff(np.asarray(g.offsets))
-        return np.argsort(-deg, kind="stable")[:int(spec[4:])]
-    return np.asarray([int(x) for x in spec.split(",")])
+        return np.argsort(-deg, kind="stable")[:top]
+    try:
+        ids = np.asarray([int(x) for x in spec.split(",")])
+    except ValueError:
+        raise SystemExit(
+            f"--candidates: expected 'top:N' or a comma-separated list of "
+            f"node ids, got {spec!r}") from None
+    if ids.size == 0:
+        raise SystemExit("--candidates: candidate set must be non-empty")
+    bad = ids[(ids < 0) | (ids >= n)]
+    if bad.size:
+        raise SystemExit(
+            f"--candidates: ids {sorted(set(bad.tolist()))} out of range "
+            f"for a graph with n={n} nodes (valid ids are 0..{n - 1})")
+    return ids
+
+
+def _serve(args, g):
+    """``--serve``: run a generated mixed workload (varying k/candidates,
+    repeats for cache hits) through the asyncio serving front on this
+    process and print the ServeStats counters (DESIGN.md §7)."""
+    import asyncio
+
+    from repro.serve import ServeConfig, build_service
+
+    theta = args.serve_theta
+    deg = np.diff(np.asarray(g.offsets))
+    top = np.argsort(-deg, kind="stable")
+    base = [IMProblem(k=k, theta=theta) for k in (1, 2, args.k)]
+    base += [IMProblem(k=1, theta=theta, candidates=top[:m])
+             for m in (g.n_nodes // 4, g.n_nodes // 2)]
+    workload = [base[i % len(base)] for i in range(args.serve)]
+
+    async def run():
+        svc = build_service({"graph": g}, ServeConfig(
+            max_batch=8, batch_window_s=0.002,
+            solver_opts={"batch": 64, "seed": 0,
+                         "selection": args.selection}))
+        t0 = time.time()
+        async with svc:
+            await asyncio.gather(
+                *(svc.submit("graph", p) for p in workload))
+        st = svc.stats()
+        print(f"served={st.served} cache_hits={st.cache_hits} "
+              f"batches={st.batches} "
+              f"occupancy_mean={st.batch_occupancy_mean:.2f} "
+              f"occur_fastpath={st.occur_fastpath} shed={st.shed} "
+              f"expired={st.expired} time={time.time() - t0:.2f}s")
+        print(f"registry: solvers={st.registry.solvers} "
+              f"bytes_in_use={st.registry.bytes_in_use}")
+    asyncio.run(run())
 
 
 def main():
@@ -227,6 +298,13 @@ def main():
     ap.add_argument("--r", type=int, default=4)
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--eps", type=float, default=0.4)
+    ap.add_argument("--serve", type=int, default=None, metavar="REQUESTS",
+                    help="serve a generated mixed workload of REQUESTS "
+                         "requests through the micro-batched front instead "
+                         "of one solve (DESIGN.md §7)")
+    ap.add_argument("--serve-theta", type=int, default=4096,
+                    help="fixed θ for --serve requests (θ-pinned requests "
+                         "are bit-identical to cold solves)")
     ap.add_argument("--selection", default="auto",
                     choices=("auto", "fused", "bitset", "celf-sketch"),
                     help="seed-selection backend (DESIGN.md §3)")
@@ -250,6 +328,9 @@ def main():
     args = ap.parse_args()
     src, dst = generators.barabasi_albert(args.n, args.r, seed=0)
     g = weights.wc_weights(csr.from_edges(src, dst, args.n))
+    if args.serve is not None:
+        _serve(args, g)
+        return
     problem = IMProblem(
         k=None if args.budget is not None else args.k,
         eps=args.eps,

@@ -1,0 +1,38 @@
+"""IM-as-a-service: warm-solver registry, micro-batched asyncio request
+front, and result cache over the :class:`~repro.core.problem.IMProblem`
+API.  DESIGN.md §7 documents the architecture and contracts."""
+from repro.serve.batching import execute_batch, occur_fastpath_eligible
+from repro.serve.cache import CacheStats, ResultCache
+from repro.serve.front import (
+    DeadlineExpiredError,
+    IMService,
+    InvalidProblemError,
+    QueueFullError,
+    ServeConfig,
+    ServeError,
+    ServeResponse,
+    ServeStats,
+    UnknownGraphError,
+    build_service,
+)
+from repro.serve.registry import RegistryStats, WarmEntry, WarmSolverRegistry
+
+__all__ = [
+    "CacheStats",
+    "DeadlineExpiredError",
+    "IMService",
+    "InvalidProblemError",
+    "QueueFullError",
+    "RegistryStats",
+    "ResultCache",
+    "ServeConfig",
+    "ServeError",
+    "ServeResponse",
+    "ServeStats",
+    "UnknownGraphError",
+    "WarmEntry",
+    "WarmSolverRegistry",
+    "build_service",
+    "execute_batch",
+    "occur_fastpath_eligible",
+]

@@ -1,0 +1,112 @@
+"""Micro-batch execution: N compatible requests on one warm solver.
+
+A *batch* is a list of problems that share a registry key — same graph,
+same pool signature (model / ``t_rounds`` / ``node_weights``), same θ-mode
+(``WarmSolverRegistry.solver_key``).  Within a batch the requests may
+differ in everything selection-side: ``k``, ``candidates``, ``costs`` +
+``budget``, ``eps``/``ell``/``max_theta`` (the compatibility matrix of
+DESIGN.md §7).  Execution shares the sampled pool across all of them —
+the pool is paid for once — and runs one selection per request.
+
+**Shared-Occur fast path.**  Top-1 requests (``k=1``, fixed θ, no
+budget/rounds/row-weighting — "who is the most influential node [in
+candidate set C]?") need no greedy scan at all: the first greedy pick is
+``argmax`` of the Occur histogram masked to the candidates, its gain *is*
+``Occur[u]``, and ties resolve to the lowest id exactly like
+``jnp.argmax``.  The batch computes the psum-reduced Occur histogram
+**once** (one explicit device fetch) and answers every such request from
+it, mirroring the device scan's arithmetic (single float32 rounding for
+``F_R``) so the results remain bit-identical to a full solve.
+
+Everything here is synchronous — the asyncio front runs it on its worker
+thread; tests drive it directly under ``jax.transfer_guard("disallow")``.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+import jax
+
+from repro.core import coverage as cov
+from repro.core.imm import IMMSolver
+from repro.core.problem import IMProblem, IMResult, ResolvedProblem
+
+
+def occur_fastpath_eligible(solver: IMMSolver, p: IMProblem) -> bool:
+    """True iff the request's selection is exactly "argmax of (masked)
+    Occur": single seed, fixed θ (no LB-loop selections), counting
+    objective (no budget/cost-ratio, no per-round groups, no row-weighted
+    estimator — weight-proportional *root* sampling is fine: its selection
+    is the plain counting program)."""
+    return (p.theta is not None and p.k == 1 and p.t_rounds is None
+            and p.budget is None and not solver._row_weight_mode)
+
+
+def _solve_from_occur(solver: IMMSolver, r: ResolvedProblem,
+                      occur: np.ndarray, n_rr: int) -> Optional[IMResult]:
+    """Answer a top-1 request from the shared Occur histogram, matching the
+    device scan bit-for-bit (argmax ties -> lowest id; gain == Occur[u]
+    because nothing is covered before the first pick; F_R rounds once in
+    float32 like the device division).  Returns None when no candidate is
+    feasible (caller falls back to the full solve)."""
+    p = r.problem
+    mask = r.cand_mask_items
+    if mask is None:
+        u = int(np.argmax(occur))
+    else:
+        # select_variant's pick: -1 on infeasible ids, argmax, ok iff >= 0
+        masked = np.where(mask, occur, np.int32(-1))
+        u = int(np.argmax(masked))
+        if masked[u] < 0:
+            return None
+    gain = int(occur[u])
+    frac = float(np.float32(np.float32(gain)
+                            / np.float32(max(n_rr, 1))))
+    st = solver._stats
+    st.theta = p.theta
+    st.lb = 1.0
+    st.frac_covered = frac
+    st.variant = p.variant
+    st.budget_spent = 0.0
+    return IMResult(seeds=np.array([u], np.int32), spread=r.scale * frac,
+                    gains=np.array([gain], np.int32), frac=frac,
+                    stats=solver.stats, problem=p, n_nodes=solver.n,
+                    cost=0.0)
+
+
+def execute_batch(solver: IMMSolver,
+                  problems: List[IMProblem]) -> List[IMResult]:
+    """Run one micro-batch on a warm solver; returns results aligned with
+    ``problems``.
+
+    All problems must share the solver's pool signature and θ-mode (the
+    caller batches by registry key).  The pool is sampled at most once;
+    eligible top-1 requests share a single Occur pass; everything else
+    goes through the full ``solve_problem`` (which reuses the pool).
+    ``solver.prepare`` runs host-side construction up front, so the whole
+    call after it is legal under an outer
+    ``jax.transfer_guard("disallow")``.
+    """
+    if not problems:
+        return []
+    occur = None          # shared histogram, fetched at most once per batch
+    n_rr = 0
+    results: List[IMResult] = []
+    for p in problems:
+        if occur_fastpath_eligible(solver, p):
+            r = solver.prepare(p)
+            if occur is None:
+                with jax.transfer_guard(solver._guard):
+                    solver.sample_until(p.theta)
+                store = solver.store
+                fns = cov._mesh_select_fns(store.mesh)
+                occur = np.asarray(jax.device_get(fns.occur(
+                    store._flat, store._valid, n=store.n_nodes)))
+                n_rr = store.n_rr
+            res = _solve_from_occur(solver, r, occur, n_rr)
+            if res is not None:
+                results.append(res)
+                continue
+        results.append(solver.solve_problem(p))
+    return results

@@ -1,0 +1,346 @@
+"""Async request front for IM-as-a-service (stdlib asyncio, no new deps).
+
+Request lifecycle (DESIGN.md §7 has the diagram):
+
+    submit(graph, problem)
+      ├─ validate            → UnknownGraphError / InvalidProblemError
+      ├─ result cache probe  → cached ServeResponse (no queue, no solver)
+      ├─ admission           → QueueFullError when the bounded queue is full
+      └─ enqueue ── worker ──┐
+                             ├─ drain ≤ max_batch requests, group by
+                             │  registry key (compatible = same graph +
+                             │  pool signature + θ-mode)
+                             ├─ drop expired requests → DeadlineExpiredError
+                             ├─ execute_batch() per group on the group's
+                             │  warm solver, on the single worker thread
+                             └─ cache fills + respond
+
+Admission control is three knobs: ``queue_cap`` (bounded queue —
+overload sheds *at the door* with a typed error instead of growing
+latency unboundedly), per-request deadlines (expired work is dropped
+*before* it wastes solver time), and the registry's device-memory budget
+(LRU pool eviction).  The solve itself runs on a dedicated
+single-thread executor, so the event loop keeps admitting/shedding while
+a batch computes — and jax only ever sees one caller thread.
+"""
+from __future__ import annotations
+
+import asyncio
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+from repro.core.problem import IMProblem, IMResult
+from repro.serve.batching import execute_batch
+from repro.serve.cache import CacheStats, ResultCache
+from repro.serve.registry import RegistryStats, WarmSolverRegistry
+
+
+# -- typed errors ------------------------------------------------------------
+
+class ServeError(Exception):
+    """Base of the typed request-rejection responses."""
+    code = "error"
+
+
+class UnknownGraphError(ServeError):
+    code = "unknown_graph"
+
+
+class InvalidProblemError(ServeError):
+    code = "invalid_problem"
+
+
+class QueueFullError(ServeError):
+    """Load shed: the bounded admission queue is full."""
+    code = "queue_full"
+
+
+class DeadlineExpiredError(ServeError):
+    """The request's deadline passed before a solver picked it up."""
+    code = "deadline_expired"
+
+
+# -- request/response envelopes ---------------------------------------------
+
+@dataclass
+class ServeConfig:
+    """Admission-control + batching knobs (DESIGN.md §7)."""
+    max_batch: int = 16           # requests drained into one micro-batch
+    queue_cap: int = 64           # bounded admission queue (shed beyond)
+    batch_window_s: float = 0.0   # linger after the first dequeue to let
+    #                               a batch accumulate (0 = drain-only)
+    default_deadline_s: Optional[float] = None   # None = no deadline
+    cache_entries: int = 1024
+    memory_budget_bytes: Optional[int] = None
+    max_solvers: Optional[int] = None
+    solver_opts: dict = field(default_factory=dict)
+
+
+@dataclass
+class ServeResponse:
+    result: IMResult
+    cached: bool                  # served from the result cache
+    batch_size: int               # occupancy of the batch that computed it
+    queued_s: float               # admission -> execution start
+    solve_s: float                # execution wall time of the batch
+
+
+@dataclass
+class _Pending:
+    graph: str
+    problem: IMProblem
+    deadline: Optional[float]     # absolute loop time
+    t_submit: float
+    future: "asyncio.Future[ServeResponse]"
+
+
+@dataclass(frozen=True)
+class ServeStats:
+    """Point-in-time service counters (plus cache/registry snapshots)."""
+    submitted: int
+    served: int
+    cache_hits: int
+    shed: int
+    expired: int
+    failed: int
+    batches: int
+    batch_occupancy_mean: float
+    batch_occupancy_max: int
+    occur_fastpath: int
+    cache: CacheStats
+    registry: RegistryStats
+
+
+def build_service(graphs: dict, config: Optional[ServeConfig] = None
+                  ) -> "IMService":
+    """Construct a registry from ``config`` and wrap it in a service."""
+    config = config or ServeConfig()
+    registry = WarmSolverRegistry(
+        memory_budget_bytes=config.memory_budget_bytes,
+        max_solvers=config.max_solvers,
+        solver_opts=config.solver_opts)
+    for name, g in graphs.items():
+        registry.add_graph(name, g)
+    return IMService(registry, config)
+
+
+class IMService:
+    """The micro-batched request front over a :class:`WarmSolverRegistry`.
+
+    Use as an async context manager (or call ``start()``/``stop()``)::
+
+        registry = WarmSolverRegistry(solver_opts={"batch": 64})
+        registry.add_graph("social", g)
+        async with IMService(registry, ServeConfig(max_batch=8)) as svc:
+            res = await svc.submit("social", IMProblem(k=5, theta=4096))
+    """
+
+    def __init__(self, registry: WarmSolverRegistry,
+                 config: Optional[ServeConfig] = None):
+        self.registry = registry
+        self.config = config or ServeConfig()
+        self.cache = ResultCache(self.config.cache_entries)
+        self._queue: "asyncio.Queue[_Pending] | None" = None
+        self._worker_task: Optional[asyncio.Task] = None
+        self._executor: Optional[ThreadPoolExecutor] = None
+        # counters
+        self.submitted = 0
+        self.served = 0
+        self.cache_hits = 0
+        self.shed = 0
+        self.expired = 0
+        self.failed = 0
+        self.batches = 0
+        self.occupancy_sum = 0
+        self.occupancy_max = 0
+        self.occur_fastpath = 0
+
+    # -- lifecycle ---------------------------------------------------------
+    async def start(self) -> "IMService":
+        if self._worker_task is not None:
+            raise RuntimeError("service already started")
+        self._queue = asyncio.Queue(maxsize=self.config.queue_cap)
+        # one worker thread: batches execute strictly in order and jax is
+        # only ever entered from a single thread
+        self._executor = ThreadPoolExecutor(max_workers=1,
+                                            thread_name_prefix="im-serve")
+        self._worker_task = asyncio.get_running_loop().create_task(
+            self._worker())
+        return self
+
+    async def stop(self) -> None:
+        if self._worker_task is None:
+            return
+        await self.drain()
+        self._worker_task.cancel()
+        try:
+            await self._worker_task
+        except asyncio.CancelledError:
+            pass
+        self._worker_task = None
+        self._executor.shutdown(wait=True)
+        self._executor = None
+
+    async def drain(self) -> None:
+        """Wait until every admitted request has been responded to."""
+        await self._queue.join()
+
+    async def __aenter__(self) -> "IMService":
+        return await self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    # -- submission --------------------------------------------------------
+    async def submit(self, graph: str, problem: IMProblem,
+                     deadline_s: Optional[float] = None) -> ServeResponse:
+        """Admit one request and await its typed response.
+
+        Raises :class:`UnknownGraphError` / :class:`InvalidProblemError`
+        immediately, :class:`QueueFullError` when admission sheds, and
+        :class:`DeadlineExpiredError` when the deadline passes in-queue.
+        """
+        if self._queue is None:
+            raise RuntimeError("service not started")
+        self.submitted += 1
+        if not self.registry.has_graph(graph):
+            self.failed += 1
+            raise UnknownGraphError(f"graph {graph!r} is not registered")
+        if not isinstance(problem, IMProblem):
+            self.failed += 1
+            raise InvalidProblemError(
+                f"expected an IMProblem, got {type(problem).__name__}")
+        try:
+            # validate against the concrete graph up front so malformed
+            # requests never consume queue or solver capacity
+            problem.resolve(self.registry.graph(graph).n_nodes)
+        except ValueError as e:
+            self.failed += 1
+            raise InvalidProblemError(str(e)) from e
+        hit = self.cache.get(self.registry.cache_key(graph, problem))
+        if hit is not None:
+            self.cache_hits += 1
+            self.served += 1
+            return ServeResponse(result=hit, cached=True, batch_size=0,
+                                 queued_s=0.0, solve_s=0.0)
+        loop = asyncio.get_running_loop()
+        if deadline_s is None:
+            deadline_s = self.config.default_deadline_s
+        pending = _Pending(
+            graph=graph, problem=problem,
+            deadline=(None if deadline_s is None
+                      else loop.time() + deadline_s),
+            t_submit=loop.time(), future=loop.create_future())
+        try:
+            self._queue.put_nowait(pending)
+        except asyncio.QueueFull:
+            self.shed += 1
+            raise QueueFullError(
+                f"admission queue full ({self.config.queue_cap} pending)"
+            ) from None
+        return await pending.future
+
+    # -- worker ------------------------------------------------------------
+    async def _worker(self) -> None:
+        loop = asyncio.get_running_loop()
+        while True:
+            batch: List[_Pending] = [await self._queue.get()]
+            if self.config.batch_window_s > 0:
+                # linger so concurrent arrivals can share the batch
+                await asyncio.sleep(self.config.batch_window_s)
+            while len(batch) < self.config.max_batch:
+                try:
+                    batch.append(self._queue.get_nowait())
+                except asyncio.QueueEmpty:
+                    break
+            try:
+                # compatible requests share a warm solver: group by
+                # registry key, preserving arrival order within groups
+                groups: "dict[tuple, List[_Pending]]" = {}
+                for p in batch:
+                    key = self.registry.solver_key(p.graph, p.problem)
+                    groups.setdefault(key, []).append(p)
+                for group in groups.values():
+                    await self._run_group(loop, group)
+            finally:
+                for _ in batch:
+                    self._queue.task_done()
+
+    async def _run_group(self, loop, group: List[_Pending]) -> None:
+        now = loop.time()
+        live: List[_Pending] = []
+        for p in group:
+            if p.deadline is not None and now > p.deadline:
+                self.expired += 1
+                self.failed += 1
+                p.future.set_exception(DeadlineExpiredError(
+                    f"deadline passed {now - p.deadline:.3f}s before "
+                    "execution"))
+            else:
+                live.append(p)
+        if not live:
+            return
+        # second cache probe: an identical request earlier in this very
+        # run of batches may have just filled the entry
+        todo: List[_Pending] = []
+        for p in live:
+            hit = self.cache.get(self.registry.cache_key(p.graph, p.problem))
+            if hit is not None:
+                self.cache_hits += 1
+                self.served += 1
+                p.future.set_result(ServeResponse(
+                    result=hit, cached=True, batch_size=0,
+                    queued_s=now - p.t_submit, solve_s=0.0))
+            else:
+                todo.append(p)
+        if not todo:
+            return
+        entry = self.registry.get(todo[0].graph, todo[0].problem)
+        entry.in_use = True
+        problems = [p.problem for p in todo]
+        t0 = loop.time()
+        try:
+            fast_before = self._fastpath_probe(entry.solver, problems)
+            results = await loop.run_in_executor(
+                self._executor, execute_batch, entry.solver, problems)
+        except Exception as e:                       # pragma: no cover
+            self.failed += len(todo)
+            for p in todo:
+                if not p.future.done():
+                    p.future.set_exception(e)
+            return
+        finally:
+            entry.in_use = False
+        solve_s = loop.time() - t0
+        self.occur_fastpath += fast_before
+        entry.solves += len(todo)
+        self.registry.account(entry)
+        self.batches += 1
+        self.occupancy_sum += len(todo)
+        self.occupancy_max = max(self.occupancy_max, len(todo))
+        for p, res in zip(todo, results):
+            self.cache.put(self.registry.cache_key(p.graph, p.problem), res)
+            self.served += 1
+            p.future.set_result(ServeResponse(
+                result=res, cached=False, batch_size=len(todo),
+                queued_s=t0 - p.t_submit, solve_s=solve_s))
+
+    @staticmethod
+    def _fastpath_probe(solver, problems) -> int:
+        from repro.serve.batching import occur_fastpath_eligible
+        return sum(1 for p in problems
+                   if occur_fastpath_eligible(solver, p))
+
+    # -- stats -------------------------------------------------------------
+    def stats(self) -> ServeStats:
+        return ServeStats(
+            submitted=self.submitted, served=self.served,
+            cache_hits=self.cache_hits, shed=self.shed,
+            expired=self.expired, failed=self.failed, batches=self.batches,
+            batch_occupancy_mean=(self.occupancy_sum / self.batches
+                                  if self.batches else 0.0),
+            batch_occupancy_max=self.occupancy_max,
+            occur_fastpath=self.occur_fastpath,
+            cache=self.cache.snapshot(),
+            registry=self.registry.snapshot())

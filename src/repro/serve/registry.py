@@ -1,0 +1,199 @@
+"""Warm-solver registry: one prepared ``IMMSolver`` + device pool per
+(graph, pool-signature, θ-mode) key, LRU-evicted under a device-memory
+budget.
+
+The expensive part of answering an IM request is the sampled RR pool, and
+PR 5 already made the pool reusable across problems that share a sampling
+signature (``IMProblem.pool_digest``: diffusion model, ``t_rounds``,
+``node_weights``).  The registry turns that reuse into a *service*
+resource: requests borrow a warm entry, solve on its pool, and the
+registry accounts the pool bytes (``IMMSolver.pool_bytes``) against a
+configurable budget, evicting least-recently-used entries when a new
+pool would not fit.
+
+**θ in the key.**  Fixed-θ problems get one warm solver per
+``(graph, pool_digest, theta)``: the pool deterministically reaches
+exactly θ rows (same RNG stream a fresh solver would walk) and stays
+there, so every answer the entry ever returns is bit-identical to
+solving that request alone on a cold solver — the contract the serving
+front's micro-batches rely on.  ε-driven problems (``theta=None``) share
+one growing pool per signature instead; their answers carry pool-reuse
+semantics (selection over a ≥θ pool — statistically at least as good,
+documented in DESIGN.md §7).
+
+**Ownership.**  Eviction is an explicit pool-ownership transfer: the
+registry calls :meth:`~repro.core.imm.IMMSolver.export_pool`, takes the
+:class:`~repro.core.imm.PoolLease`, counts its bytes as freed, and drops
+it — the lease is the only reference to the device buffers, so the
+accelerator memory is released deterministically, not whenever a solver
+object happens to be garbage-collected.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Hashable, Optional
+
+from repro.core.imm import IMMSolver
+from repro.core.problem import IMProblem
+
+# solver constructor options a registry may carry (forwarded verbatim)
+_SOLVER_OPTS = frozenset(("engine", "batch", "qcap", "ec", "model", "seed",
+                          "selection", "sketch_k", "mesh"))
+
+
+@dataclass(frozen=True)
+class RegistryStats:
+    solvers: int
+    created: int
+    evictions: int
+    bytes_in_use: int
+    bytes_freed: int
+    memory_budget_bytes: Optional[int]
+
+
+@dataclass
+class WarmEntry:
+    """A registry slot: the prepared solver plus accounting state."""
+    key: Hashable
+    solver: IMMSolver
+    problem: IMProblem            # signature template the entry serves
+    bytes: int = 0
+    solves: int = 0
+    seq: int = 0                  # LRU clock (monotonic use counter)
+    in_use: bool = False          # pinned while a batch executes on it
+
+
+class WarmSolverRegistry:
+    """Keyed warm solvers over a set of registered graphs.
+
+    ``solver_opts`` configure every solver the registry builds
+    (engine/batch/selection/seed/... — the :class:`IMMSolver` constructor
+    surface); they are part of the service identity, so the bench's
+    fresh-solver parity checks construct their reference solvers from the
+    same dict.  ``memory_budget_bytes`` bounds the summed pool bytes
+    (``None`` = unbounded); ``max_solvers`` bounds the entry count.
+    """
+
+    def __init__(self, *, memory_budget_bytes: Optional[int] = None,
+                 max_solvers: Optional[int] = None,
+                 solver_opts: Optional[dict] = None):
+        if memory_budget_bytes is not None and memory_budget_bytes <= 0:
+            raise ValueError("memory_budget_bytes must be positive")
+        if max_solvers is not None and max_solvers < 1:
+            raise ValueError("max_solvers must be >= 1")
+        unknown = set(solver_opts or ()) - _SOLVER_OPTS
+        if unknown:
+            raise TypeError("unknown solver_opts: "
+                            + ", ".join(sorted(unknown)))
+        self.memory_budget_bytes = memory_budget_bytes
+        self.max_solvers = max_solvers
+        self.solver_opts = dict(solver_opts or {})
+        self._graphs: dict = {}
+        self._entries: "dict[Hashable, WarmEntry]" = {}
+        self._clock = itertools.count(1)
+        self.created = 0
+        self.evictions = 0
+        self.bytes_freed = 0
+
+    # -- graphs ------------------------------------------------------------
+    def add_graph(self, name: str, g) -> None:
+        if name in self._graphs:
+            raise ValueError(f"graph {name!r} already registered")
+        self._graphs[name] = g
+
+    def graph(self, name: str):
+        return self._graphs[name]
+
+    def has_graph(self, name: str) -> bool:
+        return name in self._graphs
+
+    # -- keys --------------------------------------------------------------
+    def _resolved_model(self, problem: IMProblem) -> str:
+        if problem.model is not None:
+            return problem.model
+        return "lt" if self.solver_opts.get("model") == "lt" else "ic"
+
+    def solver_key(self, graph: str, problem: IMProblem) -> tuple:
+        """(graph, pool signature, θ) — requests mapping to the same key
+        may share one warm solver *and* may be micro-batched together."""
+        return (graph, problem.pool_digest(model=self._resolved_model(problem)),
+                problem.theta)
+
+    def cache_key(self, graph: str, problem: IMProblem) -> tuple:
+        """Result-cache key: full problem content + the warm identity the
+        result was computed under (graph + resolved model; the registry's
+        solver_opts are service-constant, so they need no per-key bits)."""
+        return (graph, self._resolved_model(problem),
+                problem.signature_digest())
+
+    # -- entries -----------------------------------------------------------
+    @property
+    def entries(self) -> "dict[Hashable, WarmEntry]":
+        return self._entries
+
+    def bytes_in_use(self) -> int:
+        return sum(e.bytes for e in self._entries.values())
+
+    def get(self, graph: str, problem: IMProblem) -> WarmEntry:
+        """Fetch-or-build the warm entry for (graph, problem); touches LRU
+        and enforces the budgets (never evicting the returned entry)."""
+        if graph not in self._graphs:
+            raise KeyError(f"unknown graph {graph!r}")
+        key = self.solver_key(graph, problem)
+        entry = self._entries.get(key)
+        if entry is None:
+            solver = IMMSolver(self._graphs[graph], **self.solver_opts)
+            entry = WarmEntry(key=key, solver=solver, problem=problem)
+            self._entries[key] = entry
+            self.created += 1
+        entry.seq = next(self._clock)
+        self._enforce(keep=key)
+        return entry
+
+    def account(self, entry: WarmEntry) -> None:
+        """Refresh an entry's pool-byte accounting after a solve (pools
+        grow via capacity doubling) and re-enforce the memory budget."""
+        entry.bytes = entry.solver.pool_bytes()
+        entry.seq = next(self._clock)
+        self._enforce(keep=entry.key)
+
+    def evict(self, key: Hashable) -> int:
+        """Evict one entry; returns the pool bytes freed.  The transfer is
+        explicit: the solver's pool is exported into a lease the registry
+        immediately drops — the last reference to the device buffers."""
+        entry = self._entries.pop(key)
+        freed = 0
+        if entry.solver._sig is not None:
+            lease = entry.solver.export_pool()
+            freed = lease.pool_bytes()
+            del lease
+        self.evictions += 1
+        self.bytes_freed += freed
+        return freed
+
+    def _enforce(self, keep: Hashable) -> None:
+        def lru_victim():
+            cands = [e for e in self._entries.values()
+                     if e.key != keep and not e.in_use]
+            return min(cands, key=lambda e: e.seq) if cands else None
+
+        while (self.max_solvers is not None
+               and len(self._entries) > self.max_solvers):
+            victim = lru_victim()
+            if victim is None:
+                break
+            self.evict(victim.key)
+        while (self.memory_budget_bytes is not None
+               and self.bytes_in_use() > self.memory_budget_bytes):
+            victim = lru_victim()
+            if victim is None:
+                break
+            self.evict(victim.key)
+
+    def snapshot(self) -> RegistryStats:
+        return RegistryStats(
+            solvers=len(self._entries), created=self.created,
+            evictions=self.evictions, bytes_in_use=self.bytes_in_use(),
+            bytes_freed=self.bytes_freed,
+            memory_budget_bytes=self.memory_budget_bytes)

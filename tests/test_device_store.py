@@ -11,6 +11,7 @@ from repro.graph import generators, weights
 from repro.core import coverage as cov, oracle
 from repro.core.engine import make_engine
 from repro.core.imm import IMMSolver
+from repro.core.problem import IMProblem
 
 
 def _wc_graph(n=40, m=200, seed=0):
@@ -164,7 +165,8 @@ def test_solve_runs_under_transfer_guard(engine):
     g = _wc_graph(n=50, m=250, seed=5)
     solver = IMMSolver(g, engine=engine, batch=64, seed=0)
     with jax.transfer_guard("disallow"):
-        seeds, est, stats = solver.solve(3, 0.5, max_theta=256)
+        res = solver.solve(IMProblem(k=3, eps=0.5, max_theta=256))
+    seeds, est, stats = res.seeds, res.spread, res.stats
     assert len(set(seeds.tolist())) == 3
     assert est > 0 and stats.theta > 0
     assert stats.n_rr_sampled >= min(stats.theta, 256)
@@ -175,7 +177,8 @@ def test_solve_quality_unchanged_vs_oracle_greedy():
     final snapshot agree on the same pool."""
     g = _wc_graph(n=60, m=300, seed=6)
     solver = IMMSolver(g, engine="queue", batch=64, seed=3)
-    seeds, est, stats = solver.solve(4, 0.5)
+    res = solver.solve(IMProblem(k=4, eps=0.5))
+    seeds, est = res.seeds, res.spread
     snap = solver.store.snapshot()
     ref = cov.select_seeds(snap, 4)
     assert seeds.tolist() == np.asarray(ref.seeds).tolist()

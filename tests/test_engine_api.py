@@ -11,6 +11,7 @@ from repro.core.engine import (RRBatch, SamplerEngine, get_engine,
                                make_engine, list_engines, register_engine,
                                resolve_engine_name)
 from repro.core.imm import IMMSolver, imm
+from repro.core.problem import IMProblem
 
 CORE_ENGINES = ("queue", "dense", "refill", "lt", "mrim")
 
@@ -205,5 +206,5 @@ def test_solver_accepts_engine_instance():
     eng = make_engine("queue", csr_mod.reverse(g), batch=32)
     solver = IMMSolver(g, engine=eng, seed=0)
     assert solver.engine is eng
-    seeds, est, st = solver.solve(2, 0.5, max_theta=128)
-    assert len(set(seeds.tolist())) == 2 and est > 0
+    res = solver.solve(IMProblem(k=2, eps=0.5, max_theta=128))
+    assert len(set(res.seeds.tolist())) == 2 and res.spread > 0

@@ -2,9 +2,10 @@
 budgeted / candidate-restricted / MRIM influence maximization.
 
 Contracts under test (ISSUE acceptance criteria):
-* plain problems through ``solve(IMProblem(...))`` reproduce the deprecated
-  ``solve(k, eps)`` results bit-identically on all three selection backends;
-* the deprecation shim warns and keeps the old tuple return;
+* plain problems through ``solve(IMProblem(...))`` match ``solve_problem``
+  bit-identically on all three selection backends;
+* the removed ``solve(k, eps)`` shim raises TypeError (never warns, never
+  samples);
 * ``imm()`` raises TypeError on unknown kwargs (the old whitelist filter
   silently swallowed typos);
 * variant solves are deterministic conformant with the numpy references
@@ -15,8 +16,6 @@ Contracts under test (ISSUE acceptance criteria):
 * the sketch-driven θ early exit provably never changes seeds/θ;
 * variant solves run under ``jax.transfer_guard("disallow")``.
 """
-import warnings
-
 import numpy as np
 import jax
 import pytest
@@ -72,42 +71,43 @@ def test_improblem_validation():
         "weighted+budgeted"
 
 
-# ------------------------------------------- plain parity + deprecation
+# --------------------------------------- plain parity + shim removal
 
 @pytest.mark.parametrize("selection", SELECTIONS)
-def test_plain_problem_bit_identical_to_deprecated_solve(selection):
+def test_plain_problem_solve_and_solve_problem_agree(selection):
     g = _wc_graph()
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        s_old, e_old, st_old = IMMSolver(
-            g, batch=64, seed=3, selection=selection).solve(
-            4, 0.5, max_theta=256)
     res = IMMSolver(g, batch=64, seed=3, selection=selection).solve(
         IMProblem(k=4, eps=0.5, max_theta=256))
+    res2 = IMMSolver(g, batch=64, seed=3,
+                     selection=selection).solve_problem(
+        IMProblem(k=4, eps=0.5, max_theta=256))
     assert isinstance(res, IMResult)
-    np.testing.assert_array_equal(s_old, res.seeds)
-    assert e_old == res.spread
-    assert st_old.theta == res.stats.theta
+    np.testing.assert_array_equal(res.seeds, res2.seeds)
+    assert res.spread == res2.spread
+    assert res.stats.theta == res2.stats.theta
     assert res.stats.variant == "plain"
 
 
-def test_deprecated_solve_warns_and_returns_tuple():
+def test_removed_solve_k_eps_form_raises_typeerror():
+    """The solve(k, eps) deprecation shim is gone: the positional/kwarg
+    forms raise a TypeError that points at IMProblem, never warn, and
+    never run a solve."""
     g = _wc_graph()
     solver = IMMSolver(g, batch=64, seed=0)
-    with pytest.warns(DeprecationWarning, match="IMProblem"):
-        out = solver.solve(2, 0.5, max_theta=64)
-    assert isinstance(out, tuple) and len(out) == 3
-    with pytest.warns(DeprecationWarning):
-        out_kw = IMMSolver(g, batch=64, seed=0).solve(k=2, eps=0.5,
-                                                      max_theta=64)
-    np.testing.assert_array_equal(out[0], out_kw[0])
+    with pytest.raises(TypeError, match="IMProblem"):
+        solver.solve(2, 0.5)
+    with pytest.raises(TypeError, match="removed"):
+        solver.solve(2, 0.5, max_theta=64)
+    with pytest.raises(TypeError, match="IMProblem"):
+        solver.solve(k=2, eps=0.5)
+    assert solver._stats.rounds == 0    # the shim path never sampled
 
 
-def test_solve_problem_rejects_extra_args():
+def test_solve_rejects_extra_args():
     g = _wc_graph()
-    with pytest.raises(TypeError, match="on the IMProblem"):
+    with pytest.raises(TypeError, match="IMProblem"):
         IMMSolver(g, batch=64).solve(IMProblem(k=2, eps=0.5), 0.4)
-    with pytest.raises(TypeError, match="on the IMProblem"):
+    with pytest.raises(TypeError, match="IMProblem"):
         IMMSolver(g, batch=64).solve(IMProblem(k=2, eps=0.5), k=5)
 
 

@@ -10,6 +10,7 @@ from repro.graph import generators, weights
 from repro.core import coverage as cov, forward, oracle, sketch as sk
 from repro.core.engine import make_engine
 from repro.core.imm import IMMSolver, imm
+from repro.core.problem import IMProblem
 
 
 def _wc_graph(n=40, m=200, seed=0):
@@ -174,9 +175,9 @@ def test_solver_selection_knob_under_transfer_guard(selection):
     solver = IMMSolver(g, engine="queue", batch=64, seed=0,
                        selection=selection)
     with jax.transfer_guard("disallow"):
-        seeds, est, stats = solver.solve(3, 0.5, max_theta=256)
-    assert len(set(seeds.tolist())) == 3
-    assert est > 0 and stats.selection == selection
+        res = solver.solve(IMProblem(k=3, eps=0.5, max_theta=256))
+    assert len(set(res.seeds.tolist())) == 3
+    assert res.spread > 0 and res.stats.selection == selection
 
 
 def test_solver_selection_paths_agree():

@@ -1,0 +1,331 @@
+"""IM-as-a-service serving layer (DESIGN.md §7).
+
+Contracts under test (ISSUE acceptance criteria):
+* ``signature_digest``/``pool_digest`` are collision-safe content hashes —
+  two problems differing only in node_weights *values* never share a
+  solver pool or a cache entry;
+* pool ownership transfers explicitly: ``export_pool`` empties the solver,
+  ``adopt_pool`` resumes the RNG stream bit-identically;
+* a batched multi-request run (mixed k/candidates, one fixed θ) returns
+  seeds bit-identical to solving each request alone on a fresh solver;
+* micro-batch grouping: requests batch together iff they share the
+  registry key (graph, pool signature, θ) — differing θ or node_weights
+  split;
+* cache hits return the same object bit-identically, recomputes agree;
+* admission control: queue-full sheds with ``QueueFullError``, expired
+  deadlines raise ``DeadlineExpiredError``, both typed;
+* ``execute_batch`` runs under an outer ``jax.transfer_guard("disallow")``;
+* the registry evicts LRU under ``max_solvers`` and the byte budget;
+* the im_solve CLI rejects out-of-range candidates / wrong-length weights
+  with a clear one-line error (parse-time validation, no traceback).
+"""
+import asyncio
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import pytest
+
+from repro.graph import csr as csr_mod
+from repro.graph import generators, weights
+from repro.core.imm import IMMSolver
+from repro.core.problem import IMProblem
+from repro.serve import (DeadlineExpiredError, IMService, InvalidProblemError,
+                         QueueFullError, ResultCache, ServeConfig,
+                         UnknownGraphError, WarmSolverRegistry, build_service,
+                         execute_batch, occur_fastpath_eligible)
+
+OPTS = {"batch": 32, "seed": 7}
+THETA = 1024
+
+
+def _wc_graph(n=60, m=300, seed=0):
+    src, dst = generators.erdos_renyi(n, m, seed=seed)
+    return weights.wc_weights(csr_mod.from_edges(src, dst, n))
+
+
+@pytest.fixture(scope="module")
+def g():
+    return _wc_graph()
+
+
+# ------------------------------------------------- digests (satellite a)
+
+def test_digests_distinguish_node_weight_values(g):
+    """Regression: the old tuple pool key hashed weights by identity-ish
+    metadata; two problems differing only in node_weights *values* must
+    never share a pool signature, a solver pool, or a cache entry."""
+    w1 = np.ones(g.n_nodes, np.float32)
+    w2 = np.ones(g.n_nodes, np.float32)
+    w2[-1] = 2.0
+    p1 = IMProblem(k=2, theta=THETA, node_weights=w1)
+    p2 = IMProblem(k=2, theta=THETA, node_weights=w2)
+    assert p1.pool_digest(model="ic") != p2.pool_digest(model="ic")
+    assert p1.signature_digest() != p2.signature_digest()
+    # same values -> equal digests (content, not object identity)
+    assert p1.pool_digest(model="ic") == \
+        IMProblem(k=5, theta=2 * THETA,
+                  node_weights=w1.copy()).pool_digest(model="ic")
+
+    reg = WarmSolverRegistry(solver_opts=OPTS)
+    reg.add_graph("g", g)
+    assert reg.solver_key("g", p1) != reg.solver_key("g", p2)
+    assert reg.cache_key("g", p1) != reg.cache_key("g", p2)
+    assert reg.get("g", p1) is not reg.get("g", p2)
+
+    # the solver's own prepare key: switching weights drops the pool
+    s = IMMSolver(g, **OPTS)
+    s.prepare(p1)
+    sig1 = s._sig
+    s.prepare(p2)
+    assert s._sig != sig1
+
+
+def test_signature_digest_covers_every_field(g):
+    base = IMProblem(k=2, theta=THETA)
+    variants = [
+        IMProblem(k=3, theta=THETA),
+        IMProblem(k=2, theta=THETA + 1),
+        IMProblem(k=2, theta=THETA, eps=0.3),
+        IMProblem(k=2, theta=THETA, candidates=np.arange(5)),
+        IMProblem(k=2, theta=THETA, model="lt"),
+        IMProblem(k=2, theta=THETA, ell=2.0),
+    ]
+    digests = {p.signature_digest() for p in [base] + variants}
+    assert len(digests) == len(variants) + 1
+
+
+# ------------------------------------- pool ownership transfer (tentpole)
+
+def test_export_adopt_pool_resumes_bit_identically(g):
+    p = IMProblem(k=3, theta=THETA)
+    ref = IMMSolver(g, **OPTS).solve(IMProblem(k=3, theta=2 * THETA))
+
+    s1 = IMMSolver(g, **OPTS)
+    s1.solve(p)                          # pool at θ=1024, RNG mid-stream
+    lease = s1.export_pool()
+    assert lease.pool_bytes() > 0
+    assert s1.pool_bytes() == 0          # exporter no longer owns buffers
+    with pytest.raises(RuntimeError):
+        s1.export_pool()                 # nothing left to export
+
+    s2 = IMMSolver(g, **OPTS)
+    s2.adopt_pool(lease)
+    got = s2.solve(IMProblem(k=3, theta=2 * THETA))   # resume 1024 -> 2048
+    np.testing.assert_array_equal(ref.seeds, got.seeds)
+    assert ref.spread == got.spread
+
+
+# ------------------------------------------- batching (acceptance gate)
+
+def test_batched_requests_bit_identical_to_fresh_solvers(g):
+    cand = np.arange(10, 40)
+    problems = [
+        IMProblem(k=1, theta=THETA),
+        IMProblem(k=5, theta=THETA),
+        IMProblem(k=1, theta=THETA, candidates=cand),
+        IMProblem(k=3, theta=THETA, candidates=cand),
+    ]
+    fresh = [IMMSolver(g, **OPTS).solve(p) for p in problems]
+    warm = IMMSolver(g, **OPTS)
+    assert occur_fastpath_eligible(warm, problems[0])
+    assert occur_fastpath_eligible(warm, problems[2])
+    assert not occur_fastpath_eligible(warm, problems[1])
+    batched = execute_batch(warm, problems)
+    for a, b in zip(fresh, batched):
+        np.testing.assert_array_equal(a.seeds, b.seeds)
+        np.testing.assert_array_equal(a.gains, b.gains)
+        assert a.frac == b.frac and a.spread == b.spread
+        assert a.seeds.dtype == b.seeds.dtype
+        assert a.gains.dtype == b.gains.dtype
+
+
+def test_execute_batch_under_transfer_guard(g):
+    problems = [IMProblem(k=1, theta=THETA), IMProblem(k=2, theta=THETA)]
+    solver = IMMSolver(g, **OPTS)
+    with jax.transfer_guard("disallow"):
+        got = execute_batch(solver, problems)
+    ref = IMMSolver(g, **OPTS).solve(problems[1])
+    np.testing.assert_array_equal(got[1].seeds, ref.seeds)
+
+
+# ------------------------------------------- grouping / splitting rules
+
+def test_solver_key_batches_compatible_splits_incompatible(g):
+    reg = WarmSolverRegistry(solver_opts=OPTS)
+    reg.add_graph("g", g)
+    a = IMProblem(k=1, theta=THETA)
+    assert reg.solver_key("g", a) == \
+        reg.solver_key("g", IMProblem(k=9, theta=THETA))   # k differs: batch
+    assert reg.solver_key("g", a) == reg.solver_key(
+        "g", IMProblem(k=1, theta=THETA, candidates=np.arange(7)))
+    # θ, node_weights, model, t_rounds split the batch
+    assert reg.solver_key("g", a) != \
+        reg.solver_key("g", IMProblem(k=1, theta=2 * THETA))
+    assert reg.solver_key("g", a) != reg.solver_key(
+        "g", IMProblem(k=1, theta=THETA,
+                       node_weights=np.ones(g.n_nodes)))
+    assert reg.solver_key("g", a) != \
+        reg.solver_key("g", IMProblem(k=1, theta=THETA, model="lt"))
+    assert reg.solver_key("g", a) != \
+        reg.solver_key("g", IMProblem(k=1, eps=0.5))       # ε-driven
+
+
+def test_incompatible_thetas_split_into_two_batches(g):
+    async def run():
+        svc = build_service({"g": g}, ServeConfig(
+            max_batch=8, batch_window_s=0.01, solver_opts=OPTS))
+        async with svc:
+            await asyncio.gather(
+                svc.submit("g", IMProblem(k=1, theta=THETA)),
+                svc.submit("g", IMProblem(k=2, theta=THETA)),
+                svc.submit("g", IMProblem(k=1, theta=2 * THETA)))
+        return svc.stats()
+    st = asyncio.run(run())
+    assert st.served == 3 and st.batches == 2
+    assert st.registry.solvers == 2      # one warm solver per θ
+    assert st.batch_occupancy_max == 2
+
+
+# ----------------------------------------------------- cache semantics
+
+def test_cache_hit_bit_identical_to_recompute(g):
+    p = IMProblem(k=4, theta=THETA)
+
+    async def run():
+        svc = build_service({"g": g}, ServeConfig(solver_opts=OPTS))
+        async with svc:
+            r1 = await svc.submit("g", p)
+            r2 = await svc.submit("g", p)            # front-door cache hit
+        # recompute on a fresh service (empty cache)
+        svc2 = build_service({"g": g}, ServeConfig(solver_opts=OPTS))
+        async with svc2:
+            r3 = await svc2.submit("g", p)
+        return r1, r2, r3
+    r1, r2, r3 = asyncio.run(run())
+    assert not r1.cached and r2.cached and not r3.cached
+    assert r2.result is r1.result        # the cache returns the stored object
+    np.testing.assert_array_equal(r1.result.seeds, r3.result.seeds)
+    assert r1.result.spread == r3.result.spread
+
+
+def test_result_cache_lru_eviction_counters():
+    c = ResultCache(max_entries=2)
+    c.put("a", 1), c.put("b", 2)
+    assert c.get("a") == 1               # touch: b becomes LRU
+    c.put("c", 3)                        # evicts b
+    assert c.get("b") is None
+    s = c.snapshot()
+    assert (s.hits, s.misses, s.evictions, s.entries) == (1, 1, 1, 2)
+    assert s.hit_rate == 0.5
+
+
+# ------------------------------------------------- admission control
+
+def test_queue_full_sheds_with_typed_error(g):
+    async def run():
+        svc = build_service({"g": g}, ServeConfig(
+            queue_cap=1, solver_opts=OPTS))
+        # no worker: the queue cannot drain, so admission is deterministic
+        svc._queue = asyncio.Queue(maxsize=1)
+        first = asyncio.ensure_future(
+            svc.submit("g", IMProblem(k=1, theta=THETA)))
+        await asyncio.sleep(0)           # let it enqueue
+        with pytest.raises(QueueFullError):
+            await svc.submit("g", IMProblem(k=2, theta=THETA))
+        assert svc.shed == 1
+        first.cancel()
+    asyncio.run(run())
+
+
+def test_expired_deadline_raises_typed_error(g):
+    async def run():
+        svc = build_service({"g": g}, ServeConfig(solver_opts=OPTS))
+        async with svc:
+            with pytest.raises(DeadlineExpiredError):
+                await svc.submit("g", IMProblem(k=1, theta=THETA),
+                                 deadline_s=-0.001)
+            ok = await svc.submit("g", IMProblem(k=1, theta=THETA),
+                                  deadline_s=30.0)
+        return svc.stats(), ok
+    st, ok = asyncio.run(run())
+    assert st.expired == 1 and st.served == 1
+    assert len(ok.result.seeds) == 1
+
+
+def test_invalid_requests_rejected_before_admission(g):
+    async def run():
+        svc = build_service({"g": g}, ServeConfig(solver_opts=OPTS))
+        async with svc:
+            with pytest.raises(UnknownGraphError):
+                await svc.submit("nope", IMProblem(k=1, theta=THETA))
+            with pytest.raises(InvalidProblemError):
+                await svc.submit("g", IMProblem(
+                    k=1, theta=THETA,
+                    candidates=np.array([g.n_nodes + 5])))
+        return svc.stats()
+    st = asyncio.run(run())
+    assert st.failed == 2 and st.served == 0 and st.batches == 0
+
+
+# ------------------------------------------------- registry eviction
+
+def test_registry_max_solvers_lru_eviction(g):
+    reg = WarmSolverRegistry(max_solvers=2, solver_opts=OPTS)
+    reg.add_graph("g", g)
+    thetas = (THETA, 2 * THETA, 4 * THETA)
+    for t in thetas:
+        e = reg.get("g", IMProblem(k=1, theta=t))
+        e.solver.solve(IMProblem(k=1, theta=t))
+        reg.account(e)
+    st = reg.snapshot()
+    assert st.solvers == 2 and st.evictions == 1
+    assert st.bytes_freed > 0
+    # LRU: θ=1024 (oldest) was the victim
+    keys = {k[2] for k in reg.entries}
+    assert keys == {2 * THETA, 4 * THETA}
+
+
+def test_registry_memory_budget_eviction(g):
+    reg = WarmSolverRegistry(solver_opts=OPTS)
+    reg.add_graph("g", g)
+    e1 = reg.get("g", IMProblem(k=1, theta=THETA))
+    e1.solver.solve(IMProblem(k=1, theta=THETA))
+    reg.account(e1)
+    one_pool = reg.bytes_in_use()
+    assert one_pool == e1.solver.pool_bytes() > 0
+    # the θ=2048 pool is ~2 pools' worth (capacity doubling); budget fits
+    # it alone but not alongside the θ=1024 pool
+    reg.memory_budget_bytes = int(2.5 * one_pool)
+    e2 = reg.get("g", IMProblem(k=1, theta=2 * THETA))
+    e2.solver.solve(IMProblem(k=1, theta=2 * THETA))
+    reg.account(e2)
+    st = reg.snapshot()
+    assert st.evictions == 1 and st.solvers == 1
+    assert st.bytes_in_use <= reg.memory_budget_bytes
+    assert list(reg.entries.values())[0] is e2      # LRU kept the newest
+
+
+# --------------------------------------------- im_solve CLI (satellite f)
+
+def _run_cli(*extra):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.im_solve",
+         "--n", "50", "--k", "2", *extra],
+        env=env, capture_output=True, text=True, cwd=os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__))))
+
+
+def test_cli_rejects_out_of_range_candidates_and_bad_weights():
+    r = _run_cli("--candidates", "5,49,50,120")
+    assert r.returncode != 0
+    assert "Traceback" not in r.stderr
+    assert "out of range" in r.stderr and "n=50" in r.stderr
+    r = _run_cli("--weights", "1,2,3")
+    assert r.returncode != 0
+    assert "Traceback" not in r.stderr
+    assert "3 entries" in r.stderr and "n=50" in r.stderr

@@ -115,8 +115,9 @@ def test_mesh1_solver_defaults_record_sharding():
     from repro.core.imm import IMMSolver
     src, dst = generators.erdos_renyi(30, 120, seed=0)
     g = weights.wc_weights(csr_mod.from_edges(src, dst, 30))
+    from repro.core.problem import IMProblem
     solver = IMMSolver(g, engine="queue", batch=32)
-    _, _, stats = solver.solve(2, 0.5, max_theta=64)
+    stats = solver.solve(IMProblem(k=2, eps=0.5, max_theta=64)).stats
     assert stats.mesh_shape == (1,)
     assert stats.pool_sharding == "samples:1"
     assert stats.per_device_pool_bytes == \
@@ -133,6 +134,7 @@ from jax.sharding import Mesh
 from repro.core import coverage as cov
 from repro.graph import csr as csr_mod, generators, weights
 from repro.core.imm import IMMSolver
+from repro.core.problem import IMProblem
 
 assert len(jax.devices()) == 8
 mesh8 = Mesh(np.asarray(jax.devices()), ("samples",))
@@ -187,8 +189,8 @@ for mesh in (None, mesh8):
     solver = IMMSolver(g, engine="queue", batch=64, seed=3,
                        selection="celf-sketch", mesh=mesh)
     with jax.transfer_guard("disallow"):
-        seeds, est, stats = solver.solve(4, 0.5, max_theta=256)
-    res[stats.pool_sharding] = (seeds.tolist(), round(est, 6))
+        r = solver.solve(IMProblem(k=4, eps=0.5, max_theta=256))
+    res[r.stats.pool_sharding] = (r.seeds.tolist(), round(r.spread, 6))
 assert res["samples:1"] == res["samples:8"], res
 print("OK", res["samples:8"])
 """

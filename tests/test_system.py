@@ -6,6 +6,7 @@ import jax.numpy as jnp
 
 from repro.graph import csr, generators, weights
 from repro.core.imm import IMMSolver
+from repro.core.problem import IMProblem
 from repro.core import forward, oracle
 from repro.models import transformer as T
 from repro.models import attention as A
@@ -16,7 +17,8 @@ def test_im_pipeline_beats_random_seeds():
     src, dst = generators.barabasi_albert(600, 4, seed=0)
     g = weights.wc_weights(csr.from_edges(src, dst, 600))
     solver = IMMSolver(g, engine="queue", batch=256, seed=0)
-    seeds, est, stats = solver.solve(k=8, eps=0.4)
+    res = solver.solve(IMProblem(k=8, eps=0.4))
+    seeds, est = res.seeds, res.spread
     mc = forward.ic_spread(jax.random.key(1), g, seeds.tolist(), n_sims=256)
     rng = np.random.default_rng(0)
     worst = 0.0
@@ -32,24 +34,24 @@ def test_im_pipeline_beats_random_seeds():
 def test_im_solver_is_deterministic():
     src, dst = generators.erdos_renyi(200, 800, seed=1)
     g = weights.wc_weights(csr.from_edges(src, dst, 200))
-    s1, e1, _ = IMMSolver(g, batch=128, seed=7).solve(k=5, eps=0.45)
-    s2, e2, _ = IMMSolver(g, batch=128, seed=7).solve(k=5, eps=0.45)
-    assert s1.tolist() == s2.tolist()
-    assert e1 == e2
+    r1 = IMMSolver(g, batch=128, seed=7).solve(IMProblem(k=5, eps=0.45))
+    r2 = IMMSolver(g, batch=128, seed=7).solve(IMProblem(k=5, eps=0.45))
+    assert r1.seeds.tolist() == r2.seeds.tolist()
+    assert r1.spread == r2.spread
 
 
 def test_ic_lt_models_differ_but_both_valid():
     src, dst = generators.erdos_renyi(150, 900, seed=2)
     g = weights.wc_weights(csr.from_edges(src, dst, 150))
-    s_ic, e_ic, _ = IMMSolver(g, model="ic", batch=128, seed=0).solve(
-        k=5, eps=0.45)
-    s_lt, e_lt, _ = IMMSolver(g, model="lt", batch=128, seed=0).solve(
-        k=5, eps=0.45)
-    assert len(set(s_ic.tolist())) == 5
-    assert len(set(s_lt.tolist())) == 5
-    mc_lt = forward.lt_spread(jax.random.key(3), g, s_lt.tolist(),
+    r_ic = IMMSolver(g, model="ic", batch=128, seed=0).solve(
+        IMProblem(k=5, eps=0.45))
+    r_lt = IMMSolver(g, model="lt", batch=128, seed=0).solve(
+        IMProblem(k=5, eps=0.45))
+    assert len(set(r_ic.seeds.tolist())) == 5
+    assert len(set(r_lt.seeds.tolist())) == 5
+    mc_lt = forward.lt_spread(jax.random.key(3), g, r_lt.seeds.tolist(),
                               n_sims=512)
-    assert abs(e_lt - mc_lt) / mc_lt < 0.3
+    assert abs(r_lt.spread - mc_lt) / mc_lt < 0.3
 
 
 def test_absorbed_mla_decode_matches_standard():
