@@ -20,6 +20,15 @@ Writes ``experiments/bench/BENCH_serving.json``.
 ``--smoke`` (CI's serve-smoke job): small graph, ~50 requests, asserts
 nonzero cache hits and zero shed requests, then exits 0.
 
+``--chaos`` (CI's chaos-smoke job, DESIGN.md §8): reruns the workload with
+a ~10% seeded fault rate injected across every pipeline boundary
+(sample/append/grow/select/executor) and asserts the service's
+fault-tolerance contract: **every** request resolves to a typed outcome
+(served, degraded, or a ``ServeError`` subclass — zero hangs, zero
+untyped exceptions), and every non-degraded answer is bit-identical to a
+fault-free fresh solve (which also proves no quarantined pool ever
+served).  Writes ``experiments/bench/BENCH_chaos.json``.
+
 CPU-container scaling note (benchmarks/common.py): offered QPS here
 exercises the *front* (admission, batching, cache) — per-request solve cost
 on this single scalar core is milliseconds, so the interesting numbers are
@@ -38,7 +47,7 @@ import numpy as np
 from benchmarks.common import OUT_DIR, ba_graph
 from repro.core.imm import IMMSolver
 from repro.core.problem import IMProblem
-from repro.serve import ServeConfig, build_service
+from repro.serve import ServeConfig, ServeError, build_service
 
 SOLVER_OPTS = {"batch": 64, "seed": 0}
 
@@ -126,6 +135,133 @@ async def run_level(g, workload, qps: float, *, max_batch: int,
     }, results
 
 
+async def run_chaos(g, workload, *, max_batch: int, rate: float,
+                    deadline_probes: int, probe_theta: int,
+                    timeout_s: float = 120.0):
+    """Chaos run: seeded Bernoulli faults at every pipeline boundary, every
+    request wrapped in ``wait_for`` so a hang is an *observed outcome*, not
+    a stuck bench.  ``deadline_probes`` extra requests carry a deadline too
+    tight for their big-θ cold solve, exercising the degraded path."""
+    from repro.ft.failures import SITES, FaultInjector, FaultPolicy
+
+    # the executor boundary is crossed once per *batch* (tens of crossings
+    # vs thousands of solver-loop ones), so it gets a higher rate to make
+    # the quarantine + isolation path actually fire in a short smoke run
+    rates = {s: rate for s in SITES}
+    rates["executor"] = min(1.0, 3.0 * rate)
+    injector = FaultInjector(rate=rates, seed=1234)
+    policy = FaultPolicy(injector=injector, backoff_base_s=0.001,
+                         backoff_cap_s=0.01)
+    svc = build_service({"g": g}, ServeConfig(
+        max_batch=max_batch, queue_cap=512, batch_window_s=0.002,
+        solver_opts={**SOLVER_OPTS, "fault_policy": policy, "sketch_k": 64},
+        breaker_threshold=5, breaker_cooldown_s=0.05))
+    outcomes: dict = {"served": 0, "degraded": 0, "hang": 0}
+    results, degraded_bounds_ok = {}, []
+
+    async def one(p, dl=None):
+        try:
+            resp = await asyncio.wait_for(
+                svc.submit("g", p, deadline_s=dl), timeout_s)
+        except asyncio.TimeoutError:
+            outcomes["hang"] += 1
+        except ServeError as e:
+            outcomes[e.code] = outcomes.get(e.code, 0) + 1
+        except Exception as e:        # untyped leak: the gate will fail
+            tag = f"untyped:{type(e).__name__}"
+            outcomes[tag] = outcomes.get(tag, 0) + 1
+        else:
+            if resp.degraded:
+                outcomes["degraded"] += 1
+                lo, hi = resp.result.spread_bounds
+                degraded_bounds_ok.append(lo <= resp.result.spread <= hi)
+            else:
+                outcomes["served"] += 1
+                results[p.signature_digest()] = resp.result
+    t0 = time.perf_counter()
+    async with svc:
+        # tight-deadline probes on a big-θ cold key go in first (before the
+        # queue builds up): sampling outlasts the budget, so these degrade
+        # to certified sketch answers (or expire in-queue — both typed)
+        tasks = [asyncio.ensure_future(
+            one(IMProblem(k=3 + i, theta=probe_theta), dl=0.3))
+            for i in range(deadline_probes)]
+        tasks += [asyncio.ensure_future(one(p)) for p in workload]
+        await asyncio.gather(*tasks)
+        wall = time.perf_counter() - t0
+        st = svc.stats()
+    return outcomes, results, degraded_bounds_ok, st, policy, wall
+
+
+def chaos_main(args):
+    n = args.n or 300
+    requests = args.requests or 120
+    theta = args.theta or 1024
+    g = ba_graph(n, 4)
+    workload, distinct = make_workload(g, requests, theta)
+    outcomes, results, dbounds, st, policy, wall = asyncio.run(run_chaos(
+        g, workload, max_batch=args.max_batch, rate=args.fault_rate,
+        deadline_probes=4, probe_theta=16 * theta))
+    inj = policy.injector
+    total = requests + 4
+    typed = sum(v for k, v in outcomes.items()
+                if not k.startswith("untyped:") and k != "hang")
+    fires_by_site = {}
+    for site, _ in inj.fired_log:
+        fires_by_site[site] = fires_by_site.get(site, 0) + 1
+    print(f"chaos outcomes: {outcomes}")
+    print(f"chaos faults: fires={inj.fires} by_site={fires_by_site} "
+          f"retries={policy.retries} oom_recoveries={policy.oom_recoveries} "
+          f"gave_up={policy.gave_up}")
+    print(f"chaos service: quarantines={st.quarantines} "
+          f"isolated_retries={st.isolated_retries} "
+          f"breaker_trips={st.breaker_trips} wall={wall:.1f}s")
+
+    # gate 1: the run actually injected faults (a quiet run proves nothing)
+    assert inj.fires > 0, "chaos: no faults fired — raise --fault-rate"
+    # gate 2: zero hangs, 100% typed outcomes
+    assert outcomes["hang"] == 0, f"chaos: {outcomes['hang']} hung requests"
+    assert typed == total, f"chaos: {total - typed}/{total} untyped outcomes"
+    # gate 3: degraded answers honour their certified bounds
+    assert all(dbounds), "chaos: degraded estimate escaped spread_bounds"
+    # gate 4: every non-degraded answer bit-identical to a fault-free fresh
+    # solve — this is also the quarantine proof: a partially-appended pool
+    # that served would fork the stream and fail here
+    probe = [p for p in distinct if p.signature_digest() in results]
+    probe += [p for p in (IMProblem(k=3 + i, theta=16 * theta)
+                          for i in range(4))
+              if p.signature_digest() in results]
+    n_checked = parity_gate(g, probe, results)
+    print(f"chaos parity: {n_checked} non-degraded answers bit-identical "
+          "to fault-free solves")
+
+    out = {
+        "config": {"n": n, "r": 4, "theta": theta, "requests": total,
+                   "max_batch": args.max_batch, "fault_rate": args.fault_rate,
+                   "solver_opts": SOLVER_OPTS},
+        "outcomes": outcomes,
+        "faults": {"fires": inj.fires, "fires_by_site": fires_by_site,
+                   "checks_by_site": dict(inj.counts),
+                   "retries": policy.retries,
+                   "oom_recoveries": policy.oom_recoveries,
+                   "gave_up": policy.gave_up},
+        "service": {"quarantines": st.quarantines,
+                    "isolated_retries": st.isolated_retries,
+                    "breaker_trips": st.breaker_trips,
+                    "degraded": st.degraded,
+                    "solver_retries": st.solver_retries},
+        "parity": {"checked": n_checked, "bit_identical": True},
+        "wall_s": wall,
+    }
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, "BENCH_chaos.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {os.path.relpath(path)}")
+    print(f"chaos OK: typed={typed}/{total} hangs=0 fires={inj.fires} "
+          f"parity={n_checked}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -137,7 +273,17 @@ def main():
     ap.add_argument("--qps", type=float, nargs="+", default=None,
                     help="offered load levels (default: two levels)")
     ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--chaos", action="store_true",
+                    help="CI gate: rerun the workload under ~10%% injected "
+                         "faults; assert typed outcomes, zero hangs, and "
+                         "fault-free parity (DESIGN.md §8)")
+    ap.add_argument("--fault-rate", type=float, default=0.1,
+                    help="per-boundary Bernoulli fault rate for --chaos")
     args = ap.parse_args()
+
+    if args.chaos:
+        chaos_main(args)
+        return
 
     n = args.n or (300 if args.smoke else 2000)
     requests = args.requests or (50 if args.smoke else 200)

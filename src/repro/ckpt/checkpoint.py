@@ -27,7 +27,11 @@ def _flatten_with_paths(tree):
     return [(jax.tree_util.keystr(k), v) for k, v in flat], treedef
 
 
-def save(ckpt_dir: str, step: int, state, *, keep: int = 3) -> str:
+def save(ckpt_dir: str, step: int, state, *, keep: int = 3,
+         meta: dict | None = None) -> str:
+    """``meta``: json-serializable dict stored alongside the arrays in the
+    manifest — format/version tags, problem digests, anything the restorer
+    needs before it can build a ``like`` pytree."""
     os.makedirs(ckpt_dir, exist_ok=True)
     flat, _ = _flatten_with_paths(state)
     arrays = {f"a{i}": np.asarray(v) for i, (k, v) in enumerate(flat)}
@@ -36,6 +40,7 @@ def save(ckpt_dir: str, step: int, state, *, keep: int = 3) -> str:
         "keys": [k for k, _ in flat],
         "dtypes": [str(np.asarray(v).dtype) for _, v in flat],
         "shapes": [list(np.asarray(v).shape) for _, v in flat],
+        "meta": meta or {},
     }
     tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
     try:
@@ -76,6 +81,25 @@ def all_steps(ckpt_dir: str) -> list[int]:
 def latest_step(ckpt_dir: str) -> int | None:
     steps = all_steps(ckpt_dir)
     return steps[-1] if steps else None
+
+
+def load_manifest(ckpt_dir: str, step: int) -> dict:
+    """Read a checkpoint's manifest (including ``meta``) without touching
+    the arrays — lets a restorer validate format/digest before rebuilding."""
+    path = os.path.join(ckpt_dir, f"step_{step:012d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)
+
+
+def restore_items(ckpt_dir: str, step: int) -> dict[str, np.ndarray]:
+    """Load a checkpoint as a flat ``{keystr: host array}`` dict, no ``like``
+    pytree needed.  Used by pool restore, where buffer shapes aren't known
+    until the saved manifest has been read."""
+    path = os.path.join(ckpt_dir, f"step_{step:012d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    return {k: data[f"a{i}"] for i, k in enumerate(manifest["keys"])}
 
 
 def restore(ckpt_dir: str, step: int, like, *, shardings=None):

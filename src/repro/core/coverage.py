@@ -39,6 +39,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.compat import shard_map_unchecked, pvary
 from repro.core import sketch as sketch_mod
 from repro.core.packing import rank_positions
+from repro.ft.failures import PoolAllocError
 from repro.kernels.bitset import _popcount
 
 
@@ -512,6 +513,12 @@ class ShardedDeviceRRStore:
             np.zeros((d, self.sketch_rows, self.sketch_k // 32), np.uint32),
             self._sh_b3) if self.sketch_k is not None else None)
         self._sk_cache = None            # on-demand (no incremental sketch)
+        # optional pre-allocation gate, called (store, newcap) before any
+        # growth allocation; may raise PoolAllocError (fault policy / real
+        # memory-budget enforcement).  append_batch stays un-mutated until
+        # every allocation has passed this gate, so a refused growth is
+        # retryable (DESIGN.md §8).
+        self.alloc_check = None
         self._fns = _mesh_store_fns(self.mesh)
 
     # -- sizes -------------------------------------------------------------
@@ -586,6 +593,28 @@ class ShardedDeviceRRStore:
         counts = np.asarray(jax.device_get(
             _shard_counts(lens, d=d, width=w)), np.int64)
         elems_l, rows_l = counts[:, 0], counts[:, 1]
+        # wide batches (device engine padding ≫ payload) go through the
+        # packed append: gather-pack + contiguous writes beat a serial
+        # R·W-update scatter by orders of magnitude on CPU
+        packed = rloc * w > _PACK and int(elems_l.max()) <= _PACK
+        need = int(((self._t_loc + _PACK) if packed
+                    else (self._t_loc + elems_l)).max())
+        # growth runs *before* the sketch fold so an allocation failure
+        # leaves the store completely un-mutated — the whole append is then
+        # safe to retry after the caller frees memory (DESIGN.md §8)
+        if need > self.capacity:
+            try:
+                self._grow_to(need)
+            except PoolAllocError:
+                # halve the growth step: the packed path reserves _PACK
+                # headroom per shard; retry at the exact scatter footprint
+                # before pushing the failure up to the fault policy
+                exact = int((self._t_loc + elems_l).max())
+                if not packed or exact >= need:
+                    raise
+                packed, need = False, exact
+                if need > self.capacity:
+                    self._grow_to(need)
         if self._sk_words is not None:
             # fold the batch into the packed coverage sketch *before* the
             # append advances the row counters: bucketing uses canonical
@@ -596,21 +625,6 @@ class ShardedDeviceRRStore:
             self._sk_words = self._fns.sketch_fold(
                 self._sk_words, nodes_rep, lens_rep, base,
                 k=self.sketch_k, mode=self.sketch_mode)
-        # wide batches (device engine padding ≫ payload) go through the
-        # packed append: gather-pack + contiguous writes beat a serial
-        # R·W-update scatter by orders of magnitude on CPU
-        packed = rloc * w > _PACK and int(elems_l.max()) <= _PACK
-        need = int(((self._t_loc + _PACK) if packed
-                    else (self._t_loc + elems_l)).max())
-        if need > self.capacity:
-            newcap = self.capacity
-            while newcap < need:
-                newcap *= 2
-            self._flat, self._ids, self._valid = self._fns.grow(
-                self._flat, self._ids, self._valid,
-                newcap=newcap, n=self.n_nodes)
-            if self.row_weighted:
-                self._ew = self._fns.grow_ew(self._ew, newcap=newcap)
         nodes_sh = jax.device_put(nodes.reshape(d, rloc, w), self._sh_b3)
         lens_sh = jax.device_put(lens.reshape(d, rloc), self._sh_buf)
         if self.row_weighted:
@@ -638,6 +652,85 @@ class ShardedDeviceRRStore:
         self._cache = None
         self._bitset = None
         self._sk_cache = None
+
+    def _grow_to(self, need: int) -> None:
+        """Double the per-shard capacity until ``need`` fits, gated by
+        ``alloc_check`` (which may raise :class:`PoolAllocError` *before*
+        the donated buffers are re-allocated)."""
+        newcap = self.capacity
+        while newcap < need:
+            newcap *= 2
+        if self.alloc_check is not None:
+            self.alloc_check(self, newcap)
+        self._flat, self._ids, self._valid = self._fns.grow(
+            self._flat, self._ids, self._valid,
+            newcap=newcap, n=self.n_nodes)
+        if self.row_weighted:
+            self._ew = self._fns.grow_ew(self._ew, newcap=newcap)
+
+    # -- checkpoint state --------------------------------------------------
+    def state(self) -> dict:
+        """Every append-relevant buffer as host numpy arrays (one explicit
+        ``device_get``, legal under ``transfer_guard("disallow")``) — the
+        array half of a durable pool checkpoint.  Restoring this dict via
+        :meth:`from_state` reproduces the store bit-identically: flat pool,
+        packed sketch words, device counters and the exact host mirrors."""
+        arrs = {"flat": self._flat, "ids": self._ids, "valid": self._valid,
+                "t_dev": self._t_dev, "nrr_dev": self._nrr_dev}
+        if self.row_weighted:
+            arrs["ew"] = self._ew
+            arrs["w_dev"] = self._w_dev
+        if self._sk_words is not None:
+            arrs["sk_words"] = self._sk_words
+        host = {k: np.asarray(v) for k, v in jax.device_get(arrs).items()}
+        host["t_loc"] = self._t_loc.copy()
+        host["nrr_loc"] = self._nrr_loc.copy()
+        return host
+
+    def config(self) -> dict:
+        """json-serializable construction parameters matching :meth:`state`
+        (stored in the checkpoint manifest's ``meta``)."""
+        return {"n_nodes": int(self.n_nodes),
+                "per_shard_capacity": int(self.capacity),
+                "n_shards": int(self.n_shards),
+                "sketch_k": self.sketch_k,
+                "sketch_mode": self.sketch_mode,
+                "row_weighted": bool(self.row_weighted)}
+
+    @classmethod
+    def from_state(cls, state: dict, config: dict, mesh: Mesh | None = None):
+        """Rebuild a store from :meth:`state` + :meth:`config` onto ``mesh``.
+
+        The mesh must have the same shard count the state was saved with:
+        rows carry *local* ids plus a shard dimension, so re-dealing them
+        across a different D would renumber rows and break bit-identity.
+        (Elastic re-meshing belongs to a compaction pass, not restore.)
+        """
+        store = cls(config["n_nodes"],
+                    capacity=config["per_shard_capacity"] * config["n_shards"],
+                    sketch_k=config["sketch_k"],
+                    sketch_mode=config["sketch_mode"],
+                    mesh=mesh, row_weighted=config["row_weighted"])
+        if store.n_shards != int(config["n_shards"]):
+            raise ValueError(
+                f"pool checkpoint was saved on {config['n_shards']} shard(s) "
+                f"but the restore mesh has {store.n_shards}; restore onto a "
+                "same-size mesh")
+        if store.capacity != int(config["per_shard_capacity"]):
+            raise ValueError("per-shard capacity drifted across restore")
+        store._flat = jax.device_put(state["flat"], store._sh_buf)
+        store._ids = jax.device_put(state["ids"], store._sh_buf)
+        store._valid = jax.device_put(state["valid"], store._sh_buf)
+        store._t_dev = jax.device_put(state["t_dev"], store._sh_vec)
+        store._nrr_dev = jax.device_put(state["nrr_dev"], store._sh_vec)
+        if store.row_weighted:
+            store._ew = jax.device_put(state["ew"], store._sh_buf)
+            store._w_dev = jax.device_put(state["w_dev"], store._sh_vec)
+        if store._sk_words is not None:
+            store._sk_words = jax.device_put(state["sk_words"], store._sh_b3)
+        store._t_loc = np.asarray(state["t_loc"], np.int64).copy()
+        store._nrr_loc = np.asarray(state["nrr_loc"], np.int64).copy()
+        return store
 
     # -- views -------------------------------------------------------------
     def snapshot(self) -> RRStore:

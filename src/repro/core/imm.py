@@ -54,7 +54,8 @@ extension; the selection itself stays exact greedy on the sampled pool.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+import time
+from dataclasses import asdict, dataclass, field
 from typing import Optional, Union
 
 import jax
@@ -62,12 +63,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.graph.csr import CSRGraph, reverse
+from repro.ckpt import checkpoint as ckpt_mod
 from repro.core import coverage as cov
 from repro.core import sketch as sketch_mod
 from repro.core.oracle import imm_theta_params
-from repro.core.problem import IMProblem, IMResult, ResolvedProblem
+from repro.core.problem import (IMProblem, IMResult, ResolvedProblem,
+                                problem_from_state, problem_state)
 from repro.core.engine import (SamplerEngine, make_engine, resolve_engine_name,
                                split_key as _split_key)
+from repro.ft.failures import DeadlineExceeded, FaultPolicy
 
 
 @jax.jit
@@ -102,6 +106,11 @@ class IMMStats:
     mesh_shape: tuple = (1,)
     pool_sharding: str = "samples:1"
     per_device_pool_bytes: int = 0
+    # resume watermark for the Alg. 2 LB loop: index of the last LB
+    # iteration that finished *without* breaking.  A restored solve skips
+    # iterations <= lb_completed instead of re-running them over the (now
+    # larger) pool, which would shift est/break points (DESIGN.md §8).
+    lb_completed: int = 0
     history: list = field(default_factory=list)
 
 
@@ -125,6 +134,11 @@ class PoolLease:
     steps_acc: jax.Array
     ovf_acc: jax.Array
     ovf_lanes: int
+    # signature_digest of an eps-driven solve that was interrupted
+    # mid-flight (None when no solve is in progress): the adopting solver
+    # resumes that solve's LB loop from stats.lb_completed instead of
+    # restarting it
+    active_solve: Optional[str] = None
 
     def pool_bytes(self) -> int:
         s = self.store
@@ -160,12 +174,26 @@ class IMMSolver:
                  batch: Optional[int] = None, qcap: Optional[int] = None,
                  ec: Optional[int] = None, model: Optional[str] = None,
                  selection: str = "auto", sketch_k: Optional[int] = None,
-                 mesh=None, seed: int = 0):
+                 mesh=None, seed: int = 0,
+                 fault_policy: Optional[FaultPolicy] = None,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 0, checkpoint_keep: int = 3):
         self.g = g
         self.n = g.n_nodes
         self._engine_arg = engine
         self._engine_opts = dict(batch=batch, qcap=qcap, ec=ec)
         self._model_arg = model
+        # fault tolerance (DESIGN.md §8): the policy wraps every hot-loop
+        # boundary (sample/append/grow/select) in retry-with-backoff;
+        # checkpoint_dir + checkpoint_every>0 turn on periodic durable pool
+        # saves every N sampling rounds (auto-resume is the caller's
+        # restore_pool call — see launch/im_solve.py)
+        self.fault_policy = fault_policy
+        self._ckpt_dir = checkpoint_dir
+        self._ckpt_every = int(checkpoint_every)
+        self._ckpt_keep = int(checkpoint_keep)
+        self._last_ckpt_round = 0
+        self._active_solve: Optional[str] = None
         if isinstance(engine, str):
             self.g_rev = reverse(g)
         else:
@@ -338,6 +366,15 @@ class IMMSolver:
             self._store_obj = cov.ShardedDeviceRRStore(
                 engine.item_space, sketch_k=sketch_k, mesh=self._mesh,
                 row_weighted=row_weight_mode)
+        if self.fault_policy is not None:
+            # gate pool growth through the policy's "grow" site, so an
+            # injected (or real) allocation failure surfaces *before* any
+            # buffer is re-allocated and the append stays retryable
+            pol = self.fault_policy
+            self._store_obj.alloc_check = (
+                lambda store, newcap: pol.check(
+                    "grow", {"newcap": newcap,
+                             "bytes": newcap * store.n_shards * 9}))
         self._sig = sig
         self._sig_problem = problem
         store = self._store_obj
@@ -394,12 +431,29 @@ class IMMSolver:
         lease = PoolLease(
             problem=self._sig_problem, store=self._store_obj, key=self.key,
             stats=self._stats, steps_acc=self._steps_acc,
-            ovf_acc=self._ovf_acc, ovf_lanes=self._ovf_lanes)
+            ovf_acc=self._ovf_acc, ovf_lanes=self._ovf_lanes,
+            active_solve=self._active_solve)
         self._store_obj = None
         self._engine_obj = None
         self._sig = None
         self._sig_problem = None
+        self._active_solve = None
         return lease
+
+    def drop_pool(self) -> int:
+        """Discard the prepared pool *without* exporting it; returns the
+        bytes dropped.  This is the quarantine path (DESIGN.md §8): after a
+        solve died mid-flight the device buffers may be ahead of the host
+        mirrors (partially-appended pool), so the state must neither serve
+        nor be checkpointed — it is simply dereferenced.  No-op on an
+        unprepared solver."""
+        freed = self.pool_bytes()
+        self._store_obj = None
+        self._engine_obj = None
+        self._sig = None
+        self._sig_problem = None
+        self._active_solve = None
+        return freed
 
     def adopt_pool(self, lease: PoolLease) -> None:
         """Install an exported pool (same graph, matching signature/options)
@@ -411,7 +465,85 @@ class IMMSolver:
         self._steps_acc = lease.steps_acc
         self._ovf_acc = lease.ovf_acc
         self._ovf_lanes = lease.ovf_lanes
+        self._active_solve = lease.active_solve
         self._stats_dirty = True
+
+    # -- durable pool checkpoints (DESIGN.md §8) ---------------------------
+    POOL_CKPT_FORMAT = "im-pool"
+    POOL_CKPT_VERSION = 1
+
+    def save_pool(self, ckpt_dir: str, *, keep: Optional[int] = None) -> str:
+        """Write the prepared pool as a durable checkpoint: sharded store
+        buffers + exact host mirrors, RNG cursor, stat accumulators, and
+        the signature problem — everything a fresh process needs to resume
+        sampling bit-identically via :meth:`restore_pool`.  Atomic (tmpdir
+        + rename, via ``repro.ckpt.checkpoint``), rotated to ``keep``
+        checkpoints; the step number is the sampling round count."""
+        self._ensure_prepared()
+        self._materialize_stats()
+        state = dict(self.store.state())
+        state["rng_key"] = np.asarray(
+            jax.device_get(jax.random.key_data(self.key)))
+        state["steps_acc"] = np.asarray(jax.device_get(self._steps_acc))
+        state["ovf_acc"] = np.asarray(jax.device_get(self._ovf_acc))
+        st = asdict(self._stats)
+        st["mesh_shape"] = list(st["mesh_shape"])
+        st["history"] = [list(h) for h in st["history"]]
+        meta = {
+            "format": self.POOL_CKPT_FORMAT,
+            "version": self.POOL_CKPT_VERSION,
+            "store": self.store.config(),
+            "problem": problem_state(self._sig_problem),
+            "stats": st,
+            "ovf_lanes": int(self._ovf_lanes),
+            "active_solve": self._active_solve,
+        }
+        return ckpt_mod.save(ckpt_dir, self._stats.rounds, state,
+                             keep=self._ckpt_keep if keep is None else keep,
+                             meta=meta)
+
+    def restore_pool(self, ckpt_dir: str, *, step: Optional[int] = None
+                     ) -> int:
+        """Rebuild the pool from a :meth:`save_pool` checkpoint (latest step
+        unless ``step=``) and adopt it: subsequent ``sample_until`` rounds
+        continue from the saved RNG cursor against the saved buffers,
+        bit-identically to the process that wrote the checkpoint.  The
+        solver must be configured with the same options and a same-size
+        mesh; returns the restored step."""
+        if step is None:
+            step = ckpt_mod.latest_step(ckpt_dir)
+            if step is None:
+                raise FileNotFoundError(
+                    f"no pool checkpoint under {ckpt_dir!r}")
+        meta = ckpt_mod.load_manifest(ckpt_dir, step)["meta"]
+        if meta.get("format") != self.POOL_CKPT_FORMAT:
+            raise ValueError(f"{ckpt_dir!r} step {step} is not an im-pool "
+                             f"checkpoint (format={meta.get('format')!r})")
+        if meta.get("version") != self.POOL_CKPT_VERSION:
+            raise ValueError(
+                f"pool checkpoint version {meta.get('version')} not "
+                f"supported (want {self.POOL_CKPT_VERSION})")
+        items = {k.strip("[]'\""): v
+                 for k, v in ckpt_mod.restore_items(ckpt_dir, step).items()}
+        store = cov.ShardedDeviceRRStore.from_state(
+            items, meta["store"], mesh=self._mesh)
+        st = dict(meta["stats"])
+        st["mesh_shape"] = tuple(st["mesh_shape"])
+        st["history"] = [tuple(h) for h in st["history"]]
+        # explicit device_puts: the whole restore is legal under an outer
+        # jax.transfer_guard("disallow")
+        lease = PoolLease(
+            problem=problem_from_state(meta["problem"]), store=store,
+            key=jax.random.wrap_key_data(
+                jax.device_put(np.asarray(items["rng_key"]))),
+            stats=IMMStats(**st),
+            steps_acc=jax.device_put(np.asarray(items["steps_acc"])),
+            ovf_acc=jax.device_put(np.asarray(items["ovf_acc"])),
+            ovf_lanes=int(meta["ovf_lanes"]),
+            active_solve=meta.get("active_solve"))
+        self.adopt_pool(lease)
+        self._last_ckpt_round = self._stats.rounds
+        return int(step)
 
     # -- stats -------------------------------------------------------------
     @property
@@ -434,32 +566,60 @@ class IMMSolver:
 
     # -- sampling ----------------------------------------------------------
     def _round(self):
+        """One sampling round, *transactional* w.r.t. the RNG cursor: the
+        split key is committed only after the batch has landed in the
+        store, so a failed (and policy-retried) round replays the exact
+        same subkey against unchanged buffers — the fault-free and
+        retried streams stay bit-identical (DESIGN.md §8)."""
         self._ensure_prepared()
-        self.key, sub = _split_key(self.key)
-        batch = self._sample(sub)
-        if self._row_weight_mode:
-            if batch.roots is None:
-                raise ValueError(
-                    "weighted problem on an engine that neither supports "
-                    "root_weights nor reports batch roots — cannot form "
-                    "the importance-weighted estimator")
-            self.store.append_batch(
-                batch, row_w=_gather_row_weights(self._node_w_dev,
-                                                 batch.roots))
+        pol = self.fault_policy
+        timer = pol.round_timer if pol is not None else None
+        if timer is not None:
+            timer.start()
+        new_key, sub = _split_key(self.key)
+        batch = (pol.run(lambda: self._sample(sub), "sample")
+                 if pol is not None else self._sample(sub))
+
+        def _append():
+            if self._row_weight_mode:
+                if batch.roots is None:
+                    raise ValueError(
+                        "weighted problem on an engine that neither supports "
+                        "root_weights nor reports batch roots — cannot form "
+                        "the importance-weighted estimator")
+                self.store.append_batch(
+                    batch, row_w=_gather_row_weights(self._node_w_dev,
+                                                     batch.roots))
+            else:
+                self.store.append_batch(batch)
+
+        if pol is not None:
+            pol.run(_append, "append")
         else:
-            self.store.append_batch(batch)
+            _append()
+        self.key = new_key       # commit the cursor: the round is durable
         self._steps_acc, self._ovf_acc = _accum_round_stats(
             self._steps_acc, self._ovf_acc, batch.steps, batch.overflowed)
         self._ovf_lanes += int(np.prod(batch.overflowed.shape))
         self._stats.rounds += 1
         self._stats_dirty = True
+        if timer is not None:
+            dt = timer.stop()
+            if timer.is_straggler(dt):
+                pol.straggler_rounds += 1
 
     def sample_until(self, theta: int):
         # the loop condition reads the store's exact host-mirrored row count
         # (explicit scalar fetch per append — gIM's Alg. 6 N_RR readback);
-        # no pool data crosses to the host
+        # no pool data crosses to the host.  A restored solver re-enters
+        # here with n_rr already at the saved watermark and simply tops up.
         while self.store.n_rr < theta:
             self._round()
+            if (self._ckpt_dir and self._ckpt_every > 0
+                    and self._stats.rounds - self._last_ckpt_round
+                    >= self._ckpt_every):
+                self.save_pool(self._ckpt_dir)
+                self._last_ckpt_round = self._stats.rounds
         self._materialize_stats()
 
     def _store(self) -> cov.RRStore:
@@ -529,6 +689,82 @@ class IMMSolver:
         est_ub = r.scale * min(float(n_rr), top) / max(n_rr, 1)
         return est_ub < threshold
 
+    def _degraded_result(self, r: ResolvedProblem) -> IMResult:
+        """Deadline-clipped answer from the pool sampled so far (DESIGN.md
+        §8): greedy over the packed coverage sketch (certified Δ-occupancy
+        lower bounds per pick) with an exact-Occur union upper bound, never
+        a silently wrong exact answer.  Only counting objectives qualify —
+        weighted/budgeted/MRIM objectives have no certified sketch
+        estimate, so they raise :class:`DeadlineExceeded` instead."""
+        p = r.problem
+        st = self.store
+        if (p.budget is not None or r.node_weights is not None
+                or self._row_weight_mode or p.t_rounds is not None):
+            raise DeadlineExceeded(
+                f"deadline expired mid-solve and the {p.variant!r} "
+                "objective has no certified sketch estimate")
+        n_rr = st.n_rr
+        if n_rr == 0:
+            raise DeadlineExceeded("deadline expired before any sampling "
+                                   "round completed")
+        fns = cov._mesh_select_fns(st.mesh)
+        # exact per-item row counts: the union upper bound + the
+        # sketch-free fallback ranking (one mesh reduction, explicit fetch)
+        occ_exact = np.asarray(jax.device_get(fns.occur(
+            st._flat, st._valid, n=st.n_nodes)), np.int64)[:r.n_items]
+        mask = (np.ones(r.n_items, bool) if r.cand_mask_items is None
+                else r.cand_mask_items.copy())
+        seeds, lb_gains = [], []
+        if st.sketch_k is not None:
+            # sketch greedy: k sweeps, each pick scored by its certified
+            # Δocc (distinct sketch buckets newly covered ≤ distinct rows
+            # newly covered), the pick folded into the union sketch
+            stripe = st.sketch_rows // st.n_shards
+            sk = st.sketch_words_mesh()
+            cov_sk = jax.device_put(
+                np.zeros((st.n_shards, st.sketch_k // 32), np.uint32),
+                st._sh_buf)
+            for _ in range(r.k_steps):
+                docc = np.asarray(jax.device_get(
+                    fns.sweep(sk, cov_sk, stripe=stripe)))[:r.n_items]
+                docc = np.where(mask, docc, -1)
+                u = int(docc.argmax())
+                if docc[u] < 0:
+                    break
+                seeds.append(u)
+                lb_gains.append(int(docc[u]))
+                mask[u] = False
+                cov_sk = fns.union(
+                    cov_sk, sk, jax.device_put(np.int32(u), st._sh_rep))
+            covered_lb = float(sum(lb_gains))
+        else:
+            # no sketch on this pool: rank by exact per-item counts
+            # (overlap-blind).  Any single seed covers occ_exact[seed]
+            # rows, so the best pick alone is a certified lower bound.
+            order = np.argsort(np.where(mask, occ_exact, -1))[::-1]
+            seeds = [int(u) for u in order[:r.k_steps] if mask[u]]
+            lb_gains = [int(occ_exact[u]) for u in seeds]
+            covered_lb = float(max(lb_gains, default=0))
+        covered_ub = float(min(n_rr, sum(int(occ_exact[u]) for u in seeds)))
+        # point estimate: linear counting on the union occupancy, clamped
+        # into the certified bracket
+        if st.sketch_k is not None and seeds:
+            est = float(sketch_mod.linear_count(
+                np.asarray([int(sum(lb_gains))]), st.sketch_k)[0])
+        else:
+            est = covered_lb
+        est = min(max(est, covered_lb), covered_ub)
+        frac = est / n_rr
+        self._materialize_stats()
+        self._stats.frac_covered = frac
+        self._stats.variant = p.variant
+        lo, hi = (r.scale * covered_lb / n_rr, r.scale * covered_ub / n_rr)
+        return IMResult(
+            seeds=np.asarray(seeds, np.int64), spread=r.scale * frac,
+            gains=np.asarray(lb_gains, np.int64), frac=frac,
+            stats=self.stats, problem=p, n_nodes=self.n,
+            degraded=True, spread_bounds=(lo, hi))
+
     # -- full IMM ----------------------------------------------------------
     def solve(self, problem: Optional[IMProblem] = None,
               *_args, **_kw) -> IMResult:
@@ -546,30 +782,70 @@ class IMMSolver:
                 "ell/max_theta on the problem (DESIGN.md §6)")
         return self.solve_problem(problem)
 
-    def solve_problem(self, problem: IMProblem) -> IMResult:
+    def solve_problem(self, problem: IMProblem, *,
+                      deadline_s: Optional[float] = None) -> IMResult:
+        """``deadline_s`` (seconds of remaining budget, serving-side) turns
+        on the in-solve deadline check between LB iterations: once it
+        expires the solve returns a ``degraded=True`` sketch-bound answer
+        over the pool sampled so far instead of blowing the deadline —
+        or raises :class:`~repro.ft.failures.DeadlineExceeded` when the
+        objective has no certified sketch estimate (DESIGN.md §8)."""
         r = self._prepare(problem)
         spec = self._selection_spec(r)
         scale = r.scale
         p = problem
         k_theta = p.k if p.k is not None else r.k_steps
+        deadline = (time.monotonic() + deadline_s
+                    if deadline_s is not None else None)
+        # resume: a restored pool carrying this very solve's digest picks
+        # the LB loop back up at stats.lb_completed + 1 — re-running
+        # completed iterations over the larger restored pool would shift
+        # their est/break points and fork from the uninterrupted stream
+        sig = p.signature_digest()
+        resume = (self._active_solve == sig)
+        self._active_solve = sig
+
+        def _expired() -> bool:
+            return deadline is not None and time.monotonic() >= deadline
 
         def _select():
-            return self.store.select(r.k_steps, method=self._sel_method,
-                                     spec=spec)
+            fn = (lambda: self.store.select(r.k_steps,
+                                            method=self._sel_method,
+                                            spec=spec))
+            if self.fault_policy is not None:
+                # ctx identifies the request so a match-gated injector can
+                # poison one problem in a batch (serving isolation tests)
+                return self.fault_policy.run(fn, "select",
+                                             {"problem": p, "k": r.k_steps})
+            return fn()
 
         with jax.transfer_guard(self._guard):
             if p.theta is not None:
                 # fixed-θ mode (benchmarks, MRIM's Table-3 experiment):
-                # sample to θ, one selection, no LB loop
+                # sample to θ, one selection, no LB loop.  Re-entry after a
+                # restore needs no resume bookkeeping: sample_until tops up
+                # from the watermark and selection is pool-deterministic.
                 self._stats.theta = p.theta
                 self._stats.lb = 1.0
                 self.sample_until(p.theta)
+                if _expired():
+                    return self._degraded_result(r)
+                res = _select()
+            elif resume and self._stats.theta:
+                # the LB loop had already concluded when the checkpoint was
+                # written; only the final θ top-up remains
+                self.sample_until(self._stats.theta)
                 res = _select()
             else:
                 lam_p, lam_star, eps_p, _ = imm_theta_params(
                     self.n, k_theta, p.eps, p.ell)
-                lb = 1.0
-                for i in range(1, max(int(math.log2(self.n)), 2)):  # Alg. 2
+                lb = self._stats.lb if resume else 1.0
+                start_i = (self._stats.lb_completed + 1) if resume else 1
+                res = None
+                for i in range(start_i,
+                               max(int(math.log2(self.n)), 2)):  # Alg. 2
+                    if _expired():
+                        return self._degraded_result(r)
                     x = scale / (2.0 ** i)
                     theta_i = int(math.ceil(lam_p / x))
                     if p.max_theta:
@@ -580,6 +856,7 @@ class IMMSolver:
                         self._stats.early_exit_skips += 1
                         self._stats.history.append(
                             ("lb_skip", i, theta_i))
+                        self._stats.lb_completed = i
                         continue
                     res = _select()
                     # explicit scalar fetch: Alg. 2 L7 break is host control
@@ -589,13 +866,18 @@ class IMMSolver:
                     if est >= threshold:                         # Alg. 2 L7
                         lb = est / (1.0 + eps_p)                 # Alg. 2 L8
                         break
+                    self._stats.lb_completed = i
+                    self._stats.lb = lb
                 theta = int(math.ceil(lam_star / lb))
                 if p.max_theta:
                     theta = min(theta, p.max_theta)
                 self._stats.theta = theta
                 self._stats.lb = lb
+                if _expired():
+                    return self._degraded_result(r)
                 self.sample_until(theta)
                 res = _select()
+        self._active_solve = None
         # final result materialization — the loop's only bulk transfer
         spent_dev = getattr(res, "spent", None)
         fetched = jax.device_get(
@@ -617,7 +899,9 @@ class IMMSolver:
 
 
 _SOLVER_KEYS = frozenset(("engine", "batch", "qcap", "ec", "model", "seed",
-                          "selection", "sketch_k", "mesh"))
+                          "selection", "sketch_k", "mesh", "fault_policy",
+                          "checkpoint_dir", "checkpoint_every",
+                          "checkpoint_keep"))
 _PROBLEM_KEYS = frozenset(("model", "ell", "max_theta", "node_weights",
                            "costs", "budget", "candidates", "t_rounds",
                            "theta", "early_exit"))

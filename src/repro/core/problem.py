@@ -286,6 +286,14 @@ class IMResult:
     problem: IMProblem
     n_nodes: int
     cost: float = 0.0
+    # deadline-clipped sketch answer (DESIGN.md §8): seeds picked by
+    # certified sketch lower bounds, spread_bounds = (lo, hi) bracketing the
+    # true Eq. 3 spread (lo certified from sketch occupancy gains, hi a
+    # union bound from the exact Occur histogram).  Exact results keep
+    # degraded=False / spread_bounds=None — a degraded answer is labelled,
+    # never silently substituted.
+    degraded: bool = False
+    spread_bounds: Optional[tuple] = None
 
     def seeds_per_round(self) -> list:
         """MRIM decode: T sorted per-round seed lists (plain problems: one
@@ -294,3 +302,31 @@ class IMResult:
         n = self.n_nodes
         s = np.asarray(self.seeds)
         return [sorted((s[s // n == r] % n).tolist()) for r in range(t)]
+
+
+# -- checkpoint (de)serialization -------------------------------------------
+def problem_state(p: IMProblem) -> dict:
+    """json-serializable encoding of an :class:`IMProblem` for pool
+    checkpoints.  Arrays round-trip through dtype-tagged nested lists;
+    :func:`problem_from_state` rebuilds a problem with an identical
+    ``signature_digest``."""
+    out = {}
+    for f in fields(p):
+        v = getattr(p, f.name)
+        if v is None or isinstance(v, (bool, int, float, str)):
+            out[f.name] = v
+        else:
+            a = np.asarray(v)
+            out[f.name] = {"__array__": True, "dtype": str(a.dtype),
+                           "data": a.tolist()}
+    return out
+
+
+def problem_from_state(state: dict) -> IMProblem:
+    kw = {}
+    for name, v in state.items():
+        if isinstance(v, dict) and v.get("__array__"):
+            kw[name] = np.asarray(v["data"], dtype=np.dtype(v["dtype"]))
+        else:
+            kw[name] = v
+    return IMProblem(**kw)

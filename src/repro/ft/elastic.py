@@ -2,8 +2,11 @@
 
 Checkpoints are host-unsharded (ckpt/checkpoint.py), so elasticity is:
 (1) detect the new device set, (2) build the largest valid mesh, (3) restore
-with the new shardings.  The IM pipeline is trivially elastic (stateless
-sampling + a global counter); training state re-shards through restore().
+with the new shardings.  Generic state re-shards through ``restore()``;
+the one exception is a *pool* checkpoint (``IMMSolver.save_pool``), whose
+rows carry shard-local ids — it restores bit-identically only onto a mesh
+of the same shard count, which :func:`pool_restore_mesh` builds from
+whatever devices the restarted process has.
 """
 from __future__ import annotations
 
@@ -32,3 +35,21 @@ def rebalance_rounds(total_sets: int, weights: np.ndarray) -> list[int]:
     alloc = np.floor(total_sets * weights).astype(int)
     alloc[np.argmax(weights)] += total_sets - alloc.sum()
     return alloc.tolist()
+
+
+def pool_restore_mesh(n_shards: int, *, axis_name: str = "samples",
+                      devices=None):
+    """1-axis mesh with exactly ``n_shards`` devices for restoring a pool
+    checkpoint (rows carry shard-local ids, so the restore mesh must match
+    the save-time shard count — ``ShardedDeviceRRStore.from_state``
+    enforces it).  A restarted process with *more* devices restores onto
+    the first ``n_shards``; with fewer it cannot restore bit-identically
+    and this raises, pointing at a resample instead."""
+    devices = list(devices if devices is not None else jax.devices())
+    if len(devices) < n_shards:
+        raise ValueError(
+            f"pool checkpoint needs {n_shards} device(s) to restore "
+            f"bit-identically but only {len(devices)} are visible; "
+            "resample instead of restoring")
+    return jax.sharding.Mesh(
+        np.asarray(devices[:n_shards]), (axis_name,))

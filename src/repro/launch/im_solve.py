@@ -158,7 +158,8 @@ class ShardedQueueEngine:
 
 def solve(g, k: int | None = None, eps: float | None = None, *,
           batch_per_dev: int = 128, seed: int = 0, selection: str = "auto",
-          mesh=None, problem: IMProblem | None = None):
+          mesh=None, problem: IMProblem | None = None, fault_policy=None,
+          checkpoint_dir: str | None = None, checkpoint_every: int = 0):
     """Distributed IM solve: sampler fan-out AND pool/selection sharing one
     mesh.  ``mesh=None`` builds a mesh over every local device; the engine
     samples on it, the solver's pool is sharded over it (``samples`` axis),
@@ -169,6 +170,13 @@ def solve(g, k: int | None = None, eps: float | None = None, *,
     through the same mesh (weighted problems hand the engine their alias
     table; MRIM needs the tagged engine and is served by ``imm()`` /
     ``IMMSolver`` directly, not the sharded queue fan-out).
+
+    ``checkpoint_dir`` makes the solve durable (DESIGN.md §8): the pool is
+    checkpointed every ``checkpoint_every`` sampling rounds, and a
+    pre-existing checkpoint in the directory is restored before solving —
+    the solve resumes from the saved round watermark and stays bit-identical
+    to an uninterrupted run.  ``fault_policy`` wraps the hot loop in
+    retry-with-backoff (and powers ``--inject-fault`` drills).
     """
     mesh = mesh if mesh is not None else make_sample_mesh(None)
     if problem is None:
@@ -184,7 +192,14 @@ def solve(g, k: int | None = None, eps: float | None = None, *,
         g_rev, ShardedQueueEngine.Config(batch=batch_per_dev), mesh=mesh,
         root_weights=problem.node_weights)
     solver = IMMSolver(g, engine=engine, seed=seed, selection=selection,
-                       mesh=mesh)
+                       mesh=mesh, fault_policy=fault_policy,
+                       checkpoint_dir=checkpoint_dir,
+                       checkpoint_every=checkpoint_every)
+    resumed_step = None
+    if checkpoint_dir is not None:
+        from repro.ckpt import checkpoint as ckpt_mod
+        if ckpt_mod.latest_step(checkpoint_dir) is not None:
+            resumed_step = solver.restore_pool(checkpoint_dir)
     res = solver.solve_problem(problem)
     stats = res.stats
     return res.seeds, res.spread, dict(
@@ -194,7 +209,8 @@ def solve(g, k: int | None = None, eps: float | None = None, *,
         devices=engine.mesh.devices.size,
         mesh_shape=stats.mesh_shape,
         pool_sharding=stats.pool_sharding,
-        per_device_pool_bytes=stats.per_device_pool_bytes)
+        per_device_pool_bytes=stats.per_device_pool_bytes,
+        resumed_step=resumed_step)
 
 
 def _node_vector(spec: str, g, *, seed: int, name: str):
@@ -254,6 +270,32 @@ def _candidate_ids(spec: str, g):
             f"--candidates: ids {sorted(set(bad.tolist()))} out of range "
             f"for a graph with n={n} nodes (valid ids are 0..{n - 1})")
     return ids
+
+
+def _fault_policy(spec: str):
+    """CLI fault-drill spec ``SITE[:N]`` -> FaultPolicy injecting one
+    failure at the N-th crossing (default 1) of the named boundary.
+    Site names are validated at parse time against ``ft.failures.SITES``
+    so a typo is a one-line error, not a deep-solver traceback."""
+    from repro.ft.failures import SITES, FaultInjector, FaultPolicy
+    site, _, occ = spec.partition(":")
+    if site not in SITES:
+        raise SystemExit(
+            f"--inject-fault: unknown site {site!r}; valid sites: "
+            + ", ".join(SITES))
+    if occ:
+        try:
+            n = int(occ)
+        except ValueError:
+            raise SystemExit(
+                f"--inject-fault: occurrence must be an integer, got "
+                f"{occ!r} (format: SITE or SITE:N)") from None
+        if n < 1:
+            raise SystemExit(
+                f"--inject-fault: occurrence must be >= 1, got {n}")
+    else:
+        n = 1
+    return FaultPolicy(injector=FaultInjector(fail_at={site: {n}}))
 
 
 def _serve(args, g):
@@ -325,7 +367,25 @@ def main():
     ap.add_argument("--t-rounds", type=int, default=None,
                     help="MRIM round count (solved on the tagged mrim "
                          "engine, single-device pool)")
+    ap.add_argument("--checkpoint-dir", default=None, metavar="DIR",
+                    help="durable solve: checkpoint the pool into DIR every "
+                         "--checkpoint-every rounds and auto-resume from an "
+                         "existing checkpoint (DESIGN.md §8)")
+    ap.add_argument("--checkpoint-every", type=int, default=8,
+                    metavar="ROUNDS",
+                    help="sampling rounds between pool checkpoints "
+                         "(with --checkpoint-dir; default 8)")
+    ap.add_argument("--inject-fault", default=None, metavar="SITE[:N]",
+                    help="fault drill: inject one transient failure at the "
+                         "N-th crossing of SITE (sample/append/grow/select/"
+                         "executor; default N=1) and recover via the retry "
+                         "policy")
     args = ap.parse_args()
+    if args.checkpoint_every < 1:
+        raise SystemExit("--checkpoint-every: must be >= 1, got "
+                         f"{args.checkpoint_every}")
+    fault_policy = (None if args.inject_fault is None
+                    else _fault_policy(args.inject_fault))
     src, dst = generators.barabasi_albert(args.n, args.r, seed=0)
     g = weights.wc_weights(csr.from_edges(src, dst, args.n))
     if args.serve is not None:
@@ -355,12 +415,23 @@ def main():
         return
     seeds, est, stats = solve(g, selection=args.selection,
                               mesh=make_sample_mesh(args.mesh),
-                              problem=problem)
+                              problem=problem, fault_policy=fault_policy,
+                              checkpoint_dir=args.checkpoint_dir,
+                              checkpoint_every=args.checkpoint_every)
     print(f"devices={stats['devices']} mesh={stats['pool_sharding']} "
           f"pool_bytes/dev={stats['per_device_pool_bytes']} "
           f"theta={stats['theta']} sampled={stats['sampled']} "
           f"selection={stats['selection']} variant={stats['variant']} "
           f"cost={stats['cost']:.1f} time={time.time() - t0:.2f}s")
+    if stats["resumed_step"] is not None:
+        print(f"resumed from checkpoint step={stats['resumed_step']} "
+              f"({args.checkpoint_dir})")
+    if fault_policy is not None:
+        inj = fault_policy.injector
+        print(f"fault drill: injected={inj.fires} at={inj.fired_log} "
+              f"retries={fault_policy.retries} "
+              f"oom_recoveries={fault_policy.oom_recoveries} "
+              f"gave_up={fault_policy.gave_up}")
     print(f"seeds={sorted(seeds.tolist())} estimate={est:.1f}")
 
 

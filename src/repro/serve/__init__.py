@@ -1,9 +1,12 @@
 """IM-as-a-service: warm-solver registry, micro-batched asyncio request
 front, and result cache over the :class:`~repro.core.problem.IMProblem`
-API.  DESIGN.md §7 documents the architecture and contracts."""
+API.  DESIGN.md §7 documents the architecture and contracts; §8 the fault
+model (failure isolation, quarantine, circuit breakers, degraded serves,
+pool spill/rehydrate)."""
 from repro.serve.batching import execute_batch, occur_fastpath_eligible
 from repro.serve.cache import CacheStats, ResultCache
 from repro.serve.front import (
+    CircuitOpenError,
     DeadlineExpiredError,
     IMService,
     InvalidProblemError,
@@ -12,6 +15,7 @@ from repro.serve.front import (
     ServeError,
     ServeResponse,
     ServeStats,
+    SolverFailedError,
     UnknownGraphError,
     build_service,
 )
@@ -19,6 +23,7 @@ from repro.serve.registry import RegistryStats, WarmEntry, WarmSolverRegistry
 
 __all__ = [
     "CacheStats",
+    "CircuitOpenError",
     "DeadlineExpiredError",
     "IMService",
     "InvalidProblemError",
@@ -29,6 +34,7 @@ __all__ = [
     "ServeError",
     "ServeResponse",
     "ServeStats",
+    "SolverFailedError",
     "UnknownGraphError",
     "WarmEntry",
     "WarmSolverRegistry",

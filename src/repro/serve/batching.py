@@ -75,8 +75,9 @@ def _solve_from_occur(solver: IMMSolver, r: ResolvedProblem,
                     cost=0.0)
 
 
-def execute_batch(solver: IMMSolver,
-                  problems: List[IMProblem]) -> List[IMResult]:
+def execute_batch(solver: IMMSolver, problems: List[IMProblem],
+                  deadlines: Optional[List[Optional[float]]] = None
+                  ) -> List[IMResult]:
     """Run one micro-batch on a warm solver; returns results aligned with
     ``problems``.
 
@@ -87,13 +88,21 @@ def execute_batch(solver: IMMSolver,
     ``solver.prepare`` runs host-side construction up front, so the whole
     call after it is legal under an outer
     ``jax.transfer_guard("disallow")``.
+
+    ``deadlines`` (aligned with ``problems``): per-request remaining
+    seconds, forwarded to ``solve_problem(deadline_s=...)`` so an
+    over-budget solve degrades to a sketch-bound answer mid-flight instead
+    of blowing the deadline (the fast path ignores it — answering from the
+    already-fetched histogram is strictly cheaper than degrading).
     """
     if not problems:
         return []
+    if deadlines is None:
+        deadlines = [None] * len(problems)
     occur = None          # shared histogram, fetched at most once per batch
     n_rr = 0
     results: List[IMResult] = []
-    for p in problems:
+    for p, dl in zip(problems, deadlines):
         if occur_fastpath_eligible(solver, p):
             r = solver.prepare(p)
             if occur is None:
@@ -108,5 +117,5 @@ def execute_batch(solver: IMMSolver,
             if res is not None:
                 results.append(res)
                 continue
-        results.append(solver.solve_problem(p))
+        results.append(solver.solve_problem(p, deadline_s=dl))
     return results

@@ -22,6 +22,19 @@ latency unboundedly), per-request deadlines (expired work is dropped
 (LRU pool eviction).  The solve itself runs on a dedicated
 single-thread executor, so the event loop keeps admitting/shedding while
 a batch computes — and jax only ever sees one caller thread.
+
+Failure isolation (DESIGN.md §8): a batch whose execution dies does NOT
+fail every request in it.  The entry that was executing is *quarantined*
+(its possibly partially-appended pool must never serve again), then each
+request re-runs alone on a fresh entry — a poisoned request fails with a
+typed error by itself while its batch-mates still get served.  A
+per-registry-key circuit breaker (closed → open after N consecutive
+failures → half-open probe after a cooldown) stops a persistently failing
+key from burning executor time, and requests carrying deadlines degrade
+mid-solve to certified sketch-bound answers (``ServeResponse.degraded``)
+instead of expiring.  Every outcome is typed: served, degraded, or a
+``ServeError`` subclass — submit() never hangs and never returns an
+unlabelled partial answer.
 """
 from __future__ import annotations
 
@@ -31,6 +44,7 @@ from dataclasses import dataclass, field
 from typing import List, Optional
 
 from repro.core.problem import IMProblem, IMResult
+from repro.ft.failures import DeadlineExceeded
 from repro.serve.batching import execute_batch
 from repro.serve.cache import CacheStats, ResultCache
 from repro.serve.registry import RegistryStats, WarmSolverRegistry
@@ -57,8 +71,22 @@ class QueueFullError(ServeError):
 
 
 class DeadlineExpiredError(ServeError):
-    """The request's deadline passed before a solver picked it up."""
+    """The request's deadline passed before a solver picked it up (or
+    expired mid-solve on an objective with no degraded answer)."""
     code = "deadline_expired"
+
+
+class SolverFailedError(ServeError):
+    """The request's solve raised even when run in isolation; the original
+    error type/message is preserved in ``str(e)``."""
+    code = "solver_failed"
+
+
+class CircuitOpenError(ServeError):
+    """The request's registry key has failed repeatedly and its circuit
+    breaker is open; retry after the cooldown (a half-open probe will test
+    the key again)."""
+    code = "circuit_open"
 
 
 # -- request/response envelopes ---------------------------------------------
@@ -75,6 +103,11 @@ class ServeConfig:
     memory_budget_bytes: Optional[int] = None
     max_solvers: Optional[int] = None
     solver_opts: dict = field(default_factory=dict)
+    # fault handling (DESIGN.md §8)
+    breaker_threshold: int = 3    # consecutive failures that open a key's
+    #                               circuit breaker
+    breaker_cooldown_s: float = 1.0   # open -> half-open probe delay
+    spill_dir: Optional[str] = None   # registry spill-on-evict directory
 
 
 @dataclass
@@ -84,6 +117,41 @@ class ServeResponse:
     batch_size: int               # occupancy of the batch that computed it
     queued_s: float               # admission -> execution start
     solve_s: float                # execution wall time of the batch
+    degraded: bool = False        # deadline-clipped sketch answer: the
+    #                               result carries certified spread_bounds
+    #                               and is never cached
+
+
+@dataclass
+class _Breaker:
+    """Per-registry-key circuit breaker.  closed → (threshold consecutive
+    failures) → open → (cooldown) → half-open, where exactly one probe
+    attempt runs: success closes the breaker, failure re-opens it.  The
+    worker is single-threaded, so no locking is needed."""
+    threshold: int
+    cooldown_s: float
+    state: str = "closed"
+    failures: int = 0             # consecutive
+    opened_at: float = 0.0
+    trips: int = 0
+
+    def allow(self, now: float) -> bool:
+        if self.state == "open" and now - self.opened_at >= self.cooldown_s:
+            self.state = "half-open"
+        return self.state != "open"
+
+    def record(self, ok: bool, now: float) -> None:
+        if ok:
+            self.state = "closed"
+            self.failures = 0
+            return
+        self.failures += 1
+        if self.state == "half-open" or self.failures >= self.threshold:
+            if self.state != "open":
+                self.trips += 1
+            self.state = "open"
+            self.opened_at = now
+            self.failures = 0
 
 
 @dataclass
@@ -110,6 +178,13 @@ class ServeStats:
     occur_fastpath: int
     cache: CacheStats
     registry: RegistryStats
+    # fault handling (DESIGN.md §8)
+    degraded: int = 0             # deadline-clipped sketch answers served
+    quarantines: int = 0          # entries dropped after a mid-flight death
+    isolated_retries: int = 0     # requests re-run alone after a batch died
+    solver_retries: int = 0       # in-solver FaultPolicy retries (shared)
+    breaker_trips: int = 0        # closed/half-open -> open transitions
+    breakers_open: int = 0        # keys currently open or half-open
 
 
 def build_service(graphs: dict, config: Optional[ServeConfig] = None
@@ -119,7 +194,8 @@ def build_service(graphs: dict, config: Optional[ServeConfig] = None
     registry = WarmSolverRegistry(
         memory_budget_bytes=config.memory_budget_bytes,
         max_solvers=config.max_solvers,
-        solver_opts=config.solver_opts)
+        solver_opts=config.solver_opts,
+        spill_dir=config.spill_dir)
     for name, g in graphs.items():
         registry.add_graph(name, g)
     return IMService(registry, config)
@@ -155,6 +231,13 @@ class IMService:
         self.occupancy_sum = 0
         self.occupancy_max = 0
         self.occur_fastpath = 0
+        self.degraded = 0
+        self.quarantines = 0
+        self.isolated_retries = 0
+        self._breakers: "dict[tuple, _Breaker]" = {}
+        # shared in-solver fault policy (chaos injection + retry counters):
+        # the registry forwards it to every solver it builds
+        self._policy = self.config.solver_opts.get("fault_policy")
 
     # -- lifecycle ---------------------------------------------------------
     async def start(self) -> "IMService":
@@ -165,6 +248,11 @@ class IMService:
         # only ever entered from a single thread
         self._executor = ThreadPoolExecutor(max_workers=1,
                                             thread_name_prefix="im-serve")
+        if (self._policy is not None
+                and self.registry.evict_coldest not in self._policy.on_oom):
+            # growth-OOM recovery: free cold warm pools, then retry the
+            # append that hit the allocation failure
+            self._policy.on_oom.append(self.registry.evict_coldest)
         self._worker_task = asyncio.get_running_loop().create_task(
             self._worker())
         return self
@@ -296,35 +384,105 @@ class IMService:
                 todo.append(p)
         if not todo:
             return
-        entry = self.registry.get(todo[0].graph, todo[0].problem)
-        entry.in_use = True
-        problems = [p.problem for p in todo]
-        t0 = loop.time()
-        try:
-            fast_before = self._fastpath_probe(entry.solver, problems)
-            results = await loop.run_in_executor(
-                self._executor, execute_batch, entry.solver, problems)
-        except Exception as e:                       # pragma: no cover
+        key = self.registry.solver_key(todo[0].graph, todo[0].problem)
+        breaker = self._breakers.get(key)
+        if breaker is None:
+            breaker = self._breakers[key] = _Breaker(
+                self.config.breaker_threshold,
+                self.config.breaker_cooldown_s)
+        if not breaker.allow(loop.time()):
             self.failed += len(todo)
             for p in todo:
-                if not p.future.done():
-                    p.future.set_exception(e)
+                p.future.set_exception(CircuitOpenError(
+                    f"registry key {key[0]!r}/... is failing; circuit open "
+                    f"for {self.config.breaker_cooldown_s:.1f}s"))
             return
-        finally:
+        try:
+            self._respond(todo, *await self._execute(loop, key, todo))
+            breaker.record(True, loop.time())
+            return
+        except asyncio.CancelledError:
+            raise
+        except BaseException:
+            # batch attempt died: the shared entry has been quarantined by
+            # _execute.  Isolate the blast radius — re-run each request
+            # alone on a fresh entry so a poisoned request fails by itself
+            # while its batch-mates still get served.
+            breaker.record(False, loop.time())
+        for p in todo:
+            if p.future.done():
+                continue
+            self.isolated_retries += 1
+            try:
+                self._respond([p], *await self._execute(loop, key, [p]))
+                breaker.record(True, loop.time())
+            except asyncio.CancelledError:
+                raise
+            except BaseException as e:
+                breaker.record(False, loop.time())
+                self.failed += 1
+                p.future.set_exception(self._typed(e))
+
+    async def _execute(self, loop, key, reqs: List[_Pending]):
+        """One executor attempt over requests sharing a registry key.
+        Returns ``(results, t0, solve_s)``; on ANY failure the executing
+        entry is quarantined first (its pool may be partially appended and
+        must never serve again — DESIGN.md §8), then the error propagates
+        to the caller's isolation/breaker logic."""
+        entry = self.registry.get(reqs[0].graph, reqs[0].problem)
+        entry.in_use = True
+        problems = [p.problem for p in reqs]
+        t0 = loop.time()
+        # per-request remaining budget at attempt start: solver-side
+        # monotonic seconds (loop.time() is only valid on this loop)
+        deadlines = [None if p.deadline is None
+                     else max(0.0, p.deadline - t0) for p in reqs]
+        try:
+            fast_before = self._fastpath_probe(entry.solver, problems)
+            if self._policy is not None:
+                # chaos boundary standing in for an executor-side death
+                self._policy.check("executor", {"n": len(reqs)})
+            results = await loop.run_in_executor(
+                self._executor, execute_batch, entry.solver, problems,
+                deadlines)
+        except BaseException:
             entry.in_use = False
+            self.registry.quarantine(key)
+            self.quarantines += 1
+            raise
+        entry.in_use = False
         solve_s = loop.time() - t0
         self.occur_fastpath += fast_before
-        entry.solves += len(todo)
+        entry.solves += len(reqs)
         self.registry.account(entry)
         self.batches += 1
-        self.occupancy_sum += len(todo)
-        self.occupancy_max = max(self.occupancy_max, len(todo))
-        for p, res in zip(todo, results):
-            self.cache.put(self.registry.cache_key(p.graph, p.problem), res)
+        self.occupancy_sum += len(reqs)
+        self.occupancy_max = max(self.occupancy_max, len(reqs))
+        return results, t0, solve_s
+
+    def _respond(self, reqs: List[_Pending], results, t0, solve_s) -> None:
+        for p, res in zip(reqs, results):
+            if res.degraded:
+                # labelled partial answer: never cached (a later request
+                # with more budget deserves the exact result)
+                self.degraded += 1
+            else:
+                self.cache.put(self.registry.cache_key(p.graph, p.problem),
+                               res)
             self.served += 1
             p.future.set_result(ServeResponse(
-                result=res, cached=False, batch_size=len(todo),
-                queued_s=t0 - p.t_submit, solve_s=solve_s))
+                result=res, cached=False, batch_size=len(reqs),
+                queued_s=t0 - p.t_submit, solve_s=solve_s,
+                degraded=res.degraded))
+
+    @staticmethod
+    def _typed(e: BaseException) -> ServeError:
+        """Map an isolation-run failure to the typed error surface."""
+        if isinstance(e, ServeError):
+            return e
+        if isinstance(e, DeadlineExceeded):
+            return DeadlineExpiredError(str(e))
+        return SolverFailedError(f"{type(e).__name__}: {e}")
 
     @staticmethod
     def _fastpath_probe(solver, problems) -> int:
@@ -343,4 +501,11 @@ class IMService:
             batch_occupancy_max=self.occupancy_max,
             occur_fastpath=self.occur_fastpath,
             cache=self.cache.snapshot(),
-            registry=self.registry.snapshot())
+            registry=self.registry.snapshot(),
+            degraded=self.degraded, quarantines=self.quarantines,
+            isolated_retries=self.isolated_retries,
+            solver_retries=(self._policy.retries
+                            if self._policy is not None else 0),
+            breaker_trips=sum(b.trips for b in self._breakers.values()),
+            breakers_open=sum(1 for b in self._breakers.values()
+                              if b.state != "closed"))

@@ -27,10 +27,24 @@ registry calls :meth:`~repro.core.imm.IMMSolver.export_pool`, takes the
 it — the lease is the only reference to the device buffers, so the
 accelerator memory is released deterministically, not whenever a solver
 object happens to be garbage-collected.
+
+**Durability (DESIGN.md §8).**  With ``spill_dir`` set, eviction first
+writes the pool as a durable checkpoint (``IMMSolver.save_pool``) keyed by
+the entry's registry key, and a later miss on that key *rehydrates* the
+spilled pool instead of resampling — eviction stops destroying the most
+expensive state the service owns.  :meth:`quarantine` is the opposite
+path: an entry whose solve died mid-flight may hold a partially-appended
+pool (device buffers ahead of the host mirrors), so it is dropped without
+spilling and can never serve again; any *pre-existing* spill snapshot
+stays valid (snapshots are only ever written from committed, consistent
+states).
 """
 from __future__ import annotations
 
+import hashlib
 import itertools
+import os
+import shutil
 from dataclasses import dataclass
 from typing import Hashable, Optional
 
@@ -39,7 +53,7 @@ from repro.core.problem import IMProblem
 
 # solver constructor options a registry may carry (forwarded verbatim)
 _SOLVER_OPTS = frozenset(("engine", "batch", "qcap", "ec", "model", "seed",
-                          "selection", "sketch_k", "mesh"))
+                          "selection", "sketch_k", "mesh", "fault_policy"))
 
 
 @dataclass(frozen=True)
@@ -50,6 +64,10 @@ class RegistryStats:
     bytes_in_use: int
     bytes_freed: int
     memory_budget_bytes: Optional[int]
+    spills: int = 0
+    rehydrations: int = 0
+    rehydrate_failures: int = 0
+    quarantined: int = 0
 
 
 @dataclass
@@ -77,7 +95,8 @@ class WarmSolverRegistry:
 
     def __init__(self, *, memory_budget_bytes: Optional[int] = None,
                  max_solvers: Optional[int] = None,
-                 solver_opts: Optional[dict] = None):
+                 solver_opts: Optional[dict] = None,
+                 spill_dir: Optional[str] = None):
         if memory_budget_bytes is not None and memory_budget_bytes <= 0:
             raise ValueError("memory_budget_bytes must be positive")
         if max_solvers is not None and max_solvers < 1:
@@ -89,12 +108,17 @@ class WarmSolverRegistry:
         self.memory_budget_bytes = memory_budget_bytes
         self.max_solvers = max_solvers
         self.solver_opts = dict(solver_opts or {})
+        self.spill_dir = spill_dir
         self._graphs: dict = {}
         self._entries: "dict[Hashable, WarmEntry]" = {}
         self._clock = itertools.count(1)
         self.created = 0
         self.evictions = 0
         self.bytes_freed = 0
+        self.spills = 0
+        self.rehydrations = 0
+        self.rehydrate_failures = 0
+        self.quarantines = 0
 
     # -- graphs ------------------------------------------------------------
     def add_graph(self, name: str, g) -> None:
@@ -135,16 +159,36 @@ class WarmSolverRegistry:
     def bytes_in_use(self) -> int:
         return sum(e.bytes for e in self._entries.values())
 
+    def _spill_path(self, key: Hashable) -> Optional[str]:
+        if self.spill_dir is None:
+            return None
+        tag = hashlib.sha256(repr(key).encode()).hexdigest()[:24]
+        return os.path.join(self.spill_dir, tag)
+
     def get(self, graph: str, problem: IMProblem) -> WarmEntry:
         """Fetch-or-build the warm entry for (graph, problem); touches LRU
-        and enforces the budgets (never evicting the returned entry)."""
+        and enforces the budgets (never evicting the returned entry).  A
+        miss whose key has a spill snapshot rehydrates the saved pool
+        instead of resampling; a corrupt/unreadable snapshot falls back to
+        the cold path (the pool is always recomputable)."""
         if graph not in self._graphs:
             raise KeyError(f"unknown graph {graph!r}")
         key = self.solver_key(graph, problem)
         entry = self._entries.get(key)
         if entry is None:
             solver = IMMSolver(self._graphs[graph], **self.solver_opts)
+            spill = self._spill_path(key)
+            if spill is not None and os.path.isdir(spill):
+                try:
+                    solver.restore_pool(spill)
+                    self.rehydrations += 1
+                except Exception:
+                    # cold-start instead: drop whatever half-state restore
+                    # left and resample deterministically
+                    solver.drop_pool()
+                    self.rehydrate_failures += 1
             entry = WarmEntry(key=key, solver=solver, problem=problem)
+            entry.bytes = solver.pool_bytes()
             self._entries[key] = entry
             self.created += 1
         entry.seq = next(self._clock)
@@ -159,18 +203,57 @@ class WarmSolverRegistry:
         self._enforce(keep=entry.key)
 
     def evict(self, key: Hashable) -> int:
-        """Evict one entry; returns the pool bytes freed.  The transfer is
-        explicit: the solver's pool is exported into a lease the registry
-        immediately drops — the last reference to the device buffers."""
+        """Evict one entry; returns the pool bytes freed.  With a
+        ``spill_dir``, the pool is first written as a durable checkpoint so
+        a later miss rehydrates instead of resampling.  The device-memory
+        transfer stays explicit: the solver's pool is exported into a
+        lease the registry immediately drops — the last reference to the
+        device buffers."""
         entry = self._entries.pop(key)
         freed = 0
         if entry.solver._sig is not None:
+            spill = self._spill_path(key)
+            if spill is not None:
+                entry.solver.save_pool(spill, keep=1)
+                self.spills += 1
             lease = entry.solver.export_pool()
             freed = lease.pool_bytes()
             del lease
         self.evictions += 1
         self.bytes_freed += freed
         return freed
+
+    def quarantine(self, key: Hashable) -> int:
+        """Drop an entry whose solve died mid-flight (DESIGN.md §8).  The
+        pool may be partially appended, so — unlike :meth:`evict` — it is
+        neither spilled nor exported: the buffers are dereferenced and the
+        entry can never serve again.  A pre-existing spill snapshot is
+        left in place (snapshots are only written from committed states,
+        so rehydrating one later is sound).  Returns the bytes dropped;
+        no-op (0) for unknown keys."""
+        entry = self._entries.pop(key, None)
+        if entry is None:
+            return 0
+        freed = entry.solver.drop_pool()
+        self.quarantines += 1
+        self.bytes_freed += freed
+        return freed
+
+    def evict_coldest(self) -> int:
+        """Free the least-recently-used idle entry (0 if none is
+        evictable).  Registered as a ``FaultPolicy.on_oom`` hook: when pool
+        growth hits an allocation failure, the service frees cold pools
+        and retries the append."""
+        cands = [e for e in self._entries.values() if not e.in_use]
+        if not cands:
+            return 0
+        return self.evict(min(cands, key=lambda e: e.seq).key)
+
+    def clear_spill(self, key: Hashable) -> None:
+        """Delete a key's spill snapshot (used by tests/ops tooling)."""
+        spill = self._spill_path(key)
+        if spill is not None and os.path.isdir(spill):
+            shutil.rmtree(spill, ignore_errors=True)
 
     def _enforce(self, keep: Hashable) -> None:
         def lru_victim():
@@ -196,4 +279,7 @@ class WarmSolverRegistry:
             solvers=len(self._entries), created=self.created,
             evictions=self.evictions, bytes_in_use=self.bytes_in_use(),
             bytes_freed=self.bytes_freed,
-            memory_budget_bytes=self.memory_budget_bytes)
+            memory_budget_bytes=self.memory_budget_bytes,
+            spills=self.spills, rehydrations=self.rehydrations,
+            rehydrate_failures=self.rehydrate_failures,
+            quarantined=self.quarantines)

@@ -114,27 +114,40 @@ def test_checkpoint_roundtrip_and_rotation(tmp_path):
     assert not [f for f in os.listdir(d) if f.startswith(".tmp")]
 
 
-def test_resilient_loop_recovers_and_matches_uninterrupted(tmp_path):
-    """Failures at steps 7 & 23 -> restart from ckpt -> identical final loss
-    sequence tail as the uninterrupted run (deterministic steps)."""
-    def make_loop(ckdir, injector):
-        def init_state_fn():
-            return 0, {"x": jnp.float32(10.0)}
+def test_resilient_solve_recovers_and_matches_uninterrupted(tmp_path):
+    """The ft substrate on the IM pipeline (DESIGN.md §8): crashes in
+    sampling rounds 3 & 9 -> process 'restart' (fresh solver) -> restore
+    from the durable pool checkpoint -> the final result is bit-identical
+    to an uninterrupted solve."""
+    from repro.ft.runner import resilient_solve
+    from repro.graph import csr as csr_mod
+    from repro.graph import generators, weights
+    from repro.core.imm import IMMSolver
+    from repro.core.problem import IMProblem
 
-        def step_fn(step, state):
-            x = state["x"] * 0.9
-            return {"x": x}, float(x)
+    src, dst = generators.erdos_renyi(60, 300, seed=0)
+    g = weights.wc_weights(csr_mod.from_edges(src, dst, 60))
+    p = IMProblem(k=3, theta=512)
+    clean = IMMSolver(g, batch=32, seed=7).solve(p)
 
-        return failures.resilient_loop(
-            init_state_fn=init_state_fn, step_fn=step_fn, total_steps=30,
-            ckpt_dir=ckdir, ckpt_every=5, injector=injector)
+    d = str(tmp_path / "ck")
+    inj = failures.FaultInjector(fail_at={"sample": {3, 9}})
 
-    clean = make_loop(str(tmp_path / "a"), None)
-    faulty = make_loop(str(tmp_path / "b"),
-                       failures.FailureInjector(fail_at={7, 23}))
-    assert faulty.restarts == 2
-    assert len(faulty.restored_from) == 2
-    assert abs(clean.losses[-1] - faulty.losses[-1]) < 1e-6
+    def make_solver():
+        # max_retries=0: every injected fault is fatal to its attempt, so
+        # recovery must come from the restart + checkpoint path
+        pol = failures.FaultPolicy(injector=inj, max_retries=0,
+                                   sleep=lambda s: None)
+        return IMMSolver(g, batch=32, seed=7, fault_policy=pol,
+                         checkpoint_dir=d, checkpoint_every=2)
+
+    got, report = resilient_solve(make_solver, p, d)
+    assert report.completed and report.restarts == 2
+    assert report.resumed_steps[0] is None          # cold start
+    assert all(s is not None for s in report.resumed_steps[1:])
+    np.testing.assert_array_equal(clean.seeds, got.seeds)
+    np.testing.assert_array_equal(clean.gains, got.gains)
+    assert clean.frac == got.frac and clean.spread == got.spread
 
 
 def test_straggler_monitor():
