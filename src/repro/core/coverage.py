@@ -519,6 +519,11 @@ class ShardedDeviceRRStore:
         # every allocation has passed this gate, so a refused growth is
         # retryable (DESIGN.md §8).
         self.alloc_check = None
+        # per-append ("sampling round") row/element watermarks, one (D,)
+        # int64 vector each — the granularity windowed eviction drops at
+        # (oldest round first; DESIGN.md §9)
+        self._round_rows: list[np.ndarray] = []
+        self._round_elems: list[np.ndarray] = []
         self._fns = _mesh_store_fns(self.mesh)
 
     # -- sizes -------------------------------------------------------------
@@ -540,6 +545,12 @@ class ShardedDeviceRRStore:
         """Per-shard row counts as a sharded (D,) device vector (selection
         psums it for the F_R denominator under the guard)."""
         return self._nrr_dev
+
+    @property
+    def n_rounds(self) -> int:
+        """Sampling rounds (appends) still represented in the pool — the
+        windowed-eviction granularity."""
+        return len(self._round_rows)
 
     def per_device_pool_bytes(self) -> int:
         """Live pool bytes on each device: flat + ids + valid buffers
@@ -649,6 +660,9 @@ class ShardedDeviceRRStore:
                 self._nrr_dev, nodes_sh, lens_sh)
         self._t_loc += elems_l
         self._nrr_loc += rows_l
+        if rows_l.sum():
+            self._round_rows.append(rows_l.copy())
+            self._round_elems.append(elems_l.copy())
         self._cache = None
         self._bitset = None
         self._sk_cache = None
@@ -685,6 +699,11 @@ class ShardedDeviceRRStore:
         host = {k: np.asarray(v) for k, v in jax.device_get(arrs).items()}
         host["t_loc"] = self._t_loc.copy()
         host["nrr_loc"] = self._nrr_loc.copy()
+        if self._round_rows:
+            # (rounds, D) watermark history — windowed eviction keeps its
+            # per-round granularity across a checkpoint round-trip
+            host["round_rows"] = np.stack(self._round_rows)
+            host["round_elems"] = np.stack(self._round_elems)
         return host
 
     def config(self) -> dict:
@@ -730,7 +749,190 @@ class ShardedDeviceRRStore:
             store._sk_words = jax.device_put(state["sk_words"], store._sh_b3)
         store._t_loc = np.asarray(state["t_loc"], np.int64).copy()
         store._nrr_loc = np.asarray(state["nrr_loc"], np.int64).copy()
+        rr = state.get("round_rows")
+        if rr is not None:
+            store._round_rows = [np.asarray(r, np.int64).copy() for r in rr]
+            store._round_elems = [np.asarray(r, np.int64).copy()
+                                  for r in state["round_elems"]]
+        elif store._nrr_loc.any():
+            # pre-watermark checkpoint: degrade to whole-pool granularity
+            store._round_rows = [store._nrr_loc.copy()]
+            store._round_elems = [store._t_loc.copy()]
         return store
+
+    # -- windowed eviction (streaming graphs, DESIGN.md §9) -----------------
+    def _rewrite(self, keep) -> dict:
+        """Rebuild the pool keeping only the rows ``keep`` selects.
+
+        ``keep(shard, flat, ids, ew) -> (flat', ids', ew', n_rows')`` maps
+        one shard's compacted valid elements (host int64 arrays, ids local)
+        to the surviving elements with dense renumbered local ids in
+        ``[0, n_rows')``.  A maintenance operation in the spirit of
+        :meth:`snapshot` — *not* on the guarded hot loop: shards gather to
+        the host (explicit transfers, legal under the guard), buffers
+        re-pack at the smallest power-of-two capacity, and the packed
+        sketch rebuilds from the surviving flat pool via
+        :func:`~repro.core.sketch.sketch_packed_from_flat` with shard-major
+        global row numbering — the numbering future ``append_batch`` folds
+        continue from (``base = n_rr``); any injective renumbering of
+        survivors composes correctly because bucketing only ever reads row
+        ids, never pool positions.
+        """
+        d = self.n_shards
+        old_rows, old_elems = self.n_rr, self.n_elems
+        arrs = (self._flat, self._ids, self._valid) + \
+            ((self._ew,) if self.row_weighted else ())
+        host = [np.asarray(a) for a in jax.device_get(arrs)]
+        flat, ids, valid = host[0], host[1], host[2]
+        ew = host[3] if self.row_weighted else None
+        fs, iss, ews = [], [], []
+        t_new = np.zeros(d, np.int64)
+        r_new = np.zeros(d, np.int64)
+        for s in range(d):
+            m = valid[s]
+            f2, i2, e2, rows_s = keep(
+                s, flat[s][m].astype(np.int64), ids[s][m].astype(np.int64),
+                ew[s][m] if ew is not None else None)
+            fs.append(np.asarray(f2, np.int64))
+            iss.append(np.asarray(i2, np.int64))
+            ews.append(None if e2 is None else np.asarray(e2, np.float32))
+            t_new[s] = int(fs[s].shape[0])
+            r_new[s] = int(rows_s)
+        cap = _ceil_pow2(max(int(t_new.max()), 1))
+        nf = np.full((d, cap), self.n_nodes, np.int32)
+        ni = np.zeros((d, cap), np.int32)
+        nv = np.zeros((d, cap), bool)
+        ne = np.zeros((d, cap), np.float32) if self.row_weighted else None
+        w_new = np.zeros(d, np.float32) if self.row_weighted else None
+        for s in range(d):
+            t = int(t_new[s])
+            nf[s, :t] = fs[s]
+            ni[s, :t] = iss[s]
+            nv[s, :t] = True
+            if self.row_weighted and t:
+                ne[s, :t] = ews[s]
+                # the per-row weight sits on every element of the row; sum
+                # one representative element per surviving row
+                _, first = np.unique(iss[s], return_index=True)
+                w_new[s] = np.float32(ews[s][first].sum())
+        self._flat = jax.device_put(nf, self._sh_buf)
+        self._ids = jax.device_put(ni, self._sh_buf)
+        self._valid = jax.device_put(nv, self._sh_buf)
+        self._t_dev = jax.device_put(t_new.astype(np.int32), self._sh_vec)
+        self._nrr_dev = jax.device_put(r_new.astype(np.int32), self._sh_vec)
+        if self.row_weighted:
+            self._ew = jax.device_put(ne, self._sh_buf)
+            self._w_dev = jax.device_put(w_new, self._sh_vec)
+        self._t_loc = t_new.copy()
+        self._nrr_loc = r_new.copy()
+        if self._sk_words is not None:
+            prefix = np.concatenate([[0], np.cumsum(r_new)[:-1]])
+            gids = np.concatenate(
+                [iss[s] + prefix[s] for s in range(d)]).astype(np.int32)
+            fall = np.concatenate(fs).astype(np.int32)
+            words = np.asarray(jax.device_get(
+                sketch_mod.sketch_packed_from_flat(
+                    jax.device_put(fall), jax.device_put(gids),
+                    jax.device_put(np.ones(fall.shape[0], bool)),
+                    n_rows=self.sketch_rows, k=self.sketch_k,
+                    mode=self.sketch_mode)))
+            self._sk_words = jax.device_put(
+                np.broadcast_to(words[None], (d,) + words.shape).copy(),
+                self._sh_b3)
+        self._cache = None
+        self._bitset = None
+        self._sk_cache = None
+        return {"rows_dropped": old_rows - self.n_rr,
+                "rows_kept": self.n_rr,
+                "elems_dropped": old_elems - self.n_elems,
+                "per_shard_capacity": self.capacity}
+
+    def evict_earliest_rounds(self, n_rounds: int) -> dict:
+        """Drop the ``n_rounds`` earliest sampling rounds (windowed pool).
+
+        Per-shard local row ids are append-ordered, so the earliest rounds
+        occupy exactly the id prefix ``[0, thr)`` on every shard: surviving
+        rows keep their relative order and renumber by one subtraction.
+        The packed sketch rebuilds from the surviving flat pool (the
+        rebuild the bit-identity conformance test pins).  Returns the
+        :meth:`_rewrite` stats dict.
+        """
+        n_rounds = max(0, min(int(n_rounds), self.n_rounds))
+        if n_rounds == 0:
+            return {"rows_dropped": 0, "rows_kept": self.n_rr,
+                    "elems_dropped": 0,
+                    "per_shard_capacity": self.capacity}
+        thr = np.sum(self._round_rows[:n_rounds], axis=0).astype(np.int64)
+        old_nrr = self._nrr_loc.copy()
+
+        def keep(s, f, i, e):
+            m = i >= thr[s]
+            return (f[m], i[m] - thr[s],
+                    e[m] if e is not None else None,
+                    int(old_nrr[s] - thr[s]))
+
+        stats = self._rewrite(keep)
+        self._round_rows = self._round_rows[n_rounds:]
+        self._round_elems = self._round_elems[n_rounds:]
+        stats["rounds_dropped"] = n_rounds
+        return stats
+
+    def evict_to_bytes(self, max_bytes_per_device: int) -> dict:
+        """Drop earliest rounds until :meth:`per_device_pool_bytes` fits
+        ``max_bytes_per_device``.  Best effort: the latest round is always
+        kept (a bound smaller than one round cannot be met — the returned
+        ``met`` flag says whether the bound holds).  When no round needs
+        dropping but allocated capacity alone exceeds the bound (append
+        growth over-allocates), the pool compacts in place to the smallest
+        power-of-two capacity without touching any row.
+        """
+        bpe = 4 + 4 + 1 + (4 if self.row_weighted else 0)
+        elems = (np.stack(self._round_elems) if self._round_elems
+                 else np.zeros((0, self.n_shards), np.int64))
+
+        def bytes_after(j):
+            surv = (elems[j:].sum(axis=0) if j < elems.shape[0]
+                    else np.zeros(self.n_shards, np.int64))
+            return _ceil_pow2(max(int(surv.max()), 1)) * bpe
+
+        drop = 0
+        while drop < max(elems.shape[0] - 1, 0) and \
+                bytes_after(drop) > max_bytes_per_device:
+            drop += 1
+        if drop == 0 and \
+                self.per_device_pool_bytes() > max_bytes_per_device:
+            nloc = self._nrr_loc.copy()
+            stats = self._rewrite(
+                lambda s, f, i, e: (f, i, e, int(nloc[s])))
+            stats["rounds_dropped"] = 0
+        else:
+            stats = self.evict_earliest_rounds(drop)
+        stats["met"] = self.per_device_pool_bytes() <= max_bytes_per_device
+        return stats
+
+    def evict_rows_containing(self, nodes) -> dict:
+        """Drop every RR row containing any of ``nodes`` — the delta
+        invalidation primitive of ``IMMSolver.resolve_incremental``
+        (``nodes`` = the reverse-adjacency rows an edge-delta batch
+        touches, :func:`repro.core.stream.affected_nodes`).  Surviving rows
+        renumber densely per shard; the round watermark history collapses
+        to one synthetic round (membership eviction cuts across rounds).
+        """
+        aff = np.unique(np.asarray(nodes, np.int64).reshape(-1))
+
+        def keep(s, f, i, e):
+            bad = np.unique(i[np.isin(f, aff)])
+            m = ~np.isin(i, bad)
+            f2, i_old = f[m], i[m]
+            u = np.unique(i_old)
+            return (f2, np.searchsorted(u, i_old),
+                    e[m] if e is not None else None, int(u.shape[0]))
+
+        stats = self._rewrite(keep)
+        self._round_rows = [self._nrr_loc.copy()] if self.n_rr else []
+        self._round_elems = [self._t_loc.copy()] if self.n_rr else []
+        stats["affected_nodes"] = int(aff.shape[0])
+        return stats
 
     # -- views -------------------------------------------------------------
     def snapshot(self) -> RRStore:

@@ -897,6 +897,93 @@ class IMMSolver:
                         stats=self.stats, problem=p, n_nodes=self.n,
                         cost=spent)
 
+    # -- streaming graphs (DESIGN.md §9) -----------------------------------
+    def resolve_incremental(self, problem: IMProblem, deltas, *,
+                            min_surviving_fraction: float = 0.0,
+                            deadline_s: Optional[float] = None) -> IMResult:
+        """Apply edge ``deltas`` (``repro.core.stream`` spec) to the
+        solver's graph and re-solve ``problem``, reusing every RR set the
+        deltas provably leave untouched.
+
+        A forward edge u→v lives in reverse-adjacency row v, and an RR-BFS
+        only examines the rows of nodes it visits — so a pre-delta RR set
+        containing no destination of any changed edge ran an identical-law
+        trajectory on both graphs and survives as an exact post-delta
+        sample *conditioned on avoiding the changed rows*
+        (:func:`repro.core.stream.affected_nodes`; DESIGN.md §9 states the
+        guarantee and the residual conditioning term, which the KS/5σ
+        conformance suite polices).  Touched rows are evicted
+        (``evict_rows_containing``), the engine rebuilds on the mutated
+        reverse graph, and θ tops back up through the normal
+        FaultPolicy-wrapped ``sample_until`` loop — checkpoints, resume and
+        the transfer guard all keep working.
+
+        The pool is reused only when its signature matches ``problem``
+        (same pool digest / engine / sketch) — otherwise, and when fewer
+        than ``min_surviving_fraction`` of the rows survive, the solve
+        falls back to a cold pool on the post-delta graph.  MRIM problems
+        (``t_rounds``) are rejected: their tagged item space has no
+        per-node invalidation frontier.  Reuse bookkeeping lands in
+        ``self.last_incremental`` and the stats history (``"delta"``
+        entry).
+        """
+        from repro.core import stream as stream_mod
+        if not isinstance(self._engine_arg, str):
+            raise ValueError(
+                "resolve_incremental needs a string engine= (the solver "
+                "rebuilds its engine on the mutated graph); an engine "
+                "instance owns its own graph and cannot be re-pointed")
+        if problem.t_rounds is not None:
+            raise ValueError(
+                "resolve_incremental does not support MRIM (t_rounds=): "
+                "the round-tagged item space has no per-node invalidation "
+                "frontier")
+        d = stream_mod.as_deltas(deltas)
+        new_g = stream_mod.apply_edge_deltas(self.g, d)
+        aff = stream_mod.affected_nodes(d)
+        # reuse is sound only for a same-signature pool: the expected sig
+        # mirrors _prepare's keying exactly
+        model = problem.model or self._default_model()
+        sketch_k = self._sketch_k_arg
+        if sketch_k is None and (self._sel_method == "celf"
+                                 or problem.early_exit):
+            sketch_k = cov.ShardedDeviceRRStore.DEFAULT_SKETCH_K
+        name = resolve_engine_name(self._engine_arg, model)
+        want_sig = ("name", name, problem.pool_digest(model=model), sketch_k)
+        store = self._store_obj if self._sig == want_sig else None
+        info = {"affected_nodes": int(aff.shape[0]),
+                "n_rr_before": store.n_rr if store is not None else 0,
+                "rows_dropped": 0, "rows_kept": 0,
+                "surviving_fraction": 0.0, "reused": False}
+        if store is not None:
+            ev = store.evict_rows_containing(aff)
+            info["rows_dropped"] = int(ev["rows_dropped"])
+            info["rows_kept"] = int(ev["rows_kept"])
+            if info["n_rr_before"]:
+                info["surviving_fraction"] = (info["rows_kept"]
+                                              / info["n_rr_before"])
+            if info["surviving_fraction"] < min_surviving_fraction:
+                store = None                     # cold restart: too few left
+        # swap in the post-delta graph and force the engine rebuild; the
+        # RNG cursor carries over (sampling continues the stream)
+        self.g = new_g
+        self.n = new_g.n_nodes
+        self.g_rev = reverse(new_g)
+        self._sig = None
+        self._engine_obj = None
+        self._active_solve = None
+        self._last_ckpt_round = 0
+        if store is not None:
+            # adoption path: fresh stats/accumulators, surviving pool kept
+            self._prepare(problem, _store=store)
+            info["reused"] = True
+            self._stats.history.append(
+                ("delta", info["rows_dropped"], info["rows_kept"]))
+        else:
+            self._store_obj = None
+        self.last_incremental = info
+        return self.solve_problem(problem, deadline_s=deadline_s)
+
 
 _SOLVER_KEYS = frozenset(("engine", "batch", "qcap", "ec", "model", "seed",
                           "selection", "sketch_k", "mesh", "fault_policy",

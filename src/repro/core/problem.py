@@ -183,7 +183,8 @@ class IMProblem:
             _digest_value(h, f.name, getattr(self, f.name))
         return h.hexdigest()
 
-    def pool_digest(self, model: Optional[str] = None) -> str:
+    def pool_digest(self, model: Optional[str] = None, *,
+                    graph_digest: Optional[str] = None) -> str:
         """Content hash of the fields that determine the engine + RR pool
         a solve needs (``_POOL_FIELDS``: diffusion model, ``t_rounds``,
         ``node_weights``).  Problems with equal pool digests can share a
@@ -193,6 +194,13 @@ class IMProblem:
         ``model=`` supplies the solver-resolved model when the problem
         leaves ``model=None`` (inherit), so an explicit ``model="ic"`` and
         an inherited ic default share a pool.
+
+        ``graph_digest=`` mixes in the graph's content identity
+        (:func:`repro.graph.csr.graph_digest`): an RR pool is a sample of
+        one concrete graph, so serving layers that key pools by name must
+        also key them by content — a re-registered or delta-mutated graph
+        then hashes to a different pool key and can never serve a stale
+        pool (``repro.serve``, ``repro.core.stream``).
         """
         h = hashlib.sha256(b"IMPool:")
         vals = {f: getattr(self, f) for f in _POOL_FIELDS}
@@ -200,6 +208,8 @@ class IMProblem:
             vals["model"] = model
         for f in _POOL_FIELDS:
             _digest_value(h, f, vals[f])
+        if graph_digest is not None:
+            _digest_value(h, "graph", graph_digest)
         return h.hexdigest()
 
     def resolve(self, n: int) -> "ResolvedProblem":

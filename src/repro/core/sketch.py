@@ -134,7 +134,15 @@ def flat_to_packed_bits(flat, ids, valid, *, n_rows, k, mode):
 @functools.partial(jax.jit, static_argnames=("n_rows", "k", "mode"))
 def sketch_packed_from_flat(flat, ids, valid, *, n_rows, k, mode):
     """Build packed (n_rows, k/32) occupancy words from an existing flat
-    pool (stores created without an incremental sketch)."""
+    pool (stores created without an incremental sketch).
+
+    Also the windowed-eviction rebuild path (DESIGN.md §9.3):
+    ``ShardedDeviceRRStore._rewrite`` re-derives the sketch from the
+    surviving flat pool with shard-major renumbered row ids.  Bucketing
+    reads only row ids — never pool positions — so any injective
+    renumbering composes bit-identically with later ``append_batch``
+    folds (pinned by the sketch-rebuild conformance test).
+    """
     v, b = flat_to_packed_bits(flat, ids, valid, n_rows=n_rows, k=k,
                                mode=mode)
     return scatter_or_bits(jnp.zeros((n_rows, k // 32), jnp.uint32), v, b)

@@ -11,6 +11,7 @@ edge weight p_uv carried onto the reversed edge (v -> u).
 """
 from __future__ import annotations
 
+import hashlib
 from typing import NamedTuple
 
 import numpy as np
@@ -48,6 +49,13 @@ def from_edges(src, dst, n: int, weights=None, sort: bool = True,
     used for the *reverse* sampling graph, where edge order carries no
     semantic weight (Bernoulli trials and LT categorical draws are
     order-free).
+
+    ``sort=False`` requires the input to already be grouped by source
+    (``src`` non-decreasing): the offsets come from ``np.bincount(src)``
+    while the indices stay in input order, so ungrouped input would pair
+    row i's offset span with some *other* row's destinations — a silently
+    corrupt CSR.  The groupedness is validated (one monotone pass) and
+    violated input raises ``ValueError``.
     """
     src = np.asarray(src, dtype=np.int64)
     dst = np.asarray(dst, dtype=np.int64)
@@ -65,6 +73,14 @@ def from_edges(src, dst, n: int, weights=None, sort: bool = True,
     elif sort and m:
         order = np.argsort(src, kind="stable")
         src, dst, weights = src[order], dst[order], weights[order]
+    elif m and not (np.diff(src) >= 0).all():
+        # bincount-built offsets + input-order indices only agree when the
+        # edges arrive grouped by source; anything else silently mispairs
+        # rows with destinations (the accidental-safety trap of the
+        # graph/weights.py callers)
+        raise ValueError(
+            "from_edges(sort=False) requires source-grouped input (src "
+            "non-decreasing); pass sort=True to group arbitrary edge lists")
     counts = np.bincount(src, minlength=n).astype(np.int64)
     offsets = np.zeros(n + 1, dtype=np.int64)
     np.cumsum(counts, out=offsets[1:])
@@ -146,6 +162,27 @@ def rows_dst_sorted(g: CSRGraph) -> bool:
     inner = row_starts[(row_starts > 0) & (row_starts < idx.size)]
     nd[inner - 1] = True                     # decreases across rows are fine
     return bool(nd.all())
+
+
+def graph_digest(g: CSRGraph) -> str:
+    """Content hash of a CSR graph: sha256 over dtype + shape + raw bytes
+    of offsets/indices/weights.  Two graphs share a digest iff they are the
+    same topology with the same edge probabilities, so this is the identity
+    the serving layer keys warm pools and cached results on — a mutated or
+    re-registered graph can never alias a stale entry (``repro.serve``,
+    ``repro.core.stream``).  Stable across processes (no python ``hash``).
+    """
+    h = hashlib.sha256(b"CSRGraph:")
+    for name, arr in (("offsets", g.offsets), ("indices", g.indices),
+                      ("weights", g.weights)):
+        a = np.asarray(arr)
+        h.update(name.encode())
+        h.update(b"=")
+        h.update(str(a.dtype).encode())
+        h.update(repr(a.shape).encode())
+        h.update(a.tobytes())
+        h.update(b";")
+    return h.hexdigest()
 
 
 def degrees(g: CSRGraph):

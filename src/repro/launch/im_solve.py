@@ -334,6 +334,41 @@ def _serve(args, g):
     asyncio.run(run())
 
 
+def _stream(args, g):
+    """``--stream-deltas``: streaming-graph demo (DESIGN.md §9) — one cold
+    solve, then ROUNDS random edge-delta batches through
+    ``resolve_incremental``, printing the pool-reuse bookkeeping per
+    round (kept rows never resample; θ tops back up on the mutated
+    graph)."""
+    from repro.core import stream
+
+    rng = np.random.default_rng(11)
+    problem = IMProblem(k=args.k, theta=args.stream_theta)
+    solver = IMMSolver(g, engine="queue", batch=128, seed=0,
+                       selection=args.selection)
+    t0 = time.time()
+    res = solver.solve(problem)
+    print(f"cold: theta={res.stats.theta} "
+          f"seeds={sorted(res.seeds.tolist())} estimate={res.spread:.1f} "
+          f"time={time.time() - t0:.2f}s")
+    n = g.n_nodes
+    for r in range(args.stream_deltas):
+        e = args.stream_edges
+        deltas = stream.make_deltas(adds=(
+            rng.integers(0, n, e), rng.integers(0, n, e),
+            (0.05 + 0.25 * rng.random(e)).astype(np.float32)))
+        t0 = time.time()
+        res = solver.resolve_incremental(problem, deltas)
+        info = solver.last_incremental
+        print(f"delta[{r}]: +{deltas.n_adds} edges "
+              f"affected={info['affected_nodes']} "
+              f"kept={info['rows_kept']}/{info['n_rr_before']} "
+              f"({info['surviving_fraction']:.1%}) "
+              f"reused={info['reused']} "
+              f"seeds={sorted(res.seeds.tolist())} "
+              f"estimate={res.spread:.1f} time={time.time() - t0:.2f}s")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=2000)
@@ -347,6 +382,16 @@ def main():
     ap.add_argument("--serve-theta", type=int, default=4096,
                     help="fixed θ for --serve requests (θ-pinned requests "
                          "are bit-identical to cold solves)")
+    ap.add_argument("--stream-deltas", type=int, default=None,
+                    metavar="ROUNDS",
+                    help="streaming-graph demo: apply ROUNDS random "
+                         "edge-delta batches through the incremental "
+                         "re-solve path, reusing untouched RR sets "
+                         "(DESIGN.md §9)")
+    ap.add_argument("--stream-edges", type=int, default=8,
+                    help="edges added per --stream-deltas batch (default 8)")
+    ap.add_argument("--stream-theta", type=int, default=4096,
+                    help="fixed θ for --stream-deltas solves (default 4096)")
     ap.add_argument("--selection", default="auto",
                     choices=("auto", "fused", "bitset", "celf-sketch"),
                     help="seed-selection backend (DESIGN.md §3)")
@@ -390,6 +435,11 @@ def main():
     g = weights.wc_weights(csr.from_edges(src, dst, args.n))
     if args.serve is not None:
         _serve(args, g)
+        return
+    if args.stream_deltas is not None:
+        if args.stream_deltas < 1 or args.stream_edges < 1:
+            raise SystemExit("--stream-deltas/--stream-edges: must be >= 1")
+        _stream(args, g)
         return
     problem = IMProblem(
         k=None if args.budget is not None else args.k,

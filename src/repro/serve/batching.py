@@ -1,7 +1,9 @@
 """Micro-batch execution: N compatible requests on one warm solver.
 
-A *batch* is a list of problems that share a registry key — same graph,
-same pool signature (model / ``t_rounds`` / ``node_weights``), same θ-mode
+A *batch* is a list of problems that share a registry key — same graph
+(by name *and* content digest: a replaced or delta-mutated graph keys
+apart, so a batch can never mix pools across graph versions), same pool
+signature (model / ``t_rounds`` / ``node_weights``), same θ-mode
 (``WarmSolverRegistry.solver_key``).  Within a batch the requests may
 differ in everything selection-side: ``k``, ``candidates``, ``costs`` +
 ``budget``, ``eps``/``ell``/``max_theta`` (the compatibility matrix of

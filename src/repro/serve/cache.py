@@ -1,12 +1,15 @@
 """Result cache for the IM serving layer.
 
-Keys are the *content* of a request — the graph name plus the problem's
-:meth:`~repro.core.problem.IMProblem.signature_digest` (sha256 over every
-field, arrays by dtype+shape+bytes) plus the solver-config discriminator
-the registry derives — so two requests hit the same entry iff a solve for
-one would be bit-identical to a solve for the other on the same warm
-solver.  Values are host-side :class:`~repro.core.problem.IMResult`
-objects (numpy seeds/gains + python scalars); treat them as immutable.
+Keys are the *content* of a request — the graph name **and its content
+digest** (:func:`repro.graph.csr.graph_digest` — a re-registered or
+delta-mutated graph can never return a pre-mutation cached result), plus
+the problem's :meth:`~repro.core.problem.IMProblem.signature_digest`
+(sha256 over every field, arrays by dtype+shape+bytes), plus the
+solver-config discriminator the registry derives — so two requests hit
+the same entry iff a solve for one would be bit-identical to a solve for
+the other on the same warm solver.  Values are host-side
+:class:`~repro.core.problem.IMResult` objects (numpy seeds/gains +
+python scalars); treat them as immutable.
 
 Plain LRU over an ``OrderedDict`` with hit/miss/eviction counters — the
 numbers surface in :class:`~repro.serve.front.ServeStats` and the

@@ -108,6 +108,11 @@ class ServeConfig:
     #                               circuit breaker
     breaker_cooldown_s: float = 1.0   # open -> half-open probe delay
     spill_dir: Optional[str] = None   # registry spill-on-evict directory
+    # ε-driven resample watermark (DESIGN.md §9): an entry whose θ-less
+    # shared pool has served this many requests since it was last sampled
+    # fresh is refreshed (pool dropped + resampled) before serving more.
+    # None = unbounded (the historical drift this knob exists to stop).
+    max_pool_staleness: Optional[int] = None
 
 
 @dataclass
@@ -185,6 +190,9 @@ class ServeStats:
     solver_retries: int = 0       # in-solver FaultPolicy retries (shared)
     breaker_trips: int = 0        # closed/half-open -> open transitions
     breakers_open: int = 0        # keys currently open or half-open
+    # ε-driven pool staleness (DESIGN.md §9)
+    pool_staleness: int = 0       # worst current staleness across entries
+    refreshes: int = 0            # watermark-forced pool resamples
 
 
 def build_service(graphs: dict, config: Optional[ServeConfig] = None
@@ -430,6 +438,12 @@ class IMService:
         must never serve again — DESIGN.md §8), then the error propagates
         to the caller's isolation/breaker logic."""
         entry = self.registry.get(reqs[0].graph, reqs[0].problem)
+        if (key[2] is None and self.config.max_pool_staleness is not None
+                and entry.staleness >= self.config.max_pool_staleness):
+            # ε-driven entries answer off one shared growing pool; past the
+            # resample watermark the pool is dropped and sampled fresh so
+            # pool-reuse staleness stays bounded (DESIGN.md §9)
+            self.registry.refresh_pool(entry)
         entry.in_use = True
         problems = [p.problem for p in reqs]
         t0 = loop.time()
@@ -454,6 +468,8 @@ class IMService:
         solve_s = loop.time() - t0
         self.occur_fastpath += fast_before
         entry.solves += len(reqs)
+        if key[2] is None:
+            entry.staleness += len(reqs)
         self.registry.account(entry)
         self.batches += 1
         self.occupancy_sum += len(reqs)
@@ -508,4 +524,8 @@ class IMService:
                             if self._policy is not None else 0),
             breaker_trips=sum(b.trips for b in self._breakers.values()),
             breakers_open=sum(1 for b in self._breakers.values()
-                              if b.state != "closed"))
+                              if b.state != "closed"),
+            pool_staleness=max(
+                (e.staleness for e in self.registry.entries.values()),
+                default=0),
+            refreshes=self.registry.pool_refreshes)

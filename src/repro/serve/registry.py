@@ -50,6 +50,7 @@ from typing import Hashable, Optional
 
 from repro.core.imm import IMMSolver
 from repro.core.problem import IMProblem
+from repro.graph.csr import graph_digest as _graph_digest
 
 # solver constructor options a registry may carry (forwarded verbatim)
 _SOLVER_OPTS = frozenset(("engine", "batch", "qcap", "ec", "model", "seed",
@@ -68,6 +69,8 @@ class RegistryStats:
     rehydrations: int = 0
     rehydrate_failures: int = 0
     quarantined: int = 0
+    graph_replacements: int = 0
+    pool_refreshes: int = 0
 
 
 @dataclass
@@ -80,6 +83,11 @@ class WarmEntry:
     solves: int = 0
     seq: int = 0                  # LRU clock (monotonic use counter)
     in_use: bool = False          # pinned while a batch executes on it
+    # ε-driven staleness bookkeeping (DESIGN.md §9): solve epochs served
+    # off this shared growing pool since it was last (re)sampled fresh,
+    # and how often the resample watermark forced a refresh
+    staleness: int = 0
+    refreshes: int = 0
 
 
 class WarmSolverRegistry:
@@ -110,6 +118,8 @@ class WarmSolverRegistry:
         self.solver_opts = dict(solver_opts or {})
         self.spill_dir = spill_dir
         self._graphs: dict = {}
+        self._digests: "dict[str, str]" = {}
+        self._versions: "dict[str, int]" = {}
         self._entries: "dict[Hashable, WarmEntry]" = {}
         self._clock = itertools.count(1)
         self.created = 0
@@ -119,18 +129,55 @@ class WarmSolverRegistry:
         self.rehydrations = 0
         self.rehydrate_failures = 0
         self.quarantines = 0
+        self.graph_replacements = 0
+        self.pool_refreshes = 0
 
     # -- graphs ------------------------------------------------------------
     def add_graph(self, name: str, g) -> None:
-        if name in self._graphs:
-            raise ValueError(f"graph {name!r} already registered")
+        """Register — or *replace* — the graph behind ``name``.
+
+        The name is only an address; the identity every key embeds is the
+        content digest (:func:`repro.graph.csr.graph_digest`).  Replacing a
+        name with different content bumps its monotone version and evicts
+        every idle warm entry keyed to the old content: those keys are
+        unreachable by new requests (their digest no longer matches), so
+        their pools/spills would only leak.  In-flight entries finish their
+        batch on the old content and age out via LRU — they can never serve
+        a post-replacement request either, for the same key reason.
+        """
+        dig = _graph_digest(g)
+        old = self._digests.get(name)
+        if old is not None and old != dig:
+            stale = [k for k, e in self._entries.items()
+                     if k[0] == name and not e.in_use]
+            for k in stale:
+                entry = self._entries.pop(k)
+                if entry.solver._sig is not None:
+                    lease = entry.solver.export_pool()
+                    self.bytes_freed += lease.pool_bytes()
+                    del lease
+                self.evictions += 1
+                self.clear_spill(k)
+            self.graph_replacements += 1
+            self._versions[name] = self._versions.get(name, 0) + 1
+        else:
+            self._versions.setdefault(name, 0)
         self._graphs[name] = g
+        self._digests[name] = dig
 
     def graph(self, name: str):
         return self._graphs[name]
 
     def has_graph(self, name: str) -> bool:
         return name in self._graphs
+
+    def graph_version(self, name: str) -> int:
+        """Monotone replacement counter for ``name`` (0 = first content)."""
+        return self._versions[name]
+
+    def graph_digest(self, name: str) -> str:
+        """Content digest of the graph currently behind ``name``."""
+        return self._digests[name]
 
     # -- keys --------------------------------------------------------------
     def _resolved_model(self, problem: IMProblem) -> str:
@@ -140,16 +187,27 @@ class WarmSolverRegistry:
 
     def solver_key(self, graph: str, problem: IMProblem) -> tuple:
         """(graph, pool signature, θ) — requests mapping to the same key
-        may share one warm solver *and* may be micro-batched together."""
-        return (graph, problem.pool_digest(model=self._resolved_model(problem)),
+        may share one warm solver *and* may be micro-batched together.
+
+        The pool signature mixes in the registered graph's *content digest*
+        (``pool_digest(graph_digest=...)``): an RR pool samples one
+        concrete graph, so a replaced or delta-mutated graph hashes to a
+        different key and can never borrow a pre-mutation pool (the
+        stale-graph serving bug this fixed).
+        """
+        return (graph,
+                problem.pool_digest(model=self._resolved_model(problem),
+                                    graph_digest=self._digests.get(graph)),
                 problem.theta)
 
     def cache_key(self, graph: str, problem: IMProblem) -> tuple:
         """Result-cache key: full problem content + the warm identity the
-        result was computed under (graph + resolved model; the registry's
-        solver_opts are service-constant, so they need no per-key bits)."""
-        return (graph, self._resolved_model(problem),
-                problem.signature_digest())
+        result was computed under (graph name *and* content digest +
+        resolved model; the registry's solver_opts are service-constant,
+        so they need no per-key bits).  The digest keeps a re-registered
+        graph from ever returning a pre-replacement cached ``IMResult``."""
+        return (graph, self._digests.get(graph),
+                self._resolved_model(problem), problem.signature_digest())
 
     # -- entries -----------------------------------------------------------
     @property
@@ -201,6 +259,21 @@ class WarmSolverRegistry:
         entry.bytes = entry.solver.pool_bytes()
         entry.seq = next(self._clock)
         self._enforce(keep=entry.key)
+
+    def refresh_pool(self, entry: WarmEntry) -> int:
+        """Resample watermark hit (DESIGN.md §9): drop an ε-driven entry's
+        shared growing pool so its next solve resamples from scratch.
+        Bounds the pool-reuse staleness ε-driven answers accumulate —
+        without this the shared pool only ever grows and every answer's
+        effective sampling law drifts further from a cold θ(ε) solve.
+        Returns the bytes dropped; resets the entry's staleness clock."""
+        freed = entry.solver.drop_pool()
+        entry.bytes = entry.solver.pool_bytes()
+        entry.staleness = 0
+        entry.refreshes += 1
+        self.pool_refreshes += 1
+        self.bytes_freed += freed
+        return freed
 
     def evict(self, key: Hashable) -> int:
         """Evict one entry; returns the pool bytes freed.  With a
@@ -282,4 +355,6 @@ class WarmSolverRegistry:
             memory_budget_bytes=self.memory_budget_bytes,
             spills=self.spills, rehydrations=self.rehydrations,
             rehydrate_failures=self.rehydrate_failures,
-            quarantined=self.quarantines)
+            quarantined=self.quarantines,
+            graph_replacements=self.graph_replacements,
+            pool_refreshes=self.pool_refreshes)

@@ -524,3 +524,126 @@ def test_coalesce_probability_equivalence_random_multigraph():
         assert got[key] == pytest.approx(expect[key], abs=1e-6), key
     assert csr_mod.coalesce_ic(gc) is gc            # idempotent, same object
     assert rrset.detect_dedup_mode(gc) == "none"
+
+
+# ------------------- streaming incremental re-solve (DESIGN.md §9, ISSUE 8)
+#
+# resolve_incremental keeps every RR row the deltas provably never touched
+# and tops θ back up on the post-delta graph.  Survivors are exact
+# post-delta samples *conditioned* on avoiding the changed reverse rows, so
+# the merged pool's law carries a residual term α·(law(·|A^c) − law) that
+# shrinks with the delta footprint — these tests police it empirically:
+# the merged pool must be KS-indistinguishable from the post-delta oracle
+# size law, and its Eq. 3 hit fraction must sit within the 5σ two-sample
+# bound of a cold post-delta solve's pool.
+
+def _pool_rows(solver):
+    snap = solver.store.snapshot()
+    flat = np.asarray(jax.device_get(snap.rr_flat))
+    ids = np.asarray(jax.device_get(snap.rr_ids))
+    valid = np.asarray(jax.device_get(snap.valid))
+    return flat[valid], ids[valid], snap.n_rr
+
+
+def _pool_hit_fraction(flat, ids, n_rr, seed_set):
+    return np.unique(ids[np.isin(flat, np.asarray(seed_set))]).size / n_rr
+
+
+def test_streaming_incremental_resolve_matches_cold_post_delta_law():
+    """Small-footprint delta (the documented operating regime): the merged
+    pool is KS-indistinguishable from a cold post-delta pool, and the
+    Eq. 3 hit fraction / solved spread agree to the 5σ two-sample bound."""
+    from repro.core import stream
+    from repro.core.imm import IMMSolver
+    from repro.core.problem import IMProblem
+    g = _graph()
+    p = IMProblem(k=3, theta=SPREAD_T)
+    inc = IMMSolver(g, engine="queue", batch=64, seed=21)
+    inc.solve(p)
+
+    # frontier = the least-frequent member of the solver's own pre-delta
+    # pool, so P[row touches the frontier] — the bias scale — is minimal
+    flat0, ids0, n0 = _pool_rows(inc)
+    memb = np.array([np.unique(ids0[flat0 == v]).size
+                     for v in range(g.n_nodes)])
+    deltas = stream.make_deltas(adds=([3], [int(np.argmin(memb))], [0.3]))
+
+    res_inc = inc.resolve_incremental(p, deltas)
+    info = inc.last_incremental
+    assert info["reused"] is True
+    assert info["surviving_fraction"] > 0.85     # the reuse is real
+    assert len(res_inc.seeds) == 3
+
+    new_g = stream.apply_edge_deltas(g, deltas)
+    assert csr_mod.graph_digest(inc.g) == csr_mod.graph_digest(new_g)
+    new_rev = csr_mod.reverse(new_g)
+
+    # KS: merged (survivors + top-up) pool sizes vs a cold post-delta
+    # solve's pool sizes (independent RNG stream)
+    cold = IMMSolver(new_g, engine="queue", batch=64, seed=77)
+    res_cold = cold.solve(p)
+    flat, ids, n_rr = _pool_rows(inc)
+    flat_c, ids_c, n_c = _pool_rows(cold)
+    sizes = np.bincount(ids, minlength=n_rr)
+    sizes_c = np.bincount(ids_c, minlength=n_c)
+    res = sps.ks_2samp(sizes, sizes_c)
+    assert res.pvalue > P_MIN, (res, sizes.mean(), sizes_c.mean())
+
+    # 5σ: Eq. 3 hit fraction of a fixed seed set, and the solved spreads
+    # (spread is n · hit-fraction of the returned seeds)
+    seed_set = _fixed_seed_set(new_rev)
+    p_inc = _pool_hit_fraction(flat, ids, n_rr, seed_set)
+    p_cold = _pool_hit_fraction(flat_c, ids_c, n_c, seed_set)
+    _assert_within_concentration(p_inc, n_rr, p_cold, n_c, "streaming")
+    n = new_g.n_nodes
+    _assert_within_concentration(res_inc.spread / n, n_rr,
+                                 res_cold.spread / n, n_c,
+                                 "streaming-spread")
+
+
+def test_streaming_residual_bias_within_documented_bound():
+    """Larger delta footprint: the merged pool's law is *allowed* to drift
+    from the cold law by the conditioning term — but no further.  DESIGN.md
+    §9's bound is TV(merged, law) ≤ β·P[row touches frontier] (β = kept
+    fraction), so the KS statistic must stay under that bound plus the
+    two-sample noise quantile; a cold pool meanwhile must match the serial
+    post-delta oracle outright (control: the sampler itself is unbiased)."""
+    from repro.core import stream
+    from repro.core.imm import IMMSolver
+    from repro.core.problem import IMProblem
+    g = _graph()
+    indeg = np.diff(np.asarray(csr_mod.reverse(g).offsets))
+    lo = np.argsort(indeg, kind="stable")[:2]
+    s0, d0, _ = csr_mod.to_edges(g)
+    j = int(np.argmin(indeg[d0]))
+    deltas = stream.make_deltas(
+        adds=([3, 12], [int(lo[0]), int(lo[1])], [0.35, 0.5]),
+        removes=([int(s0[j])], [int(d0[j])]))
+    aff = stream.affected_nodes(deltas)
+    p = IMProblem(k=3, theta=SPREAD_T)
+
+    inc = IMMSolver(g, engine="queue", batch=64, seed=21)
+    inc.solve(p)
+    inc.resolve_incremental(p, deltas)
+    beta = inc.last_incremental["surviving_fraction"]
+    assert inc.last_incremental["reused"] is True
+
+    new_g = stream.apply_edge_deltas(g, deltas)
+    cold = IMMSolver(new_g, engine="queue", batch=64, seed=77)
+    cold.solve(p)
+    flat, ids, n_rr = _pool_rows(inc)
+    flat_c, ids_c, n_c = _pool_rows(cold)
+
+    # control: the cold pool matches the serial post-delta oracle
+    sizes_c = np.bincount(ids_c, minlength=n_c)
+    ref = _oracle_sizes_ic(csr_mod.reverse(new_g), n_c, seed=31)
+    res = sps.ks_2samp(sizes_c, ref)
+    assert res.pvalue > P_MIN, (res, sizes_c.mean(), ref.mean())
+
+    # policed bound: merged-vs-cold KS ≤ β·P(touch) + noise quantile
+    sizes = np.bincount(ids, minlength=n_rr)
+    d_obs = sps.ks_2samp(sizes, sizes_c).statistic
+    p_touch = _pool_hit_fraction(flat_c, ids_c, n_c, aff)
+    d_noise = 1.63 * np.sqrt(1.0 / n_rr + 1.0 / n_c)   # c(0.01)·√(1/t1+1/t2)
+    assert d_obs <= beta * p_touch + d_noise, \
+        (d_obs, beta, p_touch, d_noise)

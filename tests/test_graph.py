@@ -113,3 +113,35 @@ def test_partition_edges_covers_all():
     flat = sorted(zip(np.asarray(sh.src).ravel()[np.asarray(sh.mask).ravel()].tolist(),
                       np.asarray(sh.dst).ravel()[np.asarray(sh.mask).ravel()].tolist()))
     assert flat == sorted(zip(src.tolist(), dst.tolist()))
+
+
+def test_from_edges_sort_false_requires_grouped_input():
+    # grouped (src non-decreasing) input builds the same CSR as sort=True
+    src = np.array([0, 0, 1, 3]); dst = np.array([2, 1, 3, 0])
+    g = csr_mod.from_edges(src, dst, 4, sort=False)
+    g2 = csr_mod.from_edges(src, dst, 4, sort=True)
+    assert np.array_equal(np.asarray(g.offsets), np.asarray(g2.offsets))
+    assert np.array_equal(np.asarray(g.indices), np.asarray(g2.indices))
+    # ungrouped input used to produce a silently corrupt CSR (bincount
+    # offsets paired with input-order indices); now it raises
+    with pytest.raises(ValueError, match="source-grouped"):
+        csr_mod.from_edges([2, 0, 1], [0, 1, 2], 3, sort=False)
+    # the graph/weights.py callers feed to_edges output (grouped by
+    # construction) into sort=False — they must keep passing
+    rs, rd = _random_edges(seed=11)
+    wg = weights.wc_weights(csr_mod.from_edges(rs, rd, 50))
+    assert wg.n_edges == len(rs)
+
+
+def test_graph_digest_content_identity():
+    src, dst = _random_edges(seed=4)
+    w = np.random.default_rng(0).random(len(src)).astype(np.float32)
+    g = csr_mod.from_edges(src, dst, 50, weights=w)
+    g_same = csr_mod.from_edges(src.copy(), dst.copy(), 50, weights=w.copy())
+    assert csr_mod.graph_digest(g) == csr_mod.graph_digest(g_same)
+    # any content change — weights or topology — changes the digest
+    w2 = w.copy(); w2[0] += 0.25
+    g_w = csr_mod.from_edges(src, dst, 50, weights=w2)
+    assert csr_mod.graph_digest(g_w) != csr_mod.graph_digest(g)
+    g_t = csr_mod.from_edges(src[:-1], dst[:-1], 50, weights=w[:-1])
+    assert csr_mod.graph_digest(g_t) != csr_mod.graph_digest(g)

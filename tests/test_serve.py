@@ -329,3 +329,88 @@ def test_cli_rejects_out_of_range_candidates_and_bad_weights():
     assert r.returncode != 0
     assert "Traceback" not in r.stderr
     assert "3 entries" in r.stderr and "n=50" in r.stderr
+
+
+# --------------------------- streaming graphs (DESIGN.md §9, satellite a)
+
+def test_reregistering_graph_with_new_edges_misses_cache_and_evicts(g):
+    """Regression for the stale-graph serving bug: registry/cache keys used
+    to embed only the graph *name*, so re-registering a name with different
+    edges kept serving pre-replacement pools and cached results."""
+    g2 = _wc_graph(seed=99)          # same n, different edges
+    p = IMProblem(k=3, theta=THETA)
+
+    reg = WarmSolverRegistry(solver_opts=OPTS)
+    reg.add_graph("g", g)
+    k1 = reg.solver_key("g", p)
+    c1 = reg.cache_key("g", p)
+    e = reg.get("g", p)
+    e.solver.solve(p)
+    reg.account(e)
+    assert reg.graph_version("g") == 0
+
+    reg.add_graph("g", g)            # identical content: no replacement
+    assert reg.graph_version("g") == 0
+    assert reg.snapshot().graph_replacements == 0
+    assert k1 in reg.entries
+
+    reg.add_graph("g", g2)           # new content: keys rotate, entry dies
+    assert reg.graph_version("g") == 1
+    st = reg.snapshot()
+    assert st.graph_replacements == 1 and st.evictions == 1
+    assert st.bytes_freed > 0
+    assert k1 not in reg.entries and not reg.entries
+    assert reg.solver_key("g", p) != k1
+    assert reg.cache_key("g", p) != c1
+
+    async def run():
+        svc = build_service({"g": g}, ServeConfig(solver_opts=OPTS))
+        async with svc:
+            r1 = await svc.submit("g", p)
+            r1b = await svc.submit("g", p)       # warm-path cache hit
+            svc.registry.add_graph("g", g2)      # mutate behind the name
+            r2 = await svc.submit("g", p)        # must MISS the stale cache
+            r2b = await svc.submit("g", p)
+        return r1, r1b, r2, r2b
+    r1, r1b, r2, r2b = asyncio.run(run())
+    assert not r1.cached and r1b.cached
+    assert not r2.cached and r2b.cached
+    assert r2b.result is r2.result
+    # the post-replacement answer is the g2 answer, not a pre-delta relic
+    ref = IMMSolver(g2, **OPTS).solve(p)
+    np.testing.assert_array_equal(r2.result.seeds, ref.seeds)
+    assert r2.result.spread == ref.spread
+
+
+def test_eps_driven_pool_staleness_watermark_refreshes(g):
+    """Satellite c: ε-driven entries share one growing pool; the resample
+    watermark (``max_pool_staleness``) bounds how many solve epochs may be
+    served off it before a forced fresh resample."""
+    async def run():
+        svc = build_service({"g": g}, ServeConfig(
+            solver_opts=OPTS, max_pool_staleness=2))
+        async with svc:
+            for k in (1, 2, 3, 4, 5):            # distinct: no cache hits
+                await svc.submit("g", IMProblem(k=k, eps=0.5))
+            st = svc.stats()
+        return st
+    st = asyncio.run(run())
+    # sequential submits -> staleness walks 1,2,(refresh)1,2,(refresh)1
+    assert st.served == 5
+    assert st.refreshes == 2
+    assert st.pool_staleness == 1
+    assert st.registry.pool_refreshes == 2
+    assert st.registry.bytes_freed > 0
+
+    # fixed-θ entries never trip the watermark (their pools are immutable
+    # at θ rows; staleness is an ε-mode concept)
+    async def run_theta():
+        svc = build_service({"g": g}, ServeConfig(
+            solver_opts=OPTS, max_pool_staleness=1))
+        async with svc:
+            for k in (1, 2, 3):
+                await svc.submit("g", IMProblem(k=k, theta=THETA))
+            st = svc.stats()
+        return st
+    st = asyncio.run(run_theta())
+    assert st.served == 3 and st.refreshes == 0 and st.pool_staleness == 0

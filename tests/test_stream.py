@@ -1,0 +1,277 @@
+"""Streaming graphs (DESIGN.md §9): edge deltas, windowed pools,
+incremental re-solve.
+
+Contracts under test (ISSUE acceptance criteria):
+* ``apply_edge_deltas`` is IC-exact — re-adding an edge merges through
+  ``coalesce_ic`` (p' = 1 − ∏(1 − p_i)), removal drops the merged edge,
+  strict mode rejects removals of absent edges and out-of-range
+  endpoints;
+* ``VersionedGraph`` versions are monotone and the digest tracks content;
+* windowed eviction (``evict_earliest_rounds`` / ``evict_to_bytes``)
+  keeps ``per_device_pool_bytes()`` under the bound, keeps *exactly* the
+  later rounds' rows, and rebuilds the packed sketch **bit-identically**
+  to a from-scratch ``sketch_packed_from_flat`` fold over the surviving
+  flat pool — including after further appends continue the fold;
+* the per-round watermark history survives a ``state``/``from_state``
+  checkpoint round-trip;
+* ``evict_rows_containing`` removes every RR row touching the
+  invalidation frontier and nothing else structural (counts add up);
+* ``IMMSolver.resolve_incremental`` reuses the surviving pool (tops θ
+  back up on the post-delta graph), records its bookkeeping in
+  ``last_incremental``, and falls back to a cold pool on signature
+  mismatch or when the surviving fraction is below the floor.
+"""
+import numpy as np
+import jax
+import pytest
+
+from repro.core import coverage as cov, sketch as sk, stream
+from repro.core.imm import IMMSolver
+from repro.core.problem import IMProblem
+from repro.graph import csr as csr_mod, generators, weights
+
+
+def _graph(n=40, m=200, seed=0):
+    src, dst = generators.erdos_renyi(n, m, seed=seed)
+    return weights.wc_weights(csr_mod.from_edges(src, dst, n))
+
+
+def _round_batch(rng, n, rows, max_len=6):
+    lens = rng.integers(1, max_len, rows)
+    w = int(lens.max())
+    nodes = np.zeros((rows, w), np.int64)
+    for i, ln in enumerate(lens):
+        nodes[i, :ln] = rng.choice(n, size=ln, replace=False)
+    return nodes, lens
+
+
+# ------------------------------------------------------- edge deltas
+
+def test_apply_edge_deltas_ic_merge_and_remove():
+    src = np.array([0, 0, 1, 2])
+    dst = np.array([1, 2, 2, 0])
+    w = np.array([0.5, 0.25, 0.125, 1.0], np.float32)
+    g = csr_mod.from_edges(src, dst, 3, weights=w)
+
+    # re-adding (0, 1) strengthens IC-exactly: 1 - (1-0.5)(1-0.5) = 0.75
+    g2 = stream.apply_edge_deltas(g, adds=([0], [1], [0.5]))
+    s2, d2, w2 = csr_mod.to_edges(g2)
+    got = {(int(a), int(b)): float(c) for a, b, c in zip(s2, d2, w2)}
+    assert g2.n_edges == 4
+    assert got[(0, 1)] == pytest.approx(0.75)
+    assert got[(0, 2)] == pytest.approx(0.25)      # untouched edges intact
+
+    # removal drops the merged edge entirely; adds of new edges append
+    g3 = stream.apply_edge_deltas(g, adds=([2], [1], [0.625]),
+                                  removes=([0], [2]))
+    s3, d3, w3 = csr_mod.to_edges(g3)
+    got = {(int(a), int(b)): float(c) for a, b, c in zip(s3, d3, w3)}
+    assert (0, 2) not in got
+    assert got[(2, 1)] == pytest.approx(0.625)
+    assert g3.n_edges == 4
+
+    # strict: absent removal raises and names the edge; lax mode ignores
+    with pytest.raises(ValueError, match=r"\(1, 0\)"):
+        stream.apply_edge_deltas(g, removes=([1], [0]))
+    g4 = stream.apply_edge_deltas(g, removes=([1], [0]), strict=False)
+    assert g4.n_edges == g.n_edges
+
+    # endpoint validation
+    with pytest.raises(ValueError, match="out of range"):
+        stream.apply_edge_deltas(g, adds=([0], [3], [0.5]))
+    with pytest.raises(ValueError, match="probabilities"):
+        stream.make_deltas(adds=([0], [1], [1.5]))
+
+
+def test_versioned_graph_and_affected_nodes():
+    vg = stream.VersionedGraph.wrap(_graph())
+    assert vg.version == 0 and vg.digest == csr_mod.graph_digest(vg.g)
+    d = stream.make_deltas(adds=([1, 2], [5, 7], [0.5, 0.5]),
+                           removes=None)
+    vg2 = vg.apply(d)
+    assert vg2.version == 1
+    assert vg2.digest != vg.digest
+    assert vg2.digest == csr_mod.graph_digest(vg2.g)
+    # the frontier is the *destinations* (reverse-adjacency rows touched)
+    np.testing.assert_array_equal(stream.affected_nodes(d), [5, 7])
+    assert bool(d) and not bool(stream.make_deltas())
+
+
+# ------------------------------------------- windowed eviction (tentpole)
+
+def test_evict_earliest_rounds_keeps_exactly_later_rounds():
+    rng = np.random.default_rng(3)
+    n = 35
+    store = cov.ShardedDeviceRRStore(n, capacity=8, sketch_k=64)
+    rounds = [_round_batch(rng, n, rows) for rows in (7, 5, 9, 6)]
+    for b in rounds:
+        store.append_batch(b)
+    assert store.n_rounds == 4 and store.n_rr == 27
+
+    st = store.evict_earliest_rounds(2)
+    assert st["rows_dropped"] == 12 and st["rows_kept"] == 15
+    assert st["rounds_dropped"] == 2
+    assert store.n_rr == 15 and store.n_rounds == 2
+
+    # surviving content == rounds 2..3 verbatim, ids renumbered densely
+    flat = np.asarray(jax.device_get(store._flat))[0]
+    ids = np.asarray(jax.device_get(store._ids))[0]
+    valid = np.asarray(jax.device_get(store._valid))[0]
+    got = {}
+    for f, i in zip(flat[valid], ids[valid]):
+        got.setdefault(int(i), set()).add(int(f))
+    want = {}
+    rid = 0
+    for nodes, lens in rounds[2:]:
+        for r, ln in enumerate(lens):
+            want[rid] = set(int(x) for x in nodes[r, :ln])
+            rid += 1
+    assert got == want
+
+    # clamping: asking for more rounds than exist empties the pool
+    st = store.evict_earliest_rounds(10)
+    assert store.n_rr == 0 and store.n_rounds == 0
+    assert store.evict_earliest_rounds(1)["rows_dropped"] == 0
+
+
+def test_evict_to_bytes_bounds_per_device_pool_bytes():
+    rng = np.random.default_rng(9)
+    n = 35
+    store = cov.ShardedDeviceRRStore(n, capacity=8)
+    for rows in (20, 20, 20, 20, 20):
+        store.append_batch(_round_batch(rng, n, rows))
+    b0 = store.per_device_pool_bytes()
+    bound = b0 // 2
+    st = store.evict_to_bytes(bound)
+    assert st["met"] is True
+    assert store.per_device_pool_bytes() <= bound
+    assert store.n_rounds >= 1 and store.n_rr > 0
+
+    # a bound below one round's footprint is best-effort: latest round
+    # always survives, met flag reports the miss honestly
+    st = store.evict_to_bytes(1)
+    assert st["met"] is False and store.n_rounds == 1 and store.n_rr > 0
+
+
+def test_sketch_rebuild_bit_identical_to_from_flat_fold():
+    """Acceptance: the post-eviction packed sketch equals a from-scratch
+    ``sketch_packed_from_flat`` fold over the surviving flat pool, and a
+    later append continues the incremental fold on top bit-identically."""
+    rng = np.random.default_rng(17)
+    n, k = 41, 64
+
+    def reference(store):
+        flat = store._flat[0]
+        ids = store._ids[0]
+        valid = store._valid[0]
+        return np.asarray(jax.device_get(sk.sketch_packed_from_flat(
+            flat, ids, valid, n_rows=store.sketch_rows, k=k, mode="mod")))
+
+    for evict in ("rounds", "membership"):
+        store = cov.ShardedDeviceRRStore(n, capacity=8, sketch_k=k,
+                                         sketch_mode="mod")
+        for rows in (9, 7, 11):
+            store.append_batch(_round_batch(rng, n, rows))
+        if evict == "rounds":
+            store.evict_earliest_rounds(2)
+        else:
+            store.evict_rows_containing([3, 5, 8])
+        np.testing.assert_array_equal(
+            np.asarray(jax.device_get(store.sketch_words())),
+            reference(store))
+        # the incremental fold composes with the rebuilt base
+        store.append_batch(_round_batch(rng, n, 8))
+        np.testing.assert_array_equal(
+            np.asarray(jax.device_get(store.sketch_words())),
+            reference(store))
+
+
+def test_round_history_survives_checkpoint_roundtrip():
+    rng = np.random.default_rng(23)
+    n = 30
+    store = cov.ShardedDeviceRRStore(n, capacity=8, sketch_k=32)
+    for rows in (6, 4, 8):
+        store.append_batch(_round_batch(rng, n, rows))
+    twin = cov.ShardedDeviceRRStore.from_state(store.state(), store.config())
+    assert twin.n_rounds == 3 and twin.n_rr == store.n_rr
+    a = store.evict_earliest_rounds(1)
+    b = twin.evict_earliest_rounds(1)
+    assert a == b and twin.n_rr == store.n_rr == 12
+    np.testing.assert_array_equal(
+        np.asarray(jax.device_get(twin.sketch_words())),
+        np.asarray(jax.device_get(store.sketch_words())))
+
+
+def test_evict_rows_containing_removes_exactly_touched_rows():
+    rng = np.random.default_rng(29)
+    n = 35
+    store = cov.ShardedDeviceRRStore(n, capacity=8)
+    batches = [_round_batch(rng, n, rows) for rows in (10, 10)]
+    for b in batches:
+        store.append_batch(b)
+    aff = np.array([2, 11, 19])
+    touched = sum(
+        1 for nodes, lens in batches for r, ln in enumerate(lens)
+        if np.isin(nodes[r, :ln], aff).any())
+    st = store.evict_rows_containing(aff)
+    assert st["rows_dropped"] == touched
+    assert st["rows_kept"] == 20 - touched == store.n_rr
+    assert st["affected_nodes"] == 3
+    flat = np.asarray(jax.device_get(store._flat))[0]
+    valid = np.asarray(jax.device_get(store._valid))[0]
+    assert not np.isin(flat[valid], aff).any()
+    # membership eviction collapses the window history to one round
+    assert store.n_rounds == (1 if store.n_rr else 0)
+
+
+# --------------------------------------------- incremental re-solve
+
+def test_resolve_incremental_reuses_surviving_pool():
+    g = _graph(seed=2)
+    p = IMProblem(k=3, theta=2048)
+    solver = IMMSolver(g, engine="queue", batch=64, seed=5)
+    solver.solve(p)
+    assert solver.store.n_rr == 2048
+
+    deltas = stream.make_deltas(adds=([0, 1, 2], [5, 9, 13],
+                                      [0.4, 0.4, 0.4]))
+    res = solver.resolve_incremental(p, deltas)
+    info = solver.last_incremental
+    assert info["reused"] is True
+    assert info["n_rr_before"] == 2048
+    assert info["rows_dropped"] + info["rows_kept"] == 2048
+    assert 0.0 < info["surviving_fraction"] < 1.0
+    assert info["affected_nodes"] == 3
+    # θ topped back up on the post-delta graph (batch-granular: the kept
+    # rows offset the stream, so the top-up may overshoot θ slightly)
+    assert solver.store.n_rr >= 2048
+    assert res.stats.theta == 2048 and len(res.seeds) == 3
+    assert ("delta", info["rows_dropped"],
+            info["rows_kept"]) in res.stats.history
+    # the solver's graph moved forward
+    want = stream.apply_edge_deltas(g, deltas)
+    assert csr_mod.graph_digest(solver.g) == csr_mod.graph_digest(want)
+
+    # surviving-fraction floor forces a cold restart
+    solver2 = IMMSolver(g, engine="queue", batch=64, seed=5)
+    solver2.solve(p)
+    solver2.resolve_incremental(p, deltas, min_surviving_fraction=1.01)
+    assert solver2.last_incremental["reused"] is False
+    assert solver2.last_incremental["rows_dropped"] > 0
+    assert solver2.store.n_rr == 2048
+
+
+def test_resolve_incremental_signature_mismatch_goes_cold():
+    g = _graph(seed=2)
+    solver = IMMSolver(g, engine="queue", batch=64, seed=5)
+    solver.solve(IMProblem(k=2, theta=1024))
+    deltas = stream.make_deltas(adds=([4], [6], [0.5]))
+    res = solver.resolve_incremental(IMProblem(k=2, theta=1024, model="lt"),
+                                     deltas)
+    assert solver.last_incremental["reused"] is False
+    assert solver.last_incremental["n_rr_before"] == 0
+    assert len(res.seeds) == 2
+
+    with pytest.raises(ValueError, match="t_rounds"):
+        solver.resolve_incremental(
+            IMProblem(k=2, theta=512, t_rounds=2), deltas)
