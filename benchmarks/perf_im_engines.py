@@ -44,13 +44,18 @@ SELECTION_PATHS = ("fused", "bitset", "celf-sketch")
 
 
 def bench_selection(n=2000, r=4, k=10, pool_rows=2048, batch=256,
-                    sketch_k=512, reps=3, seed=0):
+                    sketch_k=512, reps=3, seed=0,
+                    eval_batches=(8, 32, 128)):
     """Time the three selection backends on one shared RR pool.
 
     The pool is sampled once (queue engine) into a ``DeviceRRStore`` with an
     incremental coverage sketch; each path then selects the same k seeds.
     First call per path is reported separately as compile+run; steady-state
-    is the min over ``reps`` repeats.  Writes BENCH_selection.json.
+    is the min over ``reps`` repeats.  The celf-sketch path additionally
+    sweeps the exact-verification batch width (``IMMSolver(eval_batch=)`` /
+    ``--eval-batch``): wider batches amortize sweep launches against wasted
+    speculative exact evals, and the sweep records where that trade lands
+    on this pool.  Writes BENCH_selection.json.
     """
     g = ba_graph(n, r)
     g_rev = csr_mod.reverse(g)
@@ -98,6 +103,29 @@ def bench_selection(n=2000, r=4, k=10, pool_rows=2048, batch=256,
         if method == "celf":
             out["paths"][path]["exact_evals"] = stats["n_exact_evals"]
             out["paths"][path]["eval_calls"] = stats["n_eval_calls"]
+            sweep = {}
+            for eb in eval_batches:
+                st = {}
+                res_eb = cov.select_seeds_celf(store, k, eval_batch=eb,
+                                               stats_out=st)
+                jax.block_until_ready(res_eb.seeds)   # compile pass
+                best_eb = float("inf")
+                for _ in range(reps):
+                    t0 = time.perf_counter()
+                    res_eb = cov.select_seeds_celf(store, k, eval_batch=eb)
+                    jax.block_until_ready(res_eb.seeds)
+                    best_eb = min(best_eb, time.perf_counter() - t0)
+                assert (np.asarray(res_eb.seeds).tolist()
+                        == seeds), "eval_batch must not change seeds"
+                sweep[str(eb)] = {
+                    "steady_s": round(best_eb, 4),
+                    "exact_evals": st["n_exact_evals"],
+                    "eval_calls": st["n_eval_calls"],
+                }
+                report(f"perf_im/selection/celf-eb{eb}", best_eb * 1e6,
+                       f"steady={best_eb * 1e3:.1f}ms;"
+                       f"evals={st['n_exact_evals']}")
+            out["paths"][path]["eval_batch_sweep"] = sweep
         report(f"perf_im/selection/{path}", best * 1e6,
                f"steady={best * 1e3:.1f}ms;first={first:.2f}s")
     out["seeds_identical"] = all(
@@ -179,6 +207,210 @@ def bench_sharded(n=100_000, rows=1 << 20, k=10, sketch_k=1024,
     out["seeds_identical"] = seeds_by["fused"] == seeds_by["celf-sketch"]
     os.makedirs(OUT_DIR, exist_ok=True)
     with open(os.path.join(OUT_DIR, "BENCH_sharded.json"), "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
+def bench_fused(n=100_000, rows=1 << 20, k=10, sketch_k=1024,
+                batch_rows=None, mean_len=8, mesh_spec=None, seed=0,
+                quality_n=5000, quality_r=4, quality_k=8,
+                quality_theta=16384, quality_sketch_k=8192,
+                quality_batch=512, min_mem_ratio=10.0):
+    """Pool-free fused sample→sketch pipeline vs the exact sharded pipeline
+    (the ``mode="approximate"`` acceptance benchmark).  Three legs, one
+    JSON (``experiments/bench/BENCH_fused.json``):
+
+    * **scale** — identical synthetic frontier batches drive a pool-free
+      :class:`SketchRRStore` and an exact :class:`ShardedDeviceRRStore`
+      side by side at the post-bitset-matrix scale (default n=1e5,
+      θ=2^20).  The sketch leg runs *first* and a live-array scan then
+      proves the flat pool was never allocated: no int32/bool device
+      array at pool scale exists anywhere.  The memory ratio (exact
+      per-device pool bytes / per-replica sketch bytes) is **asserted**
+      ≥ ``min_mem_ratio``; cold (compile included) and steady build+select
+      wall-clock ratios are both recorded.
+    * **quality** — end-to-end ``mode="approximate"`` solve on a real WC
+      graph in the genuine estimate regime (θ ≫ sketch_k).  The fused
+      sketch engine preserves the sampling RNG stream, so the exact twin
+      solve materialises *the same* RR pool the approximate solve folded
+      away; re-scoring the approximate seeds on that pool must land inside
+      the certified ``[lo_rows, hi_rows]`` interval (hard assert), and the
+      MC spread must lie within the certified spread bounds (30 % slack
+      for MC noise, matching the conformance test).
+    * **exact-regime** — θ ≤ sketch_k ⇒ the approximate solve is asserted
+      bit-identical to the fused-exact solve (injective mod bucketing).
+    """
+    from repro.core import forward
+    from repro.core.imm import IMMSolver
+    from repro.core.problem import IMProblem
+    from repro.launch.mesh import make_sample_mesh
+    if batch_rows is None:
+        batch_rows = max(256, min(8192, rows // 128))
+    mesh = make_sample_mesh(mesh_spec)
+
+    def feed(store):
+        """Identical synthetic batch stream for both stores (same rng
+        seed): selection cost does not depend on how rows were sampled."""
+        rng = np.random.default_rng(seed)
+        stride = max(n // (2 * mean_len + 2), 1)
+        t0 = time.perf_counter()
+        while store.n_rr < rows:
+            cnt = min(batch_rows, rows - store.n_rr)
+            lens = rng.integers(1, 2 * mean_len, cnt)
+            base = rng.integers(0, n, cnt)
+            nodes = (base[:, None]
+                     + np.arange(lens.max(), dtype=np.int64)[None, :]
+                     * stride) % n
+            store.append_batch((nodes, lens))
+        return time.perf_counter() - t0
+
+    # ---- sketch pipeline first: the pool must never exist ---------------
+    sk_store = cov.SketchRRStore(n, sketch_k=sketch_k, mesh=mesh)
+    sk_build = feed(sk_store)
+    assert sk_store.pool_free and sk_store.per_device_pool_bytes() == 0
+    t0 = time.perf_counter()
+    res_sk = cov.select_seeds_sketch(sk_store, k)
+    jax.block_until_ready(res_sk.seeds)
+    sk_sel_cold = time.perf_counter() - t0
+    info = {}
+    t0 = time.perf_counter()
+    res_sk = cov.select_seeds_sketch(sk_store, k, info_out=info)
+    jax.block_until_ready(res_sk.seeds)
+    sk_sel = time.perf_counter() - t0
+    # acceptance: nothing pool-shaped is live anywhere on device.  The
+    # batch feed stays below pool scale (batch_rows·2·mean_len < rows), so
+    # any int32/bool array with ≥ rows elements could only be the pool.
+    assert batch_rows * 2 * mean_len < rows, "feed batches reach pool scale"
+    leaked = [a.shape for a in jax.live_arrays()
+              if a.dtype in (np.dtype(np.int32), np.dtype(bool))
+              and a.size >= rows]
+    assert not leaked, f"pool-scale arrays live in pool-free mode: {leaked}"
+
+    # ---- exact pipeline on the same batch stream -------------------------
+    ex_store = cov.ShardedDeviceRRStore(n, capacity=batch_rows * mean_len,
+                                        sketch_k=sketch_k, mesh=mesh)
+    ex_build = feed(ex_store)
+    assert ex_store.n_rr == sk_store.n_rr == rows
+    t0 = time.perf_counter()
+    res_ex = ex_store.select(k, method="flat")
+    jax.block_until_ready(res_ex.seeds)
+    ex_sel_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res_ex = ex_store.select(k, method="flat")
+    jax.block_until_ready(res_ex.seeds)
+    ex_sel = time.perf_counter() - t0
+
+    mem_ratio = ex_store.per_device_pool_bytes() / max(
+        sk_store.sketch_bytes(), 1)
+    assert mem_ratio >= min_mem_ratio, (
+        f"memory ratio {mem_ratio:.1f}x < {min_mem_ratio}x")
+    wall_cold = (ex_build + ex_sel_cold) / max(sk_build + sk_sel_cold, 1e-9)
+    wall_steady = (ex_build + ex_sel) / max(sk_build + sk_sel, 1e-9)
+    seeds_sk = np.asarray(res_sk.seeds).tolist()
+    seeds_ex = np.asarray(res_ex.seeds).tolist()
+    report("perf_im/fused/scale", (sk_build + sk_sel) * 1e6,
+           f"mem={mem_ratio:.1f}x;wall={wall_steady:.2f}x")
+
+    out = {
+        "scale": {
+            "graph": {"kind": "synthetic", "n": n, "mean_len": mean_len},
+            "mesh": {"devices": sk_store.n_shards},
+            "rows": rows, "sketch_k": sk_store.sketch_k,
+            "pool_free_live_scan": "passed",
+            "memory": {
+                "exact_per_device_pool_bytes":
+                    ex_store.per_device_pool_bytes(),
+                "sketch_bytes_per_replica": sk_store.sketch_bytes(),
+                "ratio": round(mem_ratio, 2),
+                "min_ratio_asserted": min_mem_ratio},
+            "wall_s": {
+                "sketch": {"build": round(sk_build, 2),
+                           "select_cold": round(sk_sel_cold, 3),
+                           "select": round(sk_sel, 3)},
+                "exact": {"build": round(ex_build, 2),
+                          "select_cold": round(ex_sel_cold, 3),
+                          "select": round(ex_sel, 3)},
+                "ratio_cold": round(wall_cold, 2),
+                "ratio_steady": round(wall_steady, 2)},
+            "seeds": {"sketch": seeds_sk, "exact": seeds_ex,
+                      "overlap": len(set(seeds_sk) & set(seeds_ex))},
+            "estimate": {kk: (float(info[kk]) if kk != "saturated"
+                              else bool(info[kk]))
+                         for kk in ("occ_union", "est_rows", "lo_rows",
+                                    "hi_rows", "rel_error", "saturated")},
+        },
+        "params": {"k": k, "seed": seed, "batch_rows": batch_rows},
+    }
+
+    # ---- quality: certified interval vs the real (re-materialised) pool --
+    gq = ba_graph(quality_n, quality_r)
+    se = IMMSolver(gq, engine="queue", batch=quality_batch, seed=seed + 1,
+                   selection="fused")
+    t0 = time.perf_counter()
+    r_ex = se.solve(IMProblem(k=quality_k, theta=quality_theta))
+    q_ex_wall = time.perf_counter() - t0
+    sa = IMMSolver(gq, engine="queue", batch=quality_batch, seed=seed + 1,
+                   sketch_k=quality_sketch_k)
+    t0 = time.perf_counter()
+    r_ap = sa.solve(IMProblem(k=quality_k, theta=quality_theta,
+                              mode="approximate"))
+    q_ap_wall = time.perf_counter() - t0
+    info_q = dict(sa._sketch_info)
+    assert sa.store.per_device_pool_bytes() == 0
+    assert se.store.n_rr == sa.store.n_rr   # same RNG stream, same θ walk
+    # the exact twin's pool IS the approximate solve's never-materialised
+    # pool: the approximate seeds' true coverage on it must respect the
+    # certificate
+    snap = se.store.snapshot()
+    flat, ids, valid = (np.asarray(x) for x in
+                        (snap.rr_flat, snap.rr_ids, snap.valid))
+    hit = np.isin(flat, np.asarray(r_ap.seeds)) & valid
+    rows_cov = int(np.unique(ids[hit]).size)
+    assert info_q["lo_rows"] <= rows_cov <= info_q["hi_rows"], (
+        rows_cov, info_q)
+    lo, hi = r_ap.spread_bounds
+    mc_ap = forward.ic_spread(jax.random.key(123), gq,
+                              np.asarray(r_ap.seeds).tolist(), n_sims=256)
+    mc_ex = forward.ic_spread(jax.random.key(123), gq,
+                              np.asarray(r_ex.seeds).tolist(), n_sims=256)
+    assert lo * 0.7 <= mc_ap <= hi * 1.3, (lo, mc_ap, hi)
+    report("perf_im/fused/quality", q_ap_wall * 1e6,
+           f"mc={mc_ap:.0f}∈[{lo:.0f},{hi:.0f}];exact_mc={mc_ex:.0f}")
+    out["quality"] = {
+        "graph": {"kind": "barabasi_albert", "n": quality_n,
+                  "r": quality_r, "weights": "wc"},
+        "theta": quality_theta, "sketch_k": quality_sketch_k,
+        "k": quality_k, "n_rr": int(sa.store.n_rr),
+        "wall_s": {"approximate": round(q_ap_wall, 2),
+                   "exact": round(q_ex_wall, 2)},
+        "rows_covered_on_exact_pool": rows_cov,
+        "certified_rows": {"lo": float(info_q["lo_rows"]),
+                           "est": float(info_q["est_rows"]),
+                           "hi": float(info_q["hi_rows"]),
+                           "saturated": bool(info_q["saturated"])},
+        "spread_bounds": [round(lo, 1), round(hi, 1)],
+        "mc_spread": {"approximate": round(float(mc_ap), 1),
+                      "exact": round(float(mc_ex), 1)},
+        "seeds": {"approximate": np.asarray(r_ap.seeds).tolist(),
+                  "exact": np.asarray(r_ex.seeds).tolist()},
+        "mc_within_bounds": bool(lo * 0.7 <= mc_ap <= hi * 1.3),
+    }
+
+    # ---- exact-regime identity: θ ≤ sketch_k ⇒ bit-identical seeds -------
+    th0 = min(quality_sketch_k // 2, 1024)
+    e1 = IMMSolver(gq, engine="queue", batch=quality_batch, seed=seed + 2,
+                   selection="fused")
+    r1 = e1.solve(IMProblem(k=quality_k, theta=th0))
+    e2 = IMMSolver(gq, engine="queue", batch=quality_batch, seed=seed + 2,
+                   sketch_k=quality_sketch_k)
+    r2 = e2.solve(IMProblem(k=quality_k, theta=th0, mode="approximate"))
+    identical = bool(np.array_equal(np.asarray(r1.seeds),
+                                    np.asarray(r2.seeds)))
+    assert identical, (np.asarray(r1.seeds), np.asarray(r2.seeds))
+    out["exact_regime"] = {"theta": th0, "seeds_identical": identical}
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, "BENCH_fused.json"), "w") as f:
         json.dump(out, f, indent=2)
     return out
 
@@ -529,6 +761,10 @@ if __name__ == "__main__":
     ap.add_argument("--sharded", action="store_true",
                     help="mesh-sharded selection sweep past the bitset-"
                          "matrix limit (writes BENCH_sharded.json)")
+    ap.add_argument("--fused-sketch", action="store_true",
+                    help="pool-free fused sample→sketch vs exact pipeline: "
+                         "memory ratio (asserted ≥10×), wall-clock, and "
+                         "certified-quality legs (writes BENCH_fused.json)")
     ap.add_argument("--variants", action="store_true",
                     help="IMProblem variant sweep: plain/weighted/budgeted/"
                          "candidates/mrim (writes BENCH_variants.json)")
@@ -559,6 +795,10 @@ if __name__ == "__main__":
     elif args.variants:
         bench_variants(n=args.n, r=args.r, k=args.k, eps=args.eps,
                        max_theta=args.max_theta, batch=args.batch)
+    elif args.fused_sketch:
+        rows = args.rows if args.rows is not None else 1 << 20
+        bench_fused(n=args.n, rows=rows, k=args.k,
+                    sketch_k=args.sketch_k, mesh_spec=args.mesh)
     elif args.sharded:
         rows = args.rows if args.rows is not None else 1 << 20
         bench_sharded(n=args.n, rows=rows, k=args.k,

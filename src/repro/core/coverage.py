@@ -40,6 +40,7 @@ from repro.compat import shard_map_unchecked, pvary
 from repro.core import sketch as sketch_mod
 from repro.core.packing import rank_positions
 from repro.ft.failures import PoolAllocError
+from repro.kernels import ops as kops
 from repro.kernels.bitset import _popcount
 
 
@@ -1021,8 +1022,12 @@ class ShardedDeviceRRStore:
         return _slice_extent(self.sketch_words_mesh(k), t=self.n_nodes + 1)
 
     def select(self, k: int, method: str = "auto",
-               spec: "SelectionSpec | None" = None) -> "CoverageResult":
+               spec: "SelectionSpec | None" = None,
+               eval_batch: int | None = None) -> "CoverageResult":
         if method in ("celf", "celf-sketch"):
+            if eval_batch is not None:
+                return select_seeds_celf(self, k, spec=spec,
+                                         eval_batch=eval_batch)
             return select_seeds_celf(self, k, spec=spec)
         if spec is not None:
             return select_variant(self, spec, method=method)
@@ -1037,6 +1042,208 @@ DeviceRRStore = ShardedDeviceRRStore
 @functools.partial(jax.jit, static_argnames=("t",))
 def _slice_extent(x, *, t):
     return x[0, :t]
+
+
+@functools.lru_cache(maxsize=None)
+def _mesh_sketch_fns(mesh: Mesh):
+    """Per-mesh jitted shard_map program for the *pool-free* frontier fold
+    (``mode="approximate"``, DESIGN.md §10).
+
+    Unlike the exact store's replicated ``sketch_fold`` (every device folds
+    the identical full batch — cheap next to pool appends it rides along
+    with), here the fold IS the hot loop, so the batch is split: each shard
+    scatter-ORs only its contiguous ``rloc``-row block (D× less work per
+    device) into a zero delta, and the deltas merge by one psum-OR
+    (all_gather + OR-reduce).  Row ids are computed over the *full*
+    replicated batch before slicing, so bucketing is canonical batch-order
+    numbering — identical on any mesh size; OR is associative and
+    commutative, so the merged words are bit-identical at any shard count.
+    """
+    ax = mesh.axis_names[0]
+    b3 = P(ax, None, None)
+
+    @functools.partial(jax.jit,
+                       static_argnames=("k", "mode", "rloc", "interpret"),
+                       donate_argnums=(0,))
+    def frontier_fold(sk, nodes, lens, base, *, k, mode, rloc, interpret):
+        def local(sk, nodes, lens, base):
+            w = nodes.shape[1]
+            row_valid = lens.astype(jnp.int32) > 0
+            rid = base + jnp.cumsum(row_valid, dtype=jnp.int32) - 1
+            i = jax.lax.axis_index(ax)
+            nb = jax.lax.dynamic_slice(nodes, (i * rloc, 0), (rloc, w))
+            lb = jax.lax.dynamic_slice(lens, (i * rloc,), (rloc,))
+            rb = jax.lax.dynamic_slice(rid, (i * rloc,), (rloc,))
+            # interpret resolved by the caller outside this trace: it picks
+            # the fold algorithm (kernel vs sort-based), so a stale baked-in
+            # resolution must not survive the jit cache
+            part = sketch_mod.fold_frontier_rows(
+                jnp.zeros_like(sk[0]), nb, lb, rb, k=k, mode=mode,
+                interpret=interpret)
+            g = jax.lax.all_gather(part, ax)
+            delta = jax.lax.reduce(g, jnp.uint32(0),
+                                   jax.lax.bitwise_or, (0,))
+            return (sk[0] | delta)[None]
+        return shard_map_unchecked(
+            local, mesh=mesh, in_specs=(b3, P(), P(), P()),
+            out_specs=b3)(sk, nodes, lens, base)
+
+    class Fns:
+        pass
+
+    fns = Fns()
+    fns.frontier_fold = frontier_fold
+    return fns
+
+
+class SketchRRStore:
+    """Pool-free sketch-only RR "store" — the ``mode="approximate"`` engine
+    state (DiFuseR mode, DESIGN.md §10).
+
+    Every sampling micro-step's frontier folds straight into the packed
+    (D, sketch_rows, k/32) per-node occupancy words via the Pallas
+    scatter-OR kernel; the flat pool / ids / valid buffers of
+    :class:`ShardedDeviceRRStore` are **never allocated** — O(n·k/8) bytes
+    per device independent of θ, vs the exact pool's O(θ·E[|RR|]).  The
+    only sampling state besides the words is the per-shard row counter
+    (host mirror of the same explicit (D, 2) scalar fetch the exact store
+    performs per append), which drives the IMM θ accounting.
+
+    What is *lost* relative to the exact store is the exact-acceptance
+    contract: no pool exists to verify marginals against, so selection
+    (:func:`select_seeds_sketch`) runs on linear-counting estimates and
+    results carry a certified error bound instead of exactness.  Row
+    weights, budgets and MRIM tags all need the pool and are rejected at
+    the :class:`~repro.core.problem.IMProblem` layer.
+    """
+
+    pool_free = True
+    row_weighted = False
+
+    def __init__(self, n_nodes: int, sketch_k: int | None = None,
+                 sketch_mode: str = "mod", mesh: Mesh | None = None):
+        if n_nodes >= np.iinfo(np.int32).max:
+            raise ValueError("item space must fit int32")
+        self.n_nodes = n_nodes
+        self.mesh = mesh if mesh is not None else _default_mesh()
+        self.axis = self.mesh.axis_names[0]
+        self.n_shards = d = int(self.mesh.devices.size)
+        self._sh_buf = NamedSharding(self.mesh, P(self.axis, None))
+        self._sh_vec = NamedSharding(self.mesh, P(self.axis))
+        self._sh_b3 = NamedSharding(self.mesh, P(self.axis, None, None))
+        self._sh_rep = NamedSharding(self.mesh, P())
+        self.sketch_mode = sketch_mode
+        self.sketch_k = sketch_mod.resolve_sketch_k(
+            sketch_k if sketch_k is not None
+            else ShardedDeviceRRStore.DEFAULT_SKETCH_K)
+        self.sketch_rows = -(-(n_nodes + 1) // d) * d
+        self._sk_words = jax.device_put(
+            np.zeros((d, self.sketch_rows, self.sketch_k // 32), np.uint32),
+            self._sh_b3)
+        self._nrr_loc = np.zeros(d, np.int64)    # the θ row counter
+        self._t_loc = np.zeros(d, np.int64)      # element count (stats only)
+        self.alloc_check = None                  # API compat; never grows
+        self._fns = _mesh_sketch_fns(self.mesh)
+
+    # -- sizes -------------------------------------------------------------
+    @property
+    def n_rr(self) -> int:
+        return int(self._nrr_loc.sum())
+
+    @property
+    def n_elems(self) -> int:
+        return int(self._t_loc.sum())
+
+    def per_device_pool_bytes(self) -> int:
+        """No pool buffers exist — the point of the mode."""
+        return 0
+
+    def sketch_bytes(self) -> int:
+        return self.sketch_rows * (self.sketch_k // 32) * 4
+
+    # -- append (the fused sample→sketch hot path) -------------------------
+    def append_batch(self, batch, row_w=None) -> None:
+        """Fold one padded frontier batch into the packed words — the
+        entire "append".  Same calling convention as the exact store (the
+        engines and the solver's fault-policy retry wrapper are shared);
+        the one explicit host fetch is the (D, 2) shard-count scalar."""
+        from repro.kernels import ops as kops
+        if row_w is not None:
+            raise ValueError("pool-free sketch store is unweighted")
+        nodes, lens = (batch.nodes, batch.lengths) \
+            if hasattr(batch, "nodes") else batch
+        nodes = jnp.asarray(nodes)
+        lens = jnp.asarray(lens)
+        if nodes.ndim != 2 or lens.shape != (nodes.shape[0],):
+            raise ValueError("append_batch wants padded (R, W) nodes + (R,) "
+                             "lengths")
+        r, w = nodes.shape
+        d = self.n_shards
+        rloc = -(-r // d)
+        pad = rloc * d - r
+        if pad:
+            nodes, lens = _pad_batch_rows(nodes, lens, pad=pad,
+                                          n=self.n_nodes)
+        counts = np.asarray(jax.device_get(
+            _shard_counts(lens, d=d, width=w)), np.int64)
+        base = jax.device_put(np.int32(self.n_rr), self._sh_rep)
+        nodes_rep = jax.device_put(nodes, self._sh_rep)
+        lens_rep = jax.device_put(lens, self._sh_rep)
+        self._sk_words = self._fns.frontier_fold(
+            self._sk_words, nodes_rep, lens_rep, base,
+            k=self.sketch_k, mode=self.sketch_mode, rloc=rloc,
+            interpret=kops.resolve_interpret(None))
+        self._t_loc += counts[:, 0]
+        self._nrr_loc += counts[:, 1]
+
+    # -- checkpoint state (im-pool v2 sub-kind) ----------------------------
+    def state(self) -> dict:
+        return {"sk_words": np.asarray(jax.device_get(self._sk_words)),
+                "t_loc": self._t_loc.copy(),
+                "nrr_loc": self._nrr_loc.copy()}
+
+    def config(self) -> dict:
+        return {"kind": "sketch",
+                "n_nodes": int(self.n_nodes),
+                "n_shards": int(self.n_shards),
+                "sketch_k": self.sketch_k,
+                "sketch_mode": self.sketch_mode,
+                "row_weighted": False}
+
+    @classmethod
+    def from_state(cls, state: dict, config: dict, mesh: Mesh | None = None):
+        store = cls(config["n_nodes"], sketch_k=config["sketch_k"],
+                    sketch_mode=config["sketch_mode"], mesh=mesh)
+        if store.n_shards != int(config["n_shards"]):
+            raise ValueError(
+                f"sketch checkpoint was saved on {config['n_shards']} "
+                f"shard(s) but the restore mesh has {store.n_shards}; "
+                "restore onto a same-size mesh")
+        store._sk_words = jax.device_put(state["sk_words"], store._sh_b3)
+        store._t_loc = np.asarray(state["t_loc"], np.int64).copy()
+        store._nrr_loc = np.asarray(state["nrr_loc"], np.int64).copy()
+        return store
+
+    # -- views + selection -------------------------------------------------
+    def sketch_words_mesh(self, k: int | None = None):
+        if k is not None and \
+                sketch_mod.resolve_sketch_k(k) != self.sketch_k:
+            raise ValueError(
+                f"store maintains an incremental sketch of k="
+                f"{self.sketch_k}; requested k={k} cannot be honored")
+        return self._sk_words
+
+    def sketch_words(self, k: int | None = None):
+        return _slice_extent(self.sketch_words_mesh(k), t=self.n_nodes + 1)
+
+    def select(self, k: int, method: str = "auto",
+               spec: "SelectionSpec | None" = None,
+               eval_batch: int | None = None) -> "CoverageResult":
+        if spec is not None:
+            raise ValueError("pool-free sketch store supports plain (or "
+                             "candidate-masked) selection only; weighted/"
+                             "budgeted/MRIM specs need the exact store")
+        return select_seeds_sketch(self, k)
 
 
 def merge_stores(stores: list[RRStore]) -> RRStore:
@@ -1509,16 +1716,18 @@ def _mesh_select_fns(mesh: Mesh):
         return shard_map_unchecked(
             local, mesh=mesh, in_specs=(vec,), out_specs=P())(wvec)
 
-    @functools.partial(jax.jit, static_argnames=("stripe",))
-    def sweep(sk, cov_sk, *, stripe):
+    @functools.partial(jax.jit, static_argnames=("stripe", "interpret"))
+    def sweep(sk, cov_sk, *, stripe, interpret=None):
         """Δocc lower bounds for every node in one mesh-parallel sweep:
         each device scores its contiguous stripe of candidates against its
         sketch replica; one psum of the disjoint stripes yields the full
-        replicated vector (the sketch sweep is embarrassingly parallel)."""
+        replicated vector (the sketch sweep is embarrassingly parallel).
+        ``interpret`` must be resolved by the caller outside the trace —
+        it picks the popcount algorithm (kernel vs SWAR fallback)."""
         def local(sk, cov):
             i = jax.lax.axis_index(ax)
             g = sketch_mod.union_gains_stripe(
-                sk[0], cov[0], i * stripe, stripe)
+                sk[0], cov[0], i * stripe, stripe, interpret=interpret)
             full = jax.lax.dynamic_update_slice(
                 jnp.zeros(sk.shape[1], jnp.int32), g, (i * stripe,))
             return jax.lax.psum(full, ax)
@@ -1743,6 +1952,7 @@ def select_seeds_celf(store: "ShardedDeviceRRStore", k: int, *,
         sk_words = store.sketch_words_mesh()
         sk_k = int(sk_words.shape[2]) * 32
         stripe = store.sketch_rows // d
+        itp = kops.resolve_interpret(None)
         cov_sk = jax.device_put(
             np.zeros((d, sk_words.shape[2]), np.uint32), store._sh_buf)
     n_evals = 0
@@ -1772,7 +1982,7 @@ def select_seeds_celf(store: "ShardedDeviceRRStore", k: int, *,
             # eval-batch composition affects only the eval count, never
             # the accepted seed)
             deltas = np.asarray(jax.device_get(
-                fns.sweep(sk_words, cov_sk, stripe=stripe)))[:n]
+                fns.sweep(sk_words, cov_sk, stripe=stripe, interpret=itp)))[:n]
             key = deltas.astype(np.int64) * (n + 1) - node_ids
             eval_exact(np.argpartition(-key, c - 1)[:c])
         while True:
@@ -1806,6 +2016,95 @@ def select_seeds_celf(store: "ShardedDeviceRRStore", k: int, *,
     return CoverageResult(
         seeds=jax.device_put(np.asarray(seeds, np.int32)),
         gains=jax.device_put(np.asarray(gains, np.int32)),
+        frac=jax.device_put(np.float32(frac)))
+
+
+def select_seeds_sketch(store, k: int, *, cand=None,
+                        info_out: dict | None = None) -> CoverageResult:
+    """Greedy selection on sketch estimates alone — no exact verification.
+
+    The approximate-mode (pool-free) selection path: per seed one
+    mesh-parallel Δocc sweep over all candidates (striped across devices,
+    psum of disjoint int32 stripes — bit-identical at any shard count), a
+    host argmax (first max == lowest id, matching ``jnp.argmax``), and one
+    psum-OR union fold.  No pool exists to verify against, so this is the
+    documented departure from the exact-acceptance contract of
+    :func:`select_seeds_celf`; what survives is a *certified* error
+    estimate from linear counting, surfaced via ``info_out`` and
+    ``IMResult.spread_bounds``:
+
+    * ``lo_rows`` — Δocc never exceeds the exact marginal (new buckets need
+      new rows), so the summed gains are a deterministic lower bound on the
+      rows the seed set covers.
+    * ``hi_rows`` — the linear-counting estimate widened by the z-sigma
+      relative StdErr at the realized load
+      (:func:`~repro.core.sketch.linear_count_rel_error`); on a
+      *saturated* union row the estimate carries no information beyond its
+      k·ln(k) ceiling, so the upper bound widens to all of ``n_rr`` rather
+      than reporting a silently-finite estimate.
+
+    **Exact regime:** with ``"mod"`` bucketing and ``n_rr <= sketch_k`` the
+    bucketing is injective, Δocc *is* the exact marginal gain, and the
+    seeds are bit-identical to the fused scan (ties to lowest id in both;
+    a zero-gain argmax is still picked, matching the scan's fixed-length
+    behavior).  The estimate is then ``occ_union`` itself, error 0.
+
+    Works on any store exposing the sketch surface (``SketchRRStore`` or a
+    sketch-maintaining ``ShardedDeviceRRStore``).  ``cand`` optionally
+    masks selection to a candidate set.
+    """
+    n = store.n_nodes
+    d = store.n_shards
+    fns = _mesh_select_fns(store.mesh)
+    sk_words = store.sketch_words_mesh()
+    sk_k = int(sk_words.shape[2]) * 32
+    stripe = store.sketch_rows // d
+    itp = kops.resolve_interpret(None)
+    cov_sk = jax.device_put(
+        np.zeros((d, sk_words.shape[2]), np.uint32), store._sh_buf)
+    mask = (np.ones(n, bool) if cand is None
+            else np.asarray(cand, bool)[:n].copy())
+    n_rr = store.n_rr
+    seeds, gains = [], []
+    for _ in range(k):
+        deltas = np.asarray(jax.device_get(
+            fns.sweep(sk_words, cov_sk, stripe=stripe, interpret=itp)))[:n].astype(np.int64)
+        score = np.where(mask, deltas, -1)
+        u = int(np.argmax(score))        # first max == lowest id on ties
+        if score[u] < 0:                 # no feasible candidate left
+            break
+        seeds.append(u)
+        gains.append(int(deltas[u]))
+        mask[u] = False
+        cov_sk = fns.union(cov_sk, sk_words,
+                           jax.device_put(np.int32(u), store._sh_rep))
+    occ_union = int(sum(gains))
+    exact_regime = (store.sketch_mode == "mod" and n_rr <= sk_k)
+    if exact_regime:
+        est_rows, lo_rows, hi_rows = float(occ_union), occ_union, occ_union
+        saturated, rel_err = False, 0.0
+    else:
+        est_arr, sat_arr = sketch_mod.linear_count_saturated(
+            [occ_union], sk_k)
+        saturated = bool(sat_arr[0])
+        est_rows = min(float(est_arr[0]), float(n_rr))
+        rel_err = float(np.asarray(
+            sketch_mod.linear_count_rel_error(est_arr, sk_k))[0])
+        lo_rows = min(occ_union, n_rr)   # certified: Δocc <= exact marginal
+        hi_rows = (n_rr if saturated
+                   else min(float(n_rr), est_rows * (1.0 + rel_err)))
+    if info_out is not None:
+        info_out.update(occ_union=occ_union, est_rows=est_rows,
+                        lo_rows=lo_rows, hi_rows=hi_rows,
+                        saturated=saturated, rel_error=rel_err,
+                        exact_regime=exact_regime, sketch_k=sk_k, n_rr=n_rr)
+    # pad to k with the sentinel item (trimmed by the solver's live mask),
+    # matching the fixed-length contract of the device backends
+    pad = [n] * (k - len(seeds))
+    frac = est_rows / max(n_rr, 1)
+    return CoverageResult(
+        seeds=jax.device_put(np.asarray(seeds + pad, np.int32)),
+        gains=jax.device_put(np.asarray(gains + [0] * len(pad), np.int32)),
         frac=jax.device_put(np.float32(frac)))
 
 
@@ -1870,6 +2169,7 @@ def _celf_variant(store: "ShardedDeviceRRStore", spec: SelectionSpec, *,
         sk_words = store.sketch_words_mesh()
         sk_k = int(sk_words.shape[2]) * 32
         stripe = store.sketch_rows // d
+        itp = kops.resolve_interpret(None)
         cov_sk = jax.device_put(
             np.zeros((d, sk_words.shape[2]), np.uint32), store._sh_buf)
     n_evals = 0
@@ -1923,7 +2223,7 @@ def _celf_variant(store: "ShardedDeviceRRStore", spec: SelectionSpec, *,
         fresh[:] = False
         if use_sketch:
             deltas = np.asarray(jax.device_get(
-                fns.sweep(sk_words, cov_sk, stripe=stripe)))[:n]
+                fns.sweep(sk_words, cov_sk, stripe=stripe, interpret=itp)))[:n]
             est = np.where(feas, deltas / costs if use_costs
                            else deltas.astype(np.float64), -np.inf)
             order = np.lexsort((node_ids, -est))

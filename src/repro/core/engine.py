@@ -203,6 +203,37 @@ def resolve_qcap(qcap: Optional[int], g_rev: CSRGraph) -> int:
     return qcap if qcap is not None else g_rev.n_nodes
 
 
+class FusedSketchEngine:
+    """Adapter marking an engine as the pool-free fused sample→sketch path
+    (``IMProblem(mode="approximate")``, DESIGN.md §10).
+
+    Sampling itself is untouched — every batch the inner engine emits is
+    byte-for-byte what the exact path would have appended (so a fixed-θ
+    approximate solve consumes the *identical* RNG stream as the exact
+    one).  What changes is the destination: the solver pairs this adapter
+    with a :class:`~repro.core.coverage.SketchRRStore`, whose
+    ``append_batch`` folds the frontier straight into the packed per-node
+    sketches and never allocates the flat pool.  The adapter exists so the
+    solver signature / stats / checkpoints name the mode explicitly and
+    so engine-specific extensions (``sample_device``, ``sample_sharded``,
+    ``mesh``, ``device_resident``) pass through untouched.
+    """
+
+    def __init__(self, inner: "SamplerEngine"):
+        self._inner = inner
+        self.name = f"fused-sketch[{inner.name}]"
+
+    def __getattr__(self, attr):
+        # only consulted for attributes not set on the adapter itself —
+        # delegates sample/sample_device/sample_sharded/mesh/
+        # device_resident/... verbatim
+        return getattr(self._inner, attr)
+
+    @property
+    def item_space(self) -> int:
+        return self._inner.item_space
+
+
 # ---------------------------------------------------------------------------
 # Engine adapters
 # ---------------------------------------------------------------------------

@@ -69,8 +69,8 @@ from repro.core import sketch as sketch_mod
 from repro.core.oracle import imm_theta_params
 from repro.core.problem import (IMProblem, IMResult, ResolvedProblem,
                                 problem_from_state, problem_state)
-from repro.core.engine import (SamplerEngine, make_engine, resolve_engine_name,
-                               split_key as _split_key)
+from repro.core.engine import (FusedSketchEngine, SamplerEngine, make_engine,
+                               resolve_engine_name, split_key as _split_key)
 from repro.ft.failures import DeadlineExceeded, FaultPolicy
 
 
@@ -174,6 +174,7 @@ class IMMSolver:
                  batch: Optional[int] = None, qcap: Optional[int] = None,
                  ec: Optional[int] = None, model: Optional[str] = None,
                  selection: str = "auto", sketch_k: Optional[int] = None,
+                 eval_batch: Optional[int] = None,
                  mesh=None, seed: int = 0,
                  fault_policy: Optional[FaultPolicy] = None,
                  checkpoint_dir: Optional[str] = None,
@@ -210,6 +211,13 @@ class IMMSolver:
         self.selection = selection
         self._sel_method = _SELECTION_METHODS[selection]
         self._sketch_k_arg = sketch_k
+        # CELF exact-verification batch width (celf/celf-sketch selection):
+        # candidates re-evaluated exactly per device pass.  None keeps the
+        # backend default; benchmarks/perf_im_engines --selection-only
+        # sweeps it (BENCH_selection.json)
+        if eval_batch is not None and int(eval_batch) < 1:
+            raise ValueError("eval_batch must be >= 1")
+        self.eval_batch = None if eval_batch is None else int(eval_batch)
         self._mesh = mesh
         self.key = jax.random.key(seed)
         self._engine_obj = None
@@ -218,6 +226,9 @@ class IMMSolver:
         self._sig_problem = None
         self._row_weight_mode = False
         self._node_w_dev = None
+        # selection-side certificate of the last approximate-mode (pool-
+        # free) solve: lo/hi covered-row bounds, saturation, rel. error
+        self._sketch_info = None
         if isinstance(engine, str):
             if engine == "mrim":
                 # fail fast like the historical API: the tagged engine's
@@ -294,6 +305,12 @@ class IMMSolver:
         if sketch_k is None and (self._sel_method == "celf"
                                  or problem.early_exit):
             sketch_k = cov.ShardedDeviceRRStore.DEFAULT_SKETCH_K
+        # approximate (pool-free) mode: the sketch IS the pool, so one
+        # always exists, auto-sized from (ε, n) so the certified estimator
+        # error stays within ε/2 at design load (core/sketch.auto_sketch_k)
+        approx = problem.mode == "approximate"
+        if approx and sketch_k is None:
+            sketch_k = sketch_mod.auto_sketch_k(problem.eps, self.n)
         # engine/pool lifecycle is keyed on the problem's canonical pool
         # signature (content hash of model/t_rounds/node_weights — see
         # IMProblem.pool_digest): problems differing only in weight *values*
@@ -339,6 +356,10 @@ class IMMSolver:
                 f"item space of {engine.item_space}, not the problem's "
                 f"{r.n_items} items; tagged engines need a matching "
                 f"t_rounds= on the IMProblem")
+        if approx:
+            # same sampler, same RNG stream — only the batch *destination*
+            # changes: appends fold into the pool-free sketch store below
+            engine = FusedSketchEngine(engine)
         self._engine_obj = engine
         self.engine_name = getattr(engine, "name", type(engine).__name__)
         self._row_weight_mode = row_weight_mode
@@ -349,6 +370,11 @@ class IMMSolver:
         if _store is not None:                   # adopt_pool() hand-off
             want_k = (sketch_mod.resolve_sketch_k(sketch_k)
                       if sketch_k is not None else None)
+            if getattr(_store, "pool_free", False) != approx:
+                raise ValueError(
+                    "adopted pool kind does not match the problem mode: a "
+                    "pool-free sketch store can only back mode='approximate'"
+                    " solves, and an exact pool only exact ones")
             if (_store.n_nodes != engine.item_space
                     or _store.row_weighted != row_weight_mode
                     or _store.sketch_k != want_k):
@@ -362,6 +388,12 @@ class IMMSolver:
                 raise ValueError("adopted pool lives on a different mesh "
                                  "than the solver's mesh= argument")
             self._store_obj = _store
+        elif approx:
+            # pool-free: the flat pool / ids / valid buffers are never
+            # allocated — frontier batches fold straight into the packed
+            # sketch words (the DiFuseR-mode memory model, DESIGN.md §10)
+            self._store_obj = cov.SketchRRStore(
+                engine.item_space, sketch_k=sketch_k, mesh=self._mesh)
         else:
             self._store_obj = cov.ShardedDeviceRRStore(
                 engine.item_space, sketch_k=sketch_k, mesh=self._mesh,
@@ -471,6 +503,10 @@ class IMMSolver:
     # -- durable pool checkpoints (DESIGN.md §8) ---------------------------
     POOL_CKPT_FORMAT = "im-pool"
     POOL_CKPT_VERSION = 1
+    # v2 sub-kind: pool-free (mode="approximate") checkpoints carry only
+    # the sketch words + row counters + RNG cursor; the store config's
+    # "kind" field dispatches the restore class
+    POOL_CKPT_VERSION_SKETCH = 2
 
     def save_pool(self, ckpt_dir: str, *, keep: Optional[int] = None) -> str:
         """Write the prepared pool as a durable checkpoint: sharded store
@@ -491,7 +527,9 @@ class IMMSolver:
         st["history"] = [list(h) for h in st["history"]]
         meta = {
             "format": self.POOL_CKPT_FORMAT,
-            "version": self.POOL_CKPT_VERSION,
+            "version": (self.POOL_CKPT_VERSION_SKETCH
+                        if getattr(self.store, "pool_free", False)
+                        else self.POOL_CKPT_VERSION),
             "store": self.store.config(),
             "problem": problem_state(self._sig_problem),
             "stats": st,
@@ -519,14 +557,18 @@ class IMMSolver:
         if meta.get("format") != self.POOL_CKPT_FORMAT:
             raise ValueError(f"{ckpt_dir!r} step {step} is not an im-pool "
                              f"checkpoint (format={meta.get('format')!r})")
-        if meta.get("version") != self.POOL_CKPT_VERSION:
+        if meta.get("version") not in (self.POOL_CKPT_VERSION,
+                                       self.POOL_CKPT_VERSION_SKETCH):
             raise ValueError(
                 f"pool checkpoint version {meta.get('version')} not "
-                f"supported (want {self.POOL_CKPT_VERSION})")
+                f"supported (want {self.POOL_CKPT_VERSION} or "
+                f"{self.POOL_CKPT_VERSION_SKETCH})")
         items = {k.strip("[]'\""): v
                  for k, v in ckpt_mod.restore_items(ckpt_dir, step).items()}
-        store = cov.ShardedDeviceRRStore.from_state(
-            items, meta["store"], mesh=self._mesh)
+        kind = meta["store"].get("kind", "sharded")
+        store_cls = (cov.SketchRRStore if kind == "sketch"
+                     else cov.ShardedDeviceRRStore)
+        store = store_cls.from_state(items, meta["store"], mesh=self._mesh)
         st = dict(meta["stats"])
         st["mesh_shape"] = tuple(st["mesh_shape"])
         st["history"] = [tuple(h) for h in st["history"]]
@@ -689,6 +731,16 @@ class IMMSolver:
         est_ub = r.scale * min(float(n_rr), top) / max(n_rr, 1)
         return est_ub < threshold
 
+    def _approx_bounds(self, r: ResolvedProblem, info: dict):
+        """Certified spread bounds from a sketch-selection certificate
+        (:func:`~repro.core.coverage.select_seeds_sketch` ``info_out``):
+        lower from the deterministic Δocc sum, upper from the z-sigma
+        linear-counting error — widened to the whole pool on a saturated
+        union row, never a silently-finite estimate."""
+        n_rr = max(int(info.get("n_rr", 0)), 1)
+        return (r.scale * float(info["lo_rows"]) / n_rr,
+                r.scale * float(info["hi_rows"]) / n_rr)
+
     def _degraded_result(self, r: ResolvedProblem) -> IMResult:
         """Deadline-clipped answer from the pool sampled so far (DESIGN.md
         §8): greedy over the packed coverage sketch (certified Δ-occupancy
@@ -707,6 +759,28 @@ class IMMSolver:
         if n_rr == 0:
             raise DeadlineExceeded("deadline expired before any sampling "
                                    "round completed")
+        if getattr(st, "pool_free", False):
+            # approximate mode clipped mid-solve: its selection path is
+            # already the certified sketch greedy — run it over whatever
+            # was folded so far and mark the answer degraded
+            info = {}
+            res = cov.select_seeds_sketch(st, r.k_steps,
+                                          cand=r.cand_mask_items,
+                                          info_out=info)
+            seeds, gains, frac = jax.device_get(
+                (res.seeds, res.gains, res.frac))
+            seeds, gains = np.asarray(seeds), np.asarray(gains)
+            live = seeds < r.n_items
+            seeds, gains = seeds[live], gains[live]
+            frac = float(frac)
+            self._materialize_stats()
+            self._stats.frac_covered = frac
+            self._stats.variant = p.variant
+            return IMResult(
+                seeds=seeds.astype(np.int64), spread=r.scale * frac,
+                gains=gains.astype(np.int64), frac=frac,
+                stats=self.stats, problem=p, n_nodes=self.n,
+                degraded=True, spread_bounds=self._approx_bounds(r, info))
         fns = cov._mesh_select_fns(st.mesh)
         # exact per-item row counts: the union upper bound + the
         # sketch-free fallback ranking (one mesh reduction, explicit fetch)
@@ -808,10 +882,23 @@ class IMMSolver:
         def _expired() -> bool:
             return deadline is not None and time.monotonic() >= deadline
 
+        self._sketch_info = None
+
         def _select():
-            fn = (lambda: self.store.select(r.k_steps,
-                                            method=self._sel_method,
-                                            spec=spec))
+            if getattr(self.store, "pool_free", False):
+                # approximate mode: no pool to verify against — selection
+                # runs purely on sketch estimates and leaves its error
+                # certificate in _sketch_info for the final spread_bounds
+                info = {}
+                self._sketch_info = info
+                fn = (lambda: cov.select_seeds_sketch(
+                    self.store, r.k_steps, cand=r.cand_mask_items,
+                    info_out=info))
+            else:
+                fn = (lambda: self.store.select(r.k_steps,
+                                                method=self._sel_method,
+                                                spec=spec,
+                                                eval_batch=self.eval_batch))
             if self.fault_policy is not None:
                 # ctx identifies the request so a match-gated injector can
                 # poison one problem in a batch (serving isolation tests)
@@ -893,9 +980,11 @@ class IMMSolver:
         self._stats.variant = p.variant
         self._stats.budget_spent = spent
         spread = scale * frac                                    # Eq. (3)
+        bounds = (self._approx_bounds(r, self._sketch_info)
+                  if self._sketch_info else None)
         return IMResult(seeds=seeds, spread=spread, gains=gains, frac=frac,
                         stats=self.stats, problem=p, n_nodes=self.n,
-                        cost=spent)
+                        cost=spent, spread_bounds=bounds)
 
     # -- streaming graphs (DESIGN.md §9) -----------------------------------
     def resolve_incremental(self, problem: IMProblem, deltas, *,
@@ -938,6 +1027,11 @@ class IMMSolver:
                 "resolve_incremental does not support MRIM (t_rounds=): "
                 "the round-tagged item space has no per-node invalidation "
                 "frontier")
+        if problem.mode == "approximate":
+            raise ValueError(
+                "resolve_incremental needs the exact pool (mode="
+                "'approximate' keeps no RR rows to invalidate); re-solve "
+                "from a cold sketch instead")
         d = stream_mod.as_deltas(deltas)
         new_g = stream_mod.apply_edge_deltas(self.g, d)
         aff = stream_mod.affected_nodes(d)
@@ -986,12 +1080,12 @@ class IMMSolver:
 
 
 _SOLVER_KEYS = frozenset(("engine", "batch", "qcap", "ec", "model", "seed",
-                          "selection", "sketch_k", "mesh", "fault_policy",
-                          "checkpoint_dir", "checkpoint_every",
-                          "checkpoint_keep"))
+                          "selection", "sketch_k", "eval_batch", "mesh",
+                          "fault_policy", "checkpoint_dir",
+                          "checkpoint_every", "checkpoint_keep"))
 _PROBLEM_KEYS = frozenset(("model", "ell", "max_theta", "node_weights",
                            "costs", "budget", "candidates", "t_rounds",
-                           "theta", "early_exit"))
+                           "theta", "early_exit", "mode"))
 
 
 def imm(g: CSRGraph, k: Optional[int] = None, eps: Optional[float] = None,

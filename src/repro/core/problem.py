@@ -95,9 +95,12 @@ def _digest_value(h: "hashlib._Hash", name: str, value) -> None:
 # fields whose value changes what the *sampler* produces (and therefore
 # which engine + RR pool a solve needs): the diffusion model picks the
 # engine, t_rounds the tagged item space, node_weights the root
-# distribution.  Everything else (k, eps, candidates, costs, budget, theta,
-# ...) only changes selection / the θ schedule and can share a pool.
-_POOL_FIELDS = ("model", "t_rounds", "node_weights")
+# distribution, mode the store species itself (a pool-free sketch store
+# can never back an exact solve or vice versa — keying it here separates
+# warm-solver registry entries and serving micro-batches in one place).
+# Everything else (k, eps, candidates, costs, budget, theta, ...) only
+# changes selection / the θ schedule and can share a pool.
+_POOL_FIELDS = ("model", "t_rounds", "node_weights", "mode")
 
 
 @dataclass(frozen=True)
@@ -123,8 +126,29 @@ class IMProblem:
     max_theta: Optional[int] = None
     theta: Optional[int] = None
     early_exit: bool = False
+    mode: str = "exact"
 
     def __post_init__(self):
+        if self.mode not in ("exact", "approximate"):
+            raise ValueError(f"unknown mode {self.mode!r}; expected 'exact' "
+                             "or 'approximate'")
+        if self.mode == "approximate":
+            # the pool-free engine scores seeds on row-count sketches only;
+            # anything that weights rows or re-reads the pool after
+            # sampling (budget ratios, MRIM round tags) needs the exact
+            # store.  Candidate restriction is fine — it only masks the
+            # sweep.
+            if self.node_weights is not None:
+                raise ValueError("mode='approximate' does not support "
+                                 "node_weights (row-weighted pools need the "
+                                 "exact store)")
+            if self.budget is not None:
+                raise ValueError("mode='approximate' does not support "
+                                 "budget= (cost-ratio greedy needs exact "
+                                 "marginals)")
+            if self.t_rounds is not None:
+                raise ValueError("mode='approximate' does not support "
+                                 "t_rounds= (MRIM needs the tagged pool)")
         if (self.k is None) == (self.budget is None):
             raise ValueError("exactly one of k= (cardinality) or budget= "
                              "(budgeted IM) must be set")

@@ -49,6 +49,7 @@ tests) is classic linear counting: ``n̂ = k · ln(k / (k − occ))``.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -124,6 +125,53 @@ def fold_batch_packed(words, nodes, lens, row_base, *, k, mode):
     return scatter_or_bits(words, v, b)
 
 
+def fold_frontier_rows(words, nodes, lens, row_ids, *, k, mode,
+                       interpret=None):
+    """Fold a padded frontier batch into the packed words — the pool-free
+    hot path (``mode="approximate"``).
+
+    Unlike :func:`fold_batch_packed` (sized for occasional pool-side
+    folds), this commits the raw (row, bucket) pairs without dedup: OR is
+    idempotent, so duplicates are harmless.  On compiled backends the pairs
+    go straight through :func:`~repro.kernels.sketch.sketch_scatter_or` —
+    O(E) serial RMW, the moral ``atomicOr`` loop of gIM.  Under interpret
+    mode (CPU) that kernel's per-element load/store degrades to a full
+    (R, W) copy per pair, so the fold falls back to the vectorized
+    sort-based :func:`scatter_or_bits` — property-tested bit-identical to
+    the kernel, so the dispatch is invisible in results.  ``interpret``
+    resolves through the shared kernel policy; jitted callers must resolve
+    it *outside* their trace and pass the concrete bool (it picks the
+    algorithm, so a baked-in stale choice would survive jit caching).
+
+    ``row_ids`` are the per-row global RR ids (precomputed by the caller so
+    sharded callers can number over the full batch); rows with length 0 are
+    padding.
+    """
+    from repro.kernels import ops as kops
+    r, w = nodes.shape
+    n_rows = words.shape[0]
+    lens = jnp.minimum(jnp.maximum(lens.astype(jnp.int32), 0), w)
+    mask = jnp.arange(w, dtype=jnp.int32)[None, :] < lens[:, None]
+    b = jnp.broadcast_to(
+        bucket_of(row_ids, k, mode)[:, None], (r, w)).reshape(-1)
+    v = jnp.where(mask, nodes.astype(jnp.int32), n_rows).reshape(-1)
+    if kops.resolve_interpret(interpret):
+        return scatter_or_bits(words, v, b)
+    return kops.sketch_scatter_or(words, v, b, interpret=False)
+
+
+def fold_frontier_packed(words, nodes, lens, row_base, *, k, mode,
+                         interpret=None):
+    """:func:`fold_frontier_rows` with canonical batch-order row numbering
+    (``row_base`` = global rows before this batch) — the single-device
+    convenience entry; bit-identical to :func:`fold_batch_packed` on the
+    same batch."""
+    row_valid = lens.astype(jnp.int32) > 0
+    rid = row_base + jnp.cumsum(row_valid, dtype=jnp.int32) - 1
+    return fold_frontier_rows(words, nodes, lens, rid, k=k, mode=mode,
+                              interpret=interpret)
+
+
 def flat_to_packed_bits(flat, ids, valid, *, n_rows, k, mode):
     """(flat pool → (v, b) pairs) for :func:`scatter_or_bits`."""
     b = bucket_of(ids, k, mode)
@@ -182,31 +230,53 @@ def _minus_base(union_occ, cov_words):
     return union_occ - _popcount(cov_words).sum(dtype=jnp.int32)
 
 
-def union_gains(sk_words, cov_words):
+def _union_popcount_rows(rows, cov_words):
+    """``popcount(rows[v] | cov)`` per row, SWAR-vectorised — the interpret
+    fallback for the union-popcount kernel.  Under interpret mode the Pallas
+    per-block loop degrades to full-array copies, so the sweep runs this
+    elementwise form instead; integer arithmetic makes it bit-identical to
+    the kernel output.
+    """
+    u = rows | cov_words[None, :]
+    return _popcount(u).astype(jnp.int32).sum(axis=1, dtype=jnp.int32)
+
+
+def union_gains(sk_words, cov_words, *, interpret=None):
     """Estimated marginal occupancy Δocc(v | S) for every node, in one
     kernel sweep: ``popcount(sketch[v] | cov) − popcount(cov)``.
 
     Returns a device (R,) int32 vector (R = sketch rows; callers slice off
     the sentinel row).  Δocc is a certified lower bound on the exact
-    marginal coverage (see module docstring).
+    marginal coverage (see module docstring).  ``interpret`` picks the
+    algorithm (kernel vs SWAR fallback) like :func:`fold_frontier_rows`;
+    jitted callers must resolve it outside their trace.
     """
     from repro.kernels import ops as kops
-    return _minus_base(kops.sketch_union_popcount(sk_words, cov_words),
-                       cov_words)
+    if kops.resolve_interpret(interpret):
+        return _minus_base(_union_popcount_rows(sk_words, cov_words),
+                           cov_words)
+    return _minus_base(
+        kops.sketch_union_popcount(sk_words, cov_words, interpret=False),
+        cov_words)
 
 
-def union_gains_stripe(sk_words, cov_words, stripe_start, stripe_rows: int):
+def union_gains_stripe(sk_words, cov_words, stripe_start, stripe_rows: int,
+                       *, interpret=None):
     """Δocc for one contiguous stripe of sketch rows — the shard-local body
     of the mesh-parallel sweep (each device scores its stripe of candidates
     against its sketch replica; a psum of the disjoint stripes yields the
-    full replicated vector).  The stripe runs through the Pallas
-    union-popcount kernel, so the mesh=1 sweep is exactly the historical
-    single-device kernel sweep.
+    full replicated vector).  On compiled backends the stripe runs through
+    the Pallas union-popcount kernel, so the mesh=1 sweep is exactly the
+    historical single-device kernel sweep; under interpret mode it takes
+    the bit-identical SWAR fallback (see :func:`_union_popcount_rows`).
     """
     from repro.kernels import ops as kops
     rows = jax.lax.dynamic_slice(
         sk_words, (stripe_start, 0), (stripe_rows, sk_words.shape[1]))
-    occ = kops.sketch_union_popcount(rows, cov_words)
+    if kops.resolve_interpret(interpret):
+        occ = _union_popcount_rows(rows, cov_words)
+    else:
+        occ = kops.sketch_union_popcount(rows, cov_words, interpret=False)
     return occ - _popcount(cov_words).sum(dtype=jnp.int32)
 
 
@@ -221,3 +291,53 @@ def linear_count(occupied, k: int):
     occ = np.clip(occ, 0.0, k - 1.0)
     est = k * np.log(k / (k - occ))
     return np.where(np.asarray(occupied) >= k, k * np.log(k), est)
+
+
+def linear_count_saturated(occupied, k: int):
+    """:func:`linear_count` plus a per-entry ``saturated`` flag.
+
+    A fully-occupied row (``occ >= k``) carries no cardinality information
+    beyond "at least ~k·ln(k)": the raw formula diverges, so the estimate is
+    clamped to that ceiling and flagged.  Consumers that surface estimates
+    to users (approximate-mode selection, ``IMResult.spread_bounds``) MUST
+    widen their upper bound on saturation instead of reporting the clamp as
+    a finite estimate.
+    """
+    sat = np.asarray(occupied) >= k
+    return linear_count(occupied, k), sat
+
+
+def linear_count_rel_error(est, k: int, *, z: float = 3.0):
+    """Certified relative standard-error bound of the linear-counting
+    estimate, scaled to ``z`` standard deviations.
+
+    Whang et al.: with load ``t = n/k``, the estimator's relative StdErr is
+    ``sqrt(e^t − t − 1) / (t · sqrt(k))`` (asymptotically normal), so a
+    z-sigma relative bound is ``z ×`` that.  ``est`` is used as the plug-in
+    for n.  Saturated rows (``t`` at the ln(k) ceiling) get whatever the
+    formula yields there — callers widen separately via the flag.
+    """
+    t = np.maximum(np.asarray(est, dtype=np.float64) / k, 1e-9)
+    se = np.sqrt(np.maximum(np.expm1(t) - t, 0.0)) / (t * np.sqrt(k))
+    return z * se
+
+
+def auto_sketch_k(eps: float, n: int, *, z: float = 3.0) -> int:
+    """Bucket count sized so the certified z-sigma relative error of the
+    linear-counting estimate stays within ``eps/2`` at moderate load.
+
+    At the design load ``t = 1`` (n ≈ k rows folded per bucket row) the
+    relative StdErr coefficient is ``c = sqrt(e − 2)``; solving
+    ``z·c/sqrt(k) <= eps/2`` gives ``k >= (2·z·c/eps)²``.  Clamped to
+    ``[64, n]`` (below 64 the normal approximation is junk; above n the
+    sketch would outweigh an exact Occur) and rounded to whole uint32
+    words.  Higher loads degrade gracefully — the *reported* bound on
+    ``spread_bounds`` always uses the realized load via
+    :func:`linear_count_rel_error`, never this design point.
+    """
+    if not (0.0 < eps < 1.0):
+        raise ValueError("eps must lie in (0, 1)")
+    c = math.sqrt(math.e - 2.0)
+    k = math.ceil((2.0 * z * c / eps) ** 2)
+    k = max(64, min(k, max(int(n), 64)))
+    return resolve_sketch_k(k)

@@ -39,16 +39,36 @@ def _union_popcount_kernel(words_ref, cov_ref, out_ref):
     out_ref[...] = _popcount(words | cov).sum(axis=1).astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def _resolve(interpret: bool | None) -> bool:
+    # defer to the shared kernel dispatch policy (per-call > module override
+    # > env > backend default).  Resolution happens *here*, outside the
+    # jitted implementations: ``interpret`` is a static argname, so the
+    # concrete bool is the jit cache key — a later env/override change gets
+    # a fresh resolution instead of a stale cached trace.  Lazy import: ops
+    # imports this module back (lazily) for its public wrappers.
+    from repro.kernels.ops import resolve_interpret
+    return resolve_interpret(interpret)
+
+
 def sketch_union_popcount(words, cov, *, block_b: int = 256,
-                          interpret: bool = True):
+                          interpret: bool | None = None):
     """``out[v] = popcount(words[v] | cov)`` for every sketch row.
 
     ``words``: (R, W) uint32 packed per-node sketches; ``cov``: (W,) uint32
     packed union sketch of the selected seed set.  Returns (R,) int32 —
     the occupancy of each candidate union, from which the CELF path derives
     estimated marginal coverage (see ``core/sketch.py``).
+
+    ``interpret=None`` (default) defers to ``ops.resolve_interpret`` like
+    every other kernel: interpret mode on CPU, compiled Mosaic on an
+    accelerator backend.
     """
+    return _union_popcount(words, cov, block_b=block_b,
+                           interpret=_resolve(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def _union_popcount(words, cov, *, block_b: int, interpret: bool):
     r, w = words.shape
     if cov.shape != (w,):
         raise ValueError("cov must be a (W,) vector matching the sketch "
@@ -78,8 +98,7 @@ def _scatter_or_kernel(words_ref, v_ref, w_ref, bit_ref, out_ref):
     jax.lax.fori_loop(0, v_ref.shape[0], body, 0)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def sketch_scatter_or(words, v, bucket, *, interpret: bool = True):
+def sketch_scatter_or(words, v, bucket, *, interpret: bool | None = None):
     """``out[v[e], bucket[e]//32] |= 1 << (bucket[e] % 32)`` for every pair.
 
     ``words``: (R, W) uint32 packed occupancy; ``v``/``bucket``: (E,) int32.
@@ -88,7 +107,16 @@ def sketch_scatter_or(words, v, bucket, *, interpret: bool = True):
     (``core/sketch.scatter_or_bits``) emulates; a serial RMW loop stands in
     for the GPU's ``atomicOr`` (one pallas block owns the whole matrix, so
     the loop is race-free by construction).
+
+    ``interpret=None`` (default) defers to ``ops.resolve_interpret``; the
+    compiled Mosaic path is reachable without an explicit flag on
+    accelerator backends.
     """
+    return _scatter_or(words, v, bucket, interpret=_resolve(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _scatter_or(words, v, bucket, *, interpret: bool):
     r, w = words.shape
     valid = (v >= 0) & (v < r)
     v_safe = jnp.where(valid, v, 0).astype(jnp.int32)

@@ -158,7 +158,8 @@ class ShardedQueueEngine:
 
 def solve(g, k: int | None = None, eps: float | None = None, *,
           batch_per_dev: int = 128, seed: int = 0, selection: str = "auto",
-          mesh=None, problem: IMProblem | None = None, fault_policy=None,
+          eval_batch: int | None = None, mesh=None,
+          problem: IMProblem | None = None, fault_policy=None,
           checkpoint_dir: str | None = None, checkpoint_every: int = 0):
     """Distributed IM solve: sampler fan-out AND pool/selection sharing one
     mesh.  ``mesh=None`` builds a mesh over every local device; the engine
@@ -192,7 +193,8 @@ def solve(g, k: int | None = None, eps: float | None = None, *,
         g_rev, ShardedQueueEngine.Config(batch=batch_per_dev), mesh=mesh,
         root_weights=problem.node_weights)
     solver = IMMSolver(g, engine=engine, seed=seed, selection=selection,
-                       mesh=mesh, fault_policy=fault_policy,
+                       eval_batch=eval_batch, mesh=mesh,
+                       fault_policy=fault_policy,
                        checkpoint_dir=checkpoint_dir,
                        checkpoint_every=checkpoint_every)
     resumed_step = None
@@ -345,7 +347,7 @@ def _stream(args, g):
     rng = np.random.default_rng(11)
     problem = IMProblem(k=args.k, theta=args.stream_theta)
     solver = IMMSolver(g, engine="queue", batch=128, seed=0,
-                       selection=args.selection)
+                       selection=args.selection, eval_batch=args.eval_batch)
     t0 = time.time()
     res = solver.solve(problem)
     print(f"cold: theta={res.stats.theta} "
@@ -395,6 +397,10 @@ def main():
     ap.add_argument("--selection", default="auto",
                     choices=("auto", "fused", "bitset", "celf-sketch"),
                     help="seed-selection backend (DESIGN.md §3)")
+    ap.add_argument("--eval-batch", type=int, default=None,
+                    help="CELF exact-verification batch width (celf-sketch "
+                         "selection); default: backend default (32).  Swept "
+                         "by benchmarks/perf_im_engines --selection-only")
     ap.add_argument("--mesh", default=None,
                     help="device count or axis spec for the sampling mesh "
                          "(e.g. '4' or 'samples:8'; default: all devices)")
@@ -464,6 +470,7 @@ def main():
               f"estimate={res.spread:.1f}")
         return
     seeds, est, stats = solve(g, selection=args.selection,
+                              eval_batch=args.eval_batch,
                               mesh=make_sample_mesh(args.mesh),
                               problem=problem, fault_policy=fault_policy,
                               checkpoint_dir=args.checkpoint_dir,

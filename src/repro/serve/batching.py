@@ -3,8 +3,10 @@
 A *batch* is a list of problems that share a registry key — same graph
 (by name *and* content digest: a replaced or delta-mutated graph keys
 apart, so a batch can never mix pools across graph versions), same pool
-signature (model / ``t_rounds`` / ``node_weights``), same θ-mode
-(``WarmSolverRegistry.solver_key``).  Within a batch the requests may
+signature (model / ``t_rounds`` / ``node_weights`` / ``mode`` — so
+``mode="approximate"`` requests are batch-compatible only with each
+other, their pool-free sketch store being a different species of pool),
+same θ-mode (``WarmSolverRegistry.solver_key``).  Within a batch the requests may
 differ in everything selection-side: ``k``, ``candidates``, ``costs`` +
 ``budget``, ``eps``/``ell``/``max_theta`` (the compatibility matrix of
 DESIGN.md §7).  Execution shares the sampled pool across all of them —
@@ -40,9 +42,12 @@ def occur_fastpath_eligible(solver: IMMSolver, p: IMProblem) -> bool:
     Occur": single seed, fixed θ (no LB-loop selections), counting
     objective (no budget/cost-ratio, no per-round groups, no row-weighted
     estimator — weight-proportional *root* sampling is fine: its selection
-    is the plain counting program)."""
+    is the plain counting program).  Approximate-mode requests never
+    qualify: their pool-free store has no flat pool to histogram (and their
+    contract is the certified sketch estimate, not an exact Occur count)."""
     return (p.theta is not None and p.k == 1 and p.t_rounds is None
-            and p.budget is None and not solver._row_weight_mode)
+            and p.budget is None and p.mode != "approximate"
+            and not solver._row_weight_mode)
 
 
 def _solve_from_occur(solver: IMMSolver, r: ResolvedProblem,

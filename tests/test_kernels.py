@@ -140,3 +140,34 @@ def test_flash_attention_noncausal():
     want = ref.flash_attention_ref(q, k, v, causal=False)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                atol=2e-5, rtol=1e-4)
+
+
+def test_sketch_kernels_defer_interpret_to_ops_policy(monkeypatch):
+    # regression: the sketch kernels used to hardcode interpret=True, so the
+    # compiled Mosaic path was unreachable on accelerator backends.  They
+    # must resolve interpret=None through the shared ops policy (per-call >
+    # module override > env > backend default) like every other kernel.
+    from repro.kernels import sketch as sk
+    seen = []
+    real = ops.resolve_interpret
+
+    def recorder(flag=None):
+        seen.append(flag)
+        return real(flag)
+
+    monkeypatch.setattr(ops, "resolve_interpret", recorder)
+    words = jnp.zeros((8, 2), jnp.uint32)
+    out = sk.sketch_scatter_or(words, jnp.asarray([1, 3, 99], jnp.int32),
+                               jnp.asarray([0, 33, 5], jnp.int32))
+    assert seen == [None]           # default defers to the shared policy
+    got = np.asarray(out)
+    assert got[1, 0] == 1 and got[3, 1] == 2   # bit 0 / bit 33
+    assert got.sum() == 3                       # oob row 99 dropped
+
+    seen.clear()
+    cov_words = jnp.asarray(np.asarray([1, 0], np.uint32))
+    cnt = sk.sketch_union_popcount(out, cov_words, interpret=True)
+    assert seen == [True]           # explicit flag still wins
+    want = np.asarray([np.uint32(r[0] | 1).bit_count() + r[1].bit_count()
+                       for r in got], np.int32)
+    np.testing.assert_array_equal(np.asarray(cnt), want)
