@@ -1638,6 +1638,120 @@ def _mesh_select_fns(mesh: Mesh):
     bitset_variant = _make_variant(weighted=False, use_bitset=True)
     bitset_variant_w = _make_variant(weighted=True, use_bitset=True)
 
+    @functools.partial(jax.jit, static_argnames=(
+        "num_rows", "n", "k_max", "n_group", "n_groups"))
+    def stacked(flat, ids, valid, nrr, cand, costs, budget, ks, quota,
+                plain, use_costs, *, num_rows, n, k_max, n_group, n_groups):
+        """R selections in ONE padded scan over the shared pool (serving's
+        batched-selection path).
+
+        Per scan step a vmapped body picks one node per request — the plain
+        unmasked argmax for ``plain`` rows, the variant score (candidate
+        mask, group budgets, optional cost ratio) otherwise — then the
+        per-request newly-covered rows, gain and Occur decrement are
+        computed shard-locally and the stacked ``(R, n)`` decrement /
+        ``(R,)`` gain arrays are psum-reduced in one collective each, so
+        the per-step collective count does not grow with R.  Every
+        per-request expression (pick, tie-break, gain popcount, decrement
+        scatter, spent/group-budget updates, the final frac division)
+        mirrors :func:`fused` / the variant scan verbatim; inactive steps
+        (``t >= ks[r]``) emit the sentinel ``u == n`` which matches no pool
+        element and mutates nothing — so each row of the output is
+        bit-identical to the solo program at any mesh width.
+        """
+        def local(flat, ids, valid, nrr, cand, costs, budget, ks, quota,
+                  plain, use_costs):
+            flat, ids, valid = flat[0], ids[0], valid[0]
+            occur0 = jnp.zeros(n + 1, jnp.int32).at[flat].add(
+                valid.astype(jnp.int32), mode="drop")[:n]
+            occur0 = jax.lax.psum(occur0, ax)
+            nrr_tot = jax.lax.psum(nrr[0], ax)
+            r_count = ks.shape[0]
+            group_of = jnp.arange(n, dtype=jnp.int32) // n_group
+
+            def step(carry, t):
+                occur, cov, spent, gbud, picked = carry
+
+                def pick_one(occ_r, spent_r, gbud_r, picked_r, cand_r,
+                             costs_r, budget_r, plain_r, usec_r, k_r):
+                    active = t < k_r
+                    u_plain = jnp.argmax(occ_r).astype(jnp.int32)
+                    feas = (gbud_r[group_of] > 0) & cand_r & ~picked_r
+                    feas_c = feas & (costs_r <= budget_r - spent_r) \
+                        & (occ_r > 0)
+                    score = jnp.where(
+                        feas_c, occ_r.astype(jnp.float32) / costs_r,
+                        -jnp.inf)
+                    best_c = jnp.argmax(score).astype(jnp.int32)
+                    ok_c = score[best_c] > -jnp.inf
+                    masked = jnp.where(feas, occ_r, jnp.int32(-1))
+                    best_m = jnp.argmax(masked).astype(jnp.int32)
+                    ok_m = masked[best_m] >= 0
+                    ok_v = jnp.where(usec_r, ok_c, ok_m)
+                    u_var = jnp.where(
+                        ok_v, jnp.where(usec_r, best_c, best_m),
+                        jnp.int32(n))
+                    u = jnp.where(plain_r, u_plain, u_var)
+                    ok = jnp.where(plain_r, True, ok_v) & active
+                    return jnp.where(active, u, jnp.int32(n)), ok
+
+                u, ok = jax.vmap(pick_one)(
+                    occur, spent, gbud, picked, cand, costs, budget,
+                    plain, use_costs, ks)
+
+                def cover_one(cov_r, u_r):
+                    newly = _newly_rows(flat, ids, valid,
+                                        _unpack_covered(cov_r), u_r)
+                    new_words = _pack_covered(newly)
+                    g_loc = _popcount(new_words).sum(dtype=jnp.int32)
+                    elem_newly = newly[jnp.clip(ids, 0, num_rows - 1)] \
+                        & valid
+                    dec_loc = jnp.zeros(n + 1, jnp.int32).at[flat].add(
+                        elem_newly.astype(jnp.int32), mode="drop")[:n]
+                    return cov_r | new_words, g_loc, dec_loc
+
+                cov, g_loc, dec_loc = jax.vmap(cover_one)(cov, u)
+                gain = jax.lax.psum(g_loc, ax)
+                dec = jax.lax.psum(dec_loc, ax)
+                rows = jnp.arange(r_count)
+                spent = spent + jnp.where(
+                    ok & use_costs, costs[rows, jnp.minimum(u, n - 1)], 0.0)
+                gbud = gbud.at[rows, jnp.where(ok, u // n_group,
+                                               n_groups)].add(
+                    -1, mode="drop")
+                picked = picked.at[rows, u].set(True, mode="drop")
+                occur = occur - dec
+                return (occur, cov, spent, gbud, picked), (u, gain)
+
+            cov0 = pvary(jnp.zeros((r_count, num_rows // 32), jnp.uint32),
+                         ax)
+            carry0 = (jnp.broadcast_to(occur0, (r_count, n)), cov0,
+                      jnp.zeros(r_count, jnp.float32),
+                      jnp.broadcast_to(quota[:, None],
+                                       (r_count, n_groups)).astype(
+                                           jnp.int32),
+                      jnp.zeros((r_count, n), bool))
+            (_, _, spent, _, _), (seeds, gains) = jax.lax.scan(
+                step, carry0, jnp.arange(k_max, dtype=jnp.int32))
+            seeds, gains = seeds.T, gains.T          # (R, k_max)
+            gsum = gains.sum(axis=1, dtype=jnp.int32)
+            # plain rows use the solo fused division (int/int); variant
+            # rows the solo variant one (int over f32 denom) — IEEE-equal
+            # for any sampled pool, but kept distinct for exact bit-parity
+            frac = jnp.where(
+                plain, gsum / jnp.maximum(nrr_tot, 1),
+                gsum / jnp.maximum(nrr_tot.astype(jnp.float32),
+                                   jnp.float32(1e-30))).astype(jnp.float32)
+            return seeds, gains, frac, spent
+
+        return shard_map_unchecked(
+            local, mesh=mesh,
+            in_specs=(buf, buf, buf, vec,
+                      P(), P(), P(), P(), P(), P(), P()),
+            out_specs=(P(), P(), P(), P()))(
+            flat, ids, valid, nrr, cand, costs, budget, ks, quota,
+            plain, use_costs)
+
     @functools.partial(jax.jit, static_argnames=("n",))
     def occur_weighted(flat, valid, ew, *, n):
         """Weighted Occur histogram (CELF's upper-bound init): one
@@ -1766,6 +1880,7 @@ def _mesh_select_fns(mesh: Mesh):
     fns.eval_batch_w = eval_batch_w
     fns.apply_seed_w = apply_seed_w
     fns.total_weight = total_weight
+    fns.stacked = stacked
     return fns
 
 
@@ -1887,6 +2002,92 @@ def select_variant(store: "ShardedDeviceRRStore", spec: SelectionSpec,
         group_quota=spec.group_quota,
         use_costs=spec.budget is not None)
     return VariantResult(seeds=seeds, gains=gains, frac=frac, spent=spent)
+
+
+class StackedRequest(NamedTuple):
+    """One request's selection knobs inside a stacked batch (host-side).
+
+    ``plain`` rows replay the unmasked plain scan (duplicates tolerated,
+    like :func:`select_seeds_device`); variant rows carry the
+    candidate-mask / costs / budget / group-quota knobs of a
+    :class:`SelectionSpec`.  The group geometry (``n_group``/``n_groups``)
+    is batch-level — it derives from ``t_rounds``, which is part of the
+    pool signature, so one stacked batch can only ever see one geometry.
+    """
+    k_steps: int
+    plain: bool = True
+    cand: object = None                # (n_items,) bool or None
+    costs: object = None               # (n_items,) float32 or None
+    budget: object = None              # float or None
+    quota: int = 0                     # group quota; 0 -> k_steps
+
+
+class StackedResult(NamedTuple):
+    """Device outputs of :func:`select_seeds_stacked` — row r of each array
+    is bit-identical to the solo program's output for request r.  Rows are
+    padded to ``n_requests <= seeds.shape[0]`` and columns to a pow2
+    ``k_max``; callers slice ``[r, :k_steps_r]`` and trim the ``n_items``
+    sentinel exactly as for :class:`VariantResult`."""
+    seeds: jnp.ndarray    # (R_pad, k_max) int32
+    gains: jnp.ndarray    # (R_pad, k_max) int32
+    frac: jnp.ndarray     # (R_pad,) float32
+    spent: jnp.ndarray    # (R_pad,) float32
+    n_requests: int
+
+
+def select_seeds_stacked(store: "ShardedDeviceRRStore",
+                         reqs: "list[StackedRequest]", *,
+                         n_group: int | None = None,
+                         n_groups: int = 1) -> StackedResult:
+    """Batched selection: R mixed (k, candidates, variant) requests in ONE
+    padded scan over the shared pool instead of R sequential scans.
+
+    The request count and scan length are padded to powers of two (dummy
+    rows run zero active steps), so serving traffic compiles O(log) stacked
+    program variants per pool shape rather than one per batch composition.
+    Guard-legal: operands go up as explicit replicated device_puts, outputs
+    stay on device.  Row-weighted stores are not stackable — the weighted
+    estimator changes the Occur dtype per request; callers route those to
+    the solo path.
+    """
+    if store.row_weighted:
+        raise ValueError("stacked selection does not support row-weighted "
+                         "stores — route weighted requests to the solo path")
+    if not reqs:
+        raise ValueError("select_seeds_stacked needs at least one request")
+    n = store.n_nodes
+    if n_group is None:
+        n_group = n
+    fns = _mesh_select_fns(store.mesh)
+    r_pad = _ceil_pow2(len(reqs))
+    k_max = _ceil_pow2(max(max(r.k_steps for r in reqs), 1))
+    cand = np.ones((r_pad, n), bool)
+    costs = np.ones((r_pad, n), np.float32)
+    budget = np.full(r_pad, np.inf, np.float32)
+    ks = np.zeros(r_pad, np.int32)
+    quota = np.zeros(r_pad, np.int32)
+    plain = np.ones(r_pad, bool)
+    use_costs = np.zeros(r_pad, bool)
+    for i, r in enumerate(reqs):
+        ks[i] = r.k_steps
+        quota[i] = r.quota if r.quota else r.k_steps
+        plain[i] = r.plain
+        use_costs[i] = r.budget is not None
+        if r.cand is not None:
+            cand[i] = np.asarray(r.cand, bool)
+        if r.costs is not None:
+            costs[i] = np.asarray(r.costs, np.float32)
+        if r.budget is not None:
+            budget[i] = np.float32(r.budget)
+    rep = store._sh_rep
+    ops = [jax.device_put(x, rep)
+           for x in (cand, costs, budget, ks, quota, plain, use_costs)]
+    seeds, gains, frac, spent = fns.stacked(
+        store._flat, store._ids, store._valid, store.n_rr_dev, *ops,
+        num_rows=store.row_capacity(), n=n, k_max=k_max,
+        n_group=n_group, n_groups=n_groups)
+    return StackedResult(seeds=seeds, gains=gains, frac=frac, spent=spent,
+                         n_requests=len(reqs))
 
 
 def select_seeds_celf(store: "ShardedDeviceRRStore", k: int, *,

@@ -986,6 +986,99 @@ class IMMSolver:
                         stats=self.stats, problem=p, n_nodes=self.n,
                         cost=spent, spread_bounds=bounds)
 
+    def solve_stacked(self, problems: "list[IMProblem]") -> "list[IMResult]":
+        """Fixed-θ micro-batch solve: one padded
+        :func:`~repro.core.coverage.select_seeds_stacked` scan over the
+        shared pool instead of one selection per request — the serving
+        front's batched-selection path (DESIGN.md §11).
+
+        Every problem must pin the same ``theta`` and share this solver's
+        pool signature (the front batches by registry key, which guarantees
+        both — ``_prepare`` would rebuild the pool otherwise), and each
+        returned :class:`IMResult` is bit-identical to ``solve_problem`` on
+        the same solver at any mesh width.  ``mode="approximate"`` and the
+        row-weighted fallback estimator are not stackable; callers route
+        those per request.
+        """
+        if not problems:
+            return []
+        theta = problems[0].theta
+        for p in problems:
+            if p.theta is None or p.theta != theta:
+                raise ValueError(
+                    "solve_stacked needs one common fixed theta= on every "
+                    "problem (LB-loop solves cannot share a scan)")
+            if p.mode == "approximate":
+                raise ValueError("solve_stacked needs the exact pool; "
+                                 "approximate-mode problems go solo")
+        rs, sig0 = [], None
+        for p in problems:
+            rs.append(self._prepare(p))
+            if sig0 is None:
+                sig0 = self._sig
+            elif self._sig != sig0:
+                raise ValueError("all stacked problems must share one pool "
+                                 "signature (solver_key batches do)")
+        if self._row_weight_mode:
+            raise ValueError("solve_stacked does not support the "
+                             "row-weighted fallback estimator")
+        specs = [self._selection_spec(r) for r in rs]
+        n_group = n_groups = None
+        reqs = []
+        for r, spec in zip(rs, specs):
+            if spec is None:
+                reqs.append(cov.StackedRequest(k_steps=r.k_steps))
+                continue
+            reqs.append(cov.StackedRequest(
+                k_steps=spec.k_steps, plain=False, cand=spec.cand,
+                costs=spec.costs, budget=spec.budget,
+                quota=spec.group_quota))
+            if n_group is None:
+                n_group, n_groups = spec.n_group, spec.n_groups
+            elif (n_group, n_groups) != (spec.n_group, spec.n_groups):
+                # unreachable when batched by registry key: the geometry
+                # derives from t_rounds, which is part of the pool signature
+                raise ValueError("mixed group geometry in a stacked batch")
+        with jax.transfer_guard(self._guard):
+            self._stats.theta = theta
+            self._stats.lb = 1.0
+            self.sample_until(theta)
+            sel = (lambda: cov.select_seeds_stacked(
+                self.store, reqs,
+                n_group=n_group if n_group is not None else self.n,
+                n_groups=n_groups if n_groups is not None else 1))
+            if self.fault_policy is not None:
+                # the scan is one fused call, but the "select" fault
+                # boundary still fires once per request with the solo
+                # ctx — a match-gated injector can poison one problem,
+                # and the serving front quarantines the batch and
+                # re-runs each request alone (front._run_group)
+                for p, r in zip(problems, rs):
+                    self.fault_policy.run(
+                        lambda: None, "select",
+                        {"problem": p, "k": r.k_steps, "stacked": True})
+                out = self.fault_policy.run(
+                    sel, "select", {"stacked_batch": len(problems)})
+            else:
+                out = sel()
+        seeds_all, gains_all, frac_all, spent_all = jax.device_get(
+            (out.seeds, out.gains, out.frac, out.spent))
+        results = []
+        for i, (p, r) in enumerate(zip(problems, rs)):
+            seeds = np.asarray(seeds_all[i, :r.k_steps])
+            gains = np.asarray(gains_all[i, :r.k_steps])
+            live = seeds < r.n_items      # sentinel trim, as in solve_problem
+            seeds, gains = seeds[live], gains[live]
+            frac = float(frac_all[i])
+            spent = float(spent_all[i])
+            self._stats.frac_covered = frac
+            self._stats.variant = p.variant
+            self._stats.budget_spent = spent
+            results.append(IMResult(
+                seeds=seeds, spread=r.scale * frac, gains=gains, frac=frac,
+                stats=self.stats, problem=p, n_nodes=self.n, cost=spent))
+        return results
+
     # -- streaming graphs (DESIGN.md §9) -----------------------------------
     def resolve_incremental(self, problem: IMProblem, deltas, *,
                             min_surviving_fraction: float = 0.0,

@@ -301,12 +301,18 @@ def _fault_policy(spec: str):
 
 
 def _serve(args, g):
-    """``--serve``: run a generated mixed workload (varying k/candidates,
-    repeats for cache hits) through the asyncio serving front on this
-    process and print the ServeStats counters (DESIGN.md §7)."""
+    """``--serve``: start the network serving surface
+    (:class:`repro.serve.IMNetServer`) on an ephemeral local port, drive a
+    generated mixed workload (varying k/candidates, repeats for cache
+    hits) over real HTTP through :class:`repro.serve.IMClient`, and print
+    the ServeStats counters read back from ``/statsz`` (DESIGN.md §7/§11).
+    Ctrl-C drains cleanly — admission stops, in-flight batches flush,
+    the loop shuts down — instead of a traceback."""
     import asyncio
+    import signal
 
-    from repro.serve import ServeConfig, build_service
+    from repro.serve import IMClient, IMNetServer, ServeConfig, \
+        build_service
 
     theta = args.serve_theta
     deg = np.diff(np.asarray(g.offsets))
@@ -321,18 +327,43 @@ def _serve(args, g):
             max_batch=8, batch_window_s=0.002,
             solver_opts={"batch": 64, "seed": 0,
                          "selection": args.selection}))
+        server = IMNetServer(svc, host="127.0.0.1", port=0)
+        await server.start()
+        stop = asyncio.Event()
+        loop = asyncio.get_running_loop()
+        for s in (signal.SIGINT, signal.SIGTERM):
+            loop.add_signal_handler(s, stop.set)
+        client = IMClient("127.0.0.1", server.port)
+        print(f"serving on http://127.0.0.1:{server.port} "
+              f"({len(workload)} requests over HTTP)")
         t0 = time.time()
-        async with svc:
-            await asyncio.gather(
-                *(svc.submit("graph", p) for p in workload))
-        st = svc.stats()
-        print(f"served={st.served} cache_hits={st.cache_hits} "
-              f"batches={st.batches} "
-              f"occupancy_mean={st.batch_occupancy_mean:.2f} "
-              f"occur_fastpath={st.occur_fastpath} shed={st.shed} "
-              f"expired={st.expired} time={time.time() - t0:.2f}s")
-        print(f"registry: solvers={st.registry.solvers} "
-              f"bytes_in_use={st.registry.bytes_in_use}")
+        work = asyncio.ensure_future(asyncio.gather(
+            *(client.solve("graph", p) for p in workload),
+            return_exceptions=True))
+        stopper = asyncio.ensure_future(stop.wait())
+        await asyncio.wait({work, stopper},
+                           return_when=asyncio.FIRST_COMPLETED)
+        if stop.is_set():
+            work.cancel()
+            try:
+                await work
+            except asyncio.CancelledError:
+                pass
+            await server.shutdown()
+            print("\ninterrupted: admission stopped, in-flight batches "
+                  "flushed, server drained cleanly")
+            return
+        stopper.cancel()
+        sv = (await client.stats())["serve"]
+        await server.shutdown()
+        print(f"served={sv['served']} cache_hits={sv['cache_hits']} "
+              f"batches={sv['batches']} "
+              f"occupancy_mean={sv['batch_occupancy_mean']:.2f} "
+              f"occur_fastpath={sv['occur_fastpath']} "
+              f"stacked={sv['stacked_requests']} shed={sv['shed']} "
+              f"expired={sv['expired']} time={time.time() - t0:.2f}s")
+        print(f"registry: solvers={sv['registry']['solvers']} "
+              f"bytes_in_use={sv['registry']['bytes_in_use']}")
     asyncio.run(run())
 
 

@@ -2,9 +2,14 @@
 front, and result cache over the :class:`~repro.core.problem.IMProblem`
 API.  DESIGN.md §7 documents the architecture and contracts; §8 the fault
 model (failure isolation, quarantine, circuit breakers, degraded serves,
-pool spill/rehydrate)."""
-from repro.serve.batching import execute_batch, occur_fastpath_eligible
+pool spill/rehydrate); §11 the network surface (``repro.serve.net``),
+the consistent-hash cluster (``repro.serve.cluster``) and batched
+stacked selection."""
+from repro.serve.batching import (execute_batch, occur_fastpath_eligible,
+                                  stacked_eligible)
 from repro.serve.cache import CacheStats, ResultCache
+from repro.serve.client import IMClient, ServeHTTPError
+from repro.serve.cluster import HashRing, IMCluster
 from repro.serve.front import (
     CircuitOpenError,
     DeadlineExpiredError,
@@ -19,12 +24,18 @@ from repro.serve.front import (
     UnknownGraphError,
     build_service,
 )
+from repro.serve.net import ERROR_STATUS, IMNetServer, status_for
 from repro.serve.registry import RegistryStats, WarmEntry, WarmSolverRegistry
 
 __all__ = [
     "CacheStats",
     "CircuitOpenError",
     "DeadlineExpiredError",
+    "ERROR_STATUS",
+    "HashRing",
+    "IMClient",
+    "IMCluster",
+    "IMNetServer",
     "IMService",
     "InvalidProblemError",
     "QueueFullError",
@@ -32,6 +43,7 @@ __all__ = [
     "ResultCache",
     "ServeConfig",
     "ServeError",
+    "ServeHTTPError",
     "ServeResponse",
     "ServeStats",
     "SolverFailedError",
@@ -41,4 +53,6 @@ __all__ = [
     "build_service",
     "execute_batch",
     "occur_fastpath_eligible",
+    "stacked_eligible",
+    "status_for",
 ]

@@ -82,18 +82,33 @@ def _solve_from_occur(solver: IMMSolver, r: ResolvedProblem,
                     cost=0.0)
 
 
+def stacked_eligible(solver: IMMSolver, p: IMProblem) -> bool:
+    """True iff the request can ride the batch's single stacked selection
+    scan (:meth:`IMMSolver.solve_stacked`): fixed θ (one shared pool state,
+    no LB loop) and a counting objective the stacked program expresses
+    (exact mode, no row-weighted estimator).  ``k=1`` Occur-fastpath
+    requests are cheaper still and get peeled off first; deadline-bearing
+    requests go solo (the stacked scan has no mid-flight degrade point)."""
+    return (p.theta is not None and p.mode != "approximate"
+            and not solver._row_weight_mode)
+
+
 def execute_batch(solver: IMMSolver, problems: List[IMProblem],
-                  deadlines: Optional[List[Optional[float]]] = None
-                  ) -> List[IMResult]:
+                  deadlines: Optional[List[Optional[float]]] = None,
+                  *, stacked: bool = True,
+                  stats_out: Optional[dict] = None) -> List[IMResult]:
     """Run one micro-batch on a warm solver; returns results aligned with
     ``problems``.
 
     All problems must share the solver's pool signature and θ-mode (the
     caller batches by registry key).  The pool is sampled at most once;
-    eligible top-1 requests share a single Occur pass; everything else
-    goes through the full ``solve_problem`` (which reuses the pool).
-    ``solver.prepare`` runs host-side construction up front, so the whole
-    call after it is legal under an outer
+    eligible top-1 requests share a single Occur pass; two or more
+    remaining fixed-θ requests share ONE stacked selection scan
+    (``stacked=True``, the default — DESIGN.md §11); everything else goes
+    through the full ``solve_problem`` (which reuses the pool).  Every
+    route is bit-identical to the solo solve, so the flag is purely a
+    throughput knob.  ``solver.prepare`` runs host-side construction up
+    front, so the whole call after it is legal under an outer
     ``jax.transfer_guard("disallow")``.
 
     ``deadlines`` (aligned with ``problems``): per-request remaining
@@ -101,6 +116,10 @@ def execute_batch(solver: IMMSolver, problems: List[IMProblem],
     over-budget solve degrades to a sketch-bound answer mid-flight instead
     of blowing the deadline (the fast path ignores it — answering from the
     already-fetched histogram is strictly cheaper than degrading).
+
+    ``stats_out``: mutated with ``stacked_batches`` / ``stacked_requests``
+    counters when the stacked path runs (the front surfaces them in
+    ``/statsz``).
     """
     if not problems:
         return []
@@ -108,8 +127,9 @@ def execute_batch(solver: IMMSolver, problems: List[IMProblem],
         deadlines = [None] * len(problems)
     occur = None          # shared histogram, fetched at most once per batch
     n_rr = 0
-    results: List[IMResult] = []
-    for p, dl in zip(problems, deadlines):
+    results: List[Optional[IMResult]] = [None] * len(problems)
+    stack_idx: List[int] = []
+    for i, (p, dl) in enumerate(zip(problems, deadlines)):
         if occur_fastpath_eligible(solver, p):
             r = solver.prepare(p)
             if occur is None:
@@ -122,7 +142,28 @@ def execute_batch(solver: IMMSolver, problems: List[IMProblem],
                 n_rr = store.n_rr
             res = _solve_from_occur(solver, r, occur, n_rr)
             if res is not None:
-                results.append(res)
+                results[i] = res
                 continue
-        results.append(solver.solve_problem(p, deadline_s=dl))
+        if stacked and dl is None and stacked_eligible(solver, p):
+            stack_idx.append(i)
+            continue
+        results[i] = solver.solve_problem(p, deadline_s=dl)
+    # group by θ so a hand-built batch with mixed fixed θs still stacks
+    # per θ-cohort (front-built batches share one θ via the registry key)
+    groups: dict = {}
+    for i in stack_idx:
+        groups.setdefault(problems[i].theta, []).append(i)
+    for idx in groups.values():
+        if len(idx) < 2:
+            i = idx[0]
+            results[i] = solver.solve_problem(problems[i])
+            continue
+        for i, res in zip(idx, solver.solve_stacked(
+                [problems[i] for i in idx])):
+            results[i] = res
+        if stats_out is not None:
+            stats_out["stacked_batches"] = \
+                stats_out.get("stacked_batches", 0) + 1
+            stats_out["stacked_requests"] = \
+                stats_out.get("stacked_requests", 0) + len(idx)
     return results

@@ -39,6 +39,7 @@ unlabelled partial answer.
 from __future__ import annotations
 
 import asyncio
+import functools
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import List, Optional
@@ -113,6 +114,10 @@ class ServeConfig:
     # fresh is refreshed (pool dropped + resampled) before serving more.
     # None = unbounded (the historical drift this knob exists to stop).
     max_pool_staleness: Optional[int] = None
+    # batched on-device selection (DESIGN.md §11): fixed-θ requests in one
+    # micro-batch share a single stacked selection scan instead of one scan
+    # each.  Bit-identical either way — purely a throughput knob.
+    stacked_selection: bool = True
 
 
 @dataclass
@@ -193,6 +198,9 @@ class ServeStats:
     # ε-driven pool staleness (DESIGN.md §9)
     pool_staleness: int = 0       # worst current staleness across entries
     refreshes: int = 0            # watermark-forced pool resamples
+    # batched on-device selection (DESIGN.md §11)
+    stacked_batches: int = 0      # micro-batches that ran a stacked scan
+    stacked_requests: int = 0     # requests answered by a stacked scan
 
 
 def build_service(graphs: dict, config: Optional[ServeConfig] = None
@@ -239,6 +247,8 @@ class IMService:
         self.occupancy_sum = 0
         self.occupancy_max = 0
         self.occur_fastpath = 0
+        self.stacked_batches = 0
+        self.stacked_requests = 0
         self.degraded = 0
         self.quarantines = 0
         self.isolated_retries = 0
@@ -456,9 +466,12 @@ class IMService:
             if self._policy is not None:
                 # chaos boundary standing in for an executor-side death
                 self._policy.check("executor", {"n": len(reqs)})
+            stack_stats: dict = {}
             results = await loop.run_in_executor(
-                self._executor, execute_batch, entry.solver, problems,
-                deadlines)
+                self._executor, functools.partial(
+                    execute_batch, entry.solver, problems, deadlines,
+                    stacked=self.config.stacked_selection,
+                    stats_out=stack_stats))
         except BaseException:
             entry.in_use = False
             self.registry.quarantine(key)
@@ -467,6 +480,8 @@ class IMService:
         entry.in_use = False
         solve_s = loop.time() - t0
         self.occur_fastpath += fast_before
+        self.stacked_batches += stack_stats.get("stacked_batches", 0)
+        self.stacked_requests += stack_stats.get("stacked_requests", 0)
         entry.solves += len(reqs)
         if key[2] is None:
             entry.staleness += len(reqs)
@@ -506,6 +521,12 @@ class IMService:
         return sum(1 for p in problems
                    if occur_fastpath_eligible(solver, p))
 
+    def spill_pools(self) -> int:
+        """Drain-time pool spill (the network server's SIGTERM path): evict
+        every idle warm entry through the registry's spill-on-evict path.
+        Call only after ``drain()`` — pinned entries are skipped."""
+        return self.registry.spill_all()
+
     # -- stats -------------------------------------------------------------
     def stats(self) -> ServeStats:
         return ServeStats(
@@ -528,4 +549,6 @@ class IMService:
             pool_staleness=max(
                 (e.staleness for e in self.registry.entries.values()),
                 default=0),
-            refreshes=self.registry.pool_refreshes)
+            refreshes=self.registry.pool_refreshes,
+            stacked_batches=self.stacked_batches,
+            stacked_requests=self.stacked_requests)

@@ -72,6 +72,10 @@ class RegistryStats:
     quarantined: int = 0
     graph_replacements: int = 0
     pool_refreshes: int = 0
+    # consistent-hash ring handoff (repro.serve.cluster, DESIGN.md §11)
+    handoffs_out: int = 0         # entries exported as leases to a peer
+    handoffs_in: int = 0          # leases adopted warm from a peer
+    handoff_drops: int = 0        # adoptions that fell back to a cold pool
 
 
 @dataclass
@@ -132,6 +136,9 @@ class WarmSolverRegistry:
         self.quarantines = 0
         self.graph_replacements = 0
         self.pool_refreshes = 0
+        self.handoffs_out = 0
+        self.handoffs_in = 0
+        self.handoff_drops = 0
 
     # -- graphs ------------------------------------------------------------
     def add_graph(self, name: str, g) -> None:
@@ -323,6 +330,58 @@ class WarmSolverRegistry:
             return 0
         return self.evict(min(cands, key=lambda e: e.seq).key)
 
+    # -- cluster handoff (repro.serve.cluster, DESIGN.md §11) ---------------
+    def export_entry(self, key: Hashable):
+        """Detach one idle entry for a ring-rebalance handoff: pop it and
+        return ``(problem, PoolLease)`` — the lease resumes bit-identically
+        on the adopting worker (RNG cursor + stats travel with the pool).
+        Returns ``None`` when there is nothing to move (unknown key, entry
+        pinned by an executing batch, or no pool prepared yet); pinned
+        entries are the *caller's* signal to drain first."""
+        entry = self._entries.get(key)
+        if entry is None or entry.in_use:
+            return None
+        del self._entries[key]
+        if entry.solver._sig is None:
+            return None
+        lease = entry.solver.export_pool()
+        self.handoffs_out += 1
+        return entry.problem, lease
+
+    def adopt_entry(self, graph: str, problem: IMProblem, lease
+                    ) -> WarmEntry:
+        """Install a handed-off pool as a warm entry on this registry (the
+        receiving side of :meth:`export_entry`).  When the lease cannot be
+        adopted — the workers run different device meshes, say — it is
+        dropped and the entry starts cold instead: θ-pinned answers are
+        pool-deterministic, so the served bits are identical either way and
+        only the warm-up cost differs."""
+        key = self.solver_key(graph, problem)
+        solver = IMMSolver(self._graphs[graph], **self.solver_opts)
+        try:
+            solver.adopt_pool(lease)
+            self.handoffs_in += 1
+        except Exception:
+            solver.drop_pool()
+            self.handoff_drops += 1
+        entry = WarmEntry(key=key, solver=solver, problem=problem)
+        entry.bytes = solver.pool_bytes()
+        self._entries[key] = entry
+        self.created += 1
+        entry.seq = next(self._clock)
+        self._enforce(keep=key)
+        return entry
+
+    def spill_all(self) -> int:
+        """Drain-time spill (SIGTERM path): evict every idle entry through
+        the normal spill-on-evict path, so with a ``spill_dir`` configured
+        each warm pool lands as a durable checkpoint a restarted server
+        rehydrates from.  Returns the number of entries evicted."""
+        keys = [k for k, e in self._entries.items() if not e.in_use]
+        for k in keys:
+            self.evict(k)
+        return len(keys)
+
     def clear_spill(self, key: Hashable) -> None:
         """Delete a key's spill snapshot (used by tests/ops tooling)."""
         spill = self._spill_path(key)
@@ -358,4 +417,6 @@ class WarmSolverRegistry:
             rehydrate_failures=self.rehydrate_failures,
             quarantined=self.quarantines,
             graph_replacements=self.graph_replacements,
-            pool_refreshes=self.pool_refreshes)
+            pool_refreshes=self.pool_refreshes,
+            handoffs_out=self.handoffs_out, handoffs_in=self.handoffs_in,
+            handoff_drops=self.handoff_drops)

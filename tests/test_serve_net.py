@@ -1,0 +1,403 @@
+"""Network serving surface + cluster + stacked selection (DESIGN.md §11).
+
+Contracts under test (ISSUE 10 acceptance criteria):
+* consistent-hash ring: worker join/leave moves only the minimal key
+  range (join: everything that moved now belongs to the joiner; leave:
+  ownership returns exactly to the pre-join mapping);
+* exhaustive ``ServeError`` -> HTTP status mapping: every subclass maps
+  to a *distinct* status and none falls through to the generic 500;
+* stacked-vs-solo selection bit-identity for mixed k / candidates /
+  budget / MRIM batches on 1 and 8 fake devices, running under
+  ``jax.transfer_guard("disallow")``;
+* HTTP answers are bit-identical to in-process ``IMService.submit`` (the
+  JSON float round-trip is exact) and errors arrive as the same typed
+  subclass through the client;
+* ring rebalance hands warm pools off as ``PoolLease`` exports and the
+  moved keys keep answering bit-identically;
+* SIGTERM-style drain: ``/readyz`` flips 503, new solves are rejected
+  typed, warm pools spill through the registry's durable path.
+"""
+import asyncio
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import pytest
+
+from repro.core.imm import IMMSolver
+from repro.core.problem import IMProblem
+from repro.graph import csr as csr_mod
+from repro.graph import generators, weights
+from repro.serve import (ERROR_STATUS, HashRing, IMClient, IMCluster,
+                         IMNetServer, ServeConfig, ServeError,
+                         SolverFailedError, build_service, execute_batch,
+                         status_for)
+from repro.serve.net import service_statsz
+
+
+def ba(n=220, r=4, seed=0):
+    src, dst = generators.barabasi_albert(n, r, seed=seed)
+    return weights.wc_weights(csr_mod.from_edges(src, dst, n))
+
+
+# -- consistent-hash ring ----------------------------------------------------
+
+def test_ring_minimal_movement_on_join_and_leave():
+    ring = HashRing(vnodes=64)
+    for w in range(4):
+        ring.add(w)
+    keys = [f"digest{i}|pool{i}|{i}|exact" for i in range(2000)]
+    before = {k: ring.owner(k) for k in keys}
+    ring.add(4)
+    after = {k: ring.owner(k) for k in keys}
+    moved = [k for k in keys if before[k] != after[k]]
+    # every moved key moved TO the joiner — nothing reshuffled between
+    # the old workers — and the joiner took roughly its 1/5 share
+    assert moved and all(after[k] == 4 for k in moved)
+    assert len(moved) < 2 * len(keys) / 5
+    ring.remove(4)
+    restored = {k: ring.owner(k) for k in keys}
+    assert restored == before
+
+
+def test_ring_guards():
+    ring = HashRing()
+    with pytest.raises(RuntimeError):
+        ring.owner("x")
+    ring.add(0)
+    with pytest.raises(ValueError):
+        ring.add(0)
+
+
+# -- error -> status mapping -------------------------------------------------
+
+def _all_subclasses(cls):
+    out = []
+    stack = list(cls.__subclasses__())
+    while stack:
+        c = stack.pop()
+        out.append(c)
+        stack.extend(c.__subclasses__())
+    return out
+
+
+def test_error_status_mapping_exhaustive():
+    subs = _all_subclasses(ServeError)
+    assert len(subs) >= 6
+    statuses = {}
+    for cls in subs:
+        status = status_for(cls("boom"))
+        # no subclass falls through to the generic 500 (SolverFailedError
+        # IS the explicit 500; it must be an exact entry, not a fallback)
+        if status == 500:
+            assert cls in ERROR_STATUS or any(
+                base in ERROR_STATUS and ERROR_STATUS[base] == 500
+                for base in cls.__mro__), cls
+        statuses.setdefault(status, cls)
+    # explicit entries are pairwise distinct
+    vals = list(ERROR_STATUS.values())
+    assert len(vals) == len(set(vals))
+    assert status_for(SolverFailedError("x")) == 500
+    # the base class (never raised, but defensively) maps to 500
+    assert status_for(ServeError("x")) == 500
+    # every subclass has a distinct code too (the client rebuilds from it)
+    codes = [c.code for c in subs]
+    assert len(codes) == len(set(codes))
+
+
+# -- stacked selection bit-identity ------------------------------------------
+
+def _mixed_problems(n, theta):
+    cand = np.zeros(n, bool)
+    cand[: n // 4] = True
+    costs = (np.abs(np.random.default_rng(3).normal(1.0, 0.3, n))
+             + 0.1).astype(np.float32)
+    return [
+        IMProblem(k=2, theta=theta),
+        IMProblem(k=5, theta=theta),
+        IMProblem(k=3, theta=theta, candidates=np.flatnonzero(cand)),
+        IMProblem(k=None, budget=2.5, costs=costs, theta=theta),
+        IMProblem(k=4, theta=theta),
+    ]
+
+
+def _assert_result_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a.seeds), np.asarray(b.seeds))
+    np.testing.assert_array_equal(np.asarray(a.gains), np.asarray(b.gains))
+    assert a.frac == b.frac and a.spread == b.spread and a.cost == b.cost
+
+
+def test_stacked_matches_solo_mesh1():
+    g = ba()
+    theta = 256
+    probs = _mixed_problems(g.n_nodes, theta)
+    solo = IMMSolver(g, batch=64, seed=0)
+    ref = [solo.solve_problem(p) for p in probs]
+    stk = IMMSolver(g, batch=64, seed=0)
+    got = stk.solve_stacked(probs)
+    for a, b in zip(ref, got):
+        _assert_result_equal(a, b)
+
+
+def test_stacked_mrim_and_guards():
+    g = ba()
+    theta = 256
+    mrim = [IMProblem(k=2, theta=theta, t_rounds=2),
+            IMProblem(k=1, theta=theta, t_rounds=2)]
+    solo = IMMSolver(g, batch=64, seed=0)
+    ref = [solo.solve_problem(p) for p in mrim]
+    stk = IMMSolver(g, batch=64, seed=0)
+    for a, b in zip(ref, stk.solve_stacked(mrim)):
+        _assert_result_equal(a, b)
+    with pytest.raises(ValueError):   # mixed θ
+        stk.solve_stacked([IMProblem(k=1, theta=128),
+                           IMProblem(k=1, theta=256)])
+    with pytest.raises(ValueError):   # LB-loop problems can't stack
+        stk.solve_stacked([IMProblem(k=1), IMProblem(k=2)])
+    with pytest.raises(ValueError):   # approximate mode goes solo
+        stk.solve_stacked([IMProblem(k=1, theta=128, mode="approximate"),
+                           IMProblem(k=2, theta=128, mode="approximate")])
+
+
+def test_execute_batch_stacked_parity_and_counters():
+    g = ba()
+    theta = 256
+    probs = _mixed_problems(g.n_nodes, theta) \
+        + [IMProblem(k=1, theta=theta)]       # fastpath rider
+    s_a = IMMSolver(g, batch=64, seed=0)
+    s_b = IMMSolver(g, batch=64, seed=0)
+    stats: dict = {}
+    with jax.transfer_guard("disallow"):
+        res_stacked = execute_batch(s_a, probs, stacked=True,
+                                    stats_out=stats)
+        res_solo = execute_batch(s_b, probs, stacked=False)
+    for a, b in zip(res_solo, res_stacked):
+        _assert_result_equal(a, b)
+    assert stats["stacked_batches"] == 1
+    assert stats["stacked_requests"] == len(probs) - 1  # k=1 went fastpath
+
+
+MESH8_STACKED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax
+from jax.sharding import Mesh
+from repro.graph import csr as csr_mod, generators, weights
+from repro.core.imm import IMMSolver
+from repro.core.problem import IMProblem
+
+assert len(jax.devices()) == 8
+mesh8 = Mesh(np.asarray(jax.devices()), ("samples",))
+src, dst = generators.barabasi_albert(160, 4, seed=0)
+g = weights.wc_weights(csr_mod.from_edges(src, dst, 160))
+theta, n = 192, 160
+cand = np.zeros(n, bool); cand[: n // 4] = True
+costs = (np.abs(np.random.default_rng(3).normal(1.0, 0.3, n))
+         + 0.1).astype(np.float32)
+probs = [IMProblem(k=2, theta=theta), IMProblem(k=4, theta=theta),
+         IMProblem(k=3, theta=theta, candidates=np.flatnonzero(cand)),
+         IMProblem(k=None, budget=2.0, costs=costs, theta=theta)]
+
+def run(mesh, stacked):
+    solver = IMMSolver(g, batch=64, seed=0, mesh=mesh)
+    if stacked:
+        res = solver.solve_stacked(probs)
+    else:
+        res = [solver.solve_problem(p) for p in probs]
+    return [(np.asarray(r.seeds), np.asarray(r.gains), r.frac, r.spread,
+             r.cost) for r in res]
+
+outs = {(w, s): run(m, s)
+        for w, m in ((1, None), (8, mesh8)) for s in (False, True)}
+base = outs[(1, False)]
+for key, got in outs.items():
+    for b, r in zip(base, got):
+        assert np.array_equal(b[0], r[0]), (key, b[0], r[0])
+        assert np.array_equal(b[1], r[1]), (key,)
+        assert b[2:] == r[2:], (key, b[2:], r[2:])
+print("OK")
+"""
+
+
+def test_stacked_mesh8_bit_identity():
+    # subprocess: the forced 8-device platform must be set before jax
+    # imports.  Solo-vs-stacked at widths 1 and 8, all four ways equal;
+    # solvers run their solve under transfer_guard("disallow") internally.
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath("src") + (
+        os.pathsep + env["PYTHONPATH"] if "PYTHONPATH" in env else "")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", MESH8_STACKED_SCRIPT],
+                       env=env, capture_output=True, text=True,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))),
+                       timeout=900)
+    assert r.returncode == 0, (r.stdout[-1500:], r.stderr[-3000:])
+    assert "OK" in r.stdout
+
+
+# -- HTTP end to end ---------------------------------------------------------
+
+def test_http_end_to_end_parity_errors_and_drain(tmp_path):
+    g = ba()
+    theta = 256
+    probs = _mixed_problems(g.n_nodes, theta)
+
+    async def run():
+        svc = build_service({"graph": g}, ServeConfig(
+            max_batch=8, batch_window_s=0.002,
+            solver_opts={"batch": 64, "seed": 0},
+            spill_dir=str(tmp_path)))
+        server = IMNetServer(svc, port=0)
+        await server.start()
+        c = IMClient("127.0.0.1", server.port)
+        assert (await c.healthz())[0] == 200
+        assert (await c.readyz()) == (200, {"ready": True,
+                                            "draining": False})
+        docs = await asyncio.gather(*(c.solve("graph", p) for p in probs))
+        # approximate tier through the wire (satellite): routed to the
+        # sketch solver under the same registry, footprint in /statsz
+        approx = await c.solve("graph", IMProblem(k=3, theta=theta,
+                                                  mode="approximate"))
+        assert approx["result"]["spread_bounds"] is not None
+        # θ-pinned parity: HTTP json == in-process submit == cold solve
+        inproc = await asyncio.gather(*(svc.submit("graph", p)
+                                        for p in probs))
+        cold = IMMSolver(g, batch=64, seed=0)
+        for p, doc, ip in zip(probs, docs, inproc):
+            res = doc["result"]
+            assert res["seeds"] == np.asarray(ip.result.seeds).tolist()
+            assert res["gains"] == np.asarray(ip.result.gains).tolist()
+            assert res["spread"] == float(ip.result.spread)
+            assert res["frac"] == float(ip.result.frac)
+            ref = cold.solve_problem(p)
+            assert res["seeds"] == np.asarray(ref.seeds).tolist()
+            assert res["spread"] == float(ref.spread)
+        # typed errors over the wire: client rebuilds the exact class
+        from repro.serve import UnknownGraphError
+        with pytest.raises(UnknownGraphError):
+            await c.solve("nope", probs[0])
+        # malformed problem body (k=0 can't even be built client-side)
+        status, doc = await c.request(
+            "POST", "/v1/solve", {"graph": "graph", "problem": {"k": 0}})
+        assert status == 400
+        assert doc["error"]["code"] == "invalid_problem"
+        status, _doc = await c.request("GET", "/nope")
+        assert status == 404
+        status, _doc = await c.request("GET", "/v1/solve")
+        assert status == 405
+        st = await c.stats()
+        assert st["serve"]["served"] >= len(probs) + 1
+        assert st["serve"]["stacked_requests"] >= 2
+        fp = st["approx_footprint"]
+        assert fp["approx_entries"] == 1 and fp["exact_entries"] >= 1
+        assert fp["exact_over_approx_ratio"] > 1.0
+        assert any(e["mode"] == "approximate" for e in st["entries"])
+        # drain: readyz flips 503, solves rejected typed, pools spill
+        server.draining = True
+        assert (await c.readyz())[0] == 503
+        status, doc = await c.solve_raw("graph", probs[0])
+        assert status == 503 and doc["error"]["code"] == "draining"
+        server.draining = False
+        await server.shutdown()
+        assert server.draining
+        assert svc.registry.snapshot().spills >= 1
+        assert len(svc.registry.entries) == 0
+        assert any(os.scandir(tmp_path))
+
+    asyncio.run(run())
+
+
+def test_statsz_payload_shape():
+    g = ba(120)
+
+    async def run():
+        svc = build_service({"graph": g}, ServeConfig(
+            solver_opts={"batch": 64, "seed": 0}))
+        async with svc:
+            await svc.submit("graph", IMProblem(k=2, theta=128))
+            payload = service_statsz(svc)
+        assert payload["serve"]["served"] == 1
+        assert payload["entries"][0]["mode"] == "exact"
+        assert payload["approx_footprint"]["approx_entries"] == 0
+        import json
+        json.dumps(payload)   # the whole tree must be JSON-serializable
+
+    asyncio.run(run())
+
+
+# -- cluster -----------------------------------------------------------------
+
+def test_cluster_routing_handoff_parity():
+    g = ba(160)
+    thetas = list(range(128, 140))
+
+    async def run():
+        cl = IMCluster({"graph": g}, ServeConfig(
+            max_batch=8, solver_opts={"batch": 64, "seed": 0}), workers=2)
+        await cl.start()
+        try:
+            base = {}
+            for t in thetas:
+                r = await cl.submit("graph", IMProblem(k=3, theta=t))
+                base[t] = (np.asarray(r.result.seeds).tolist(),
+                           float(r.result.spread))
+            # each warm pool lives on exactly one worker
+            per_worker = [set(w.service.registry.entries.keys())
+                          for w in cl._workers.values()]
+            all_keys = set().union(*per_worker)
+            assert sum(len(s) for s in per_worker) == len(all_keys)
+            # every key sits on its ring owner
+            for w in cl._workers.values():
+                for key, entry in w.service.registry.entries.items():
+                    route = cl._entry_route(w.service.registry, key, entry)
+                    assert cl.ring.owner(route) == w.wid
+            wid = cl.add_worker()
+            hand = cl.handoffs
+            # invariant restored after the join, warm pools travelled
+            for w in cl._workers.values():
+                for key, entry in w.service.registry.entries.items():
+                    route = cl._entry_route(w.service.registry, key, entry)
+                    assert cl.ring.owner(route) == w.wid
+            # moved keys answer bit-identically on their new owner
+            for t in thetas:
+                r = await cl.submit("graph", IMProblem(k=3, theta=t))
+                assert (np.asarray(r.result.seeds).tolist(),
+                        float(r.result.spread)) == base[t], t
+            moved_back = cl.remove_worker(wid)
+            assert cl.handoffs == hand + moved_back
+            for t in thetas:
+                r = await cl.submit("graph", IMProblem(k=3, theta=t))
+                assert np.asarray(r.result.seeds).tolist() == base[t][0]
+            stz = await cl.statsz()
+            assert stz["cluster"] and len(stz["workers"]) == 2
+            # the departed worker took its counters with it, so only the
+            # survivors' totals remain — still at least two full rounds
+            assert stz["serve_total"]["served"] >= 2 * len(thetas)
+            reg_hand = sum(
+                s["serve"]["registry"]["handoffs_in"]
+                for s in stz["per_worker"])
+            assert reg_hand >= moved_back
+        finally:
+            await cl.stop()
+
+    asyncio.run(run())
+
+
+def test_cluster_unknown_graph_typed():
+    g = ba(120)
+
+    async def run():
+        cl = IMCluster({"graph": g}, ServeConfig(
+            solver_opts={"batch": 64, "seed": 0}), workers=1)
+        await cl.start()
+        try:
+            from repro.serve import UnknownGraphError
+            with pytest.raises(UnknownGraphError):
+                await cl.submit("nope", IMProblem(k=1, theta=64))
+        finally:
+            await cl.stop()
+
+    asyncio.run(run())
